@@ -1,0 +1,31 @@
+"""Paper Fig. 6 / Table 4: RMSE evolution under changing co-location and
+final normalized RMSE (%) per (app, node)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.fixture import get_experiment, trained_predictors
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    t0 = time.perf_counter()
+    rmses = []
+    for (app, node), p in trained_predictors(exp):
+        final = p.rmse_history[-1][1] * 100 if p.rmse_history else float("nan")
+        rmses.append(final)
+        trend = "->".join(f"{r*100:.1f}" for _, r in p.rmse_history[:4])
+        rows.append((f"fig6_rmse[{app}@{node}]", 0.0,
+                     f"final_pct={final:.1f};trend={trend};"
+                     f"full_trainings={p.full_trainings};"
+                     f"retrainings={p.retrainings}"))
+    us = (time.perf_counter() - t0) * 1e6
+    if rmses:
+        rows.append(("table4_rmse_summary", us,
+                     f"median_pct={np.median(rmses):.1f};"
+                     f"max_pct={np.max(rmses):.1f};n={len(rmses)};"
+                     f"below20pct={np.mean(np.array(rmses) < 20):.2f}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Fig. 9: contribution of state retrieval / feature extraction /
+inference to total prediction time — plus the beyond-paper fast path
+(zero-copy ring-buffer state + O(1) rolling features)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.fixture import get_experiment, trained_predictors
+
+
+def _breakdown(exp):
+    st, fe, inf = [], [], []
+    for (app, node), p in trained_predictors(exp):
+        for _ in range(3):
+            rec = p.predict()
+            if rec is None:
+                continue
+            st.append(rec.t_state)
+            fe.append(rec.t_feature)
+            inf.append(rec.t_inference)
+    tot = np.sum(st) + np.sum(fe) + np.sum(inf)
+    if tot == 0:
+        return None
+    return (np.sum(st) / tot, np.sum(fe) / tot, np.sum(inf) / tot,
+            np.mean(st) + np.mean(fe) + np.mean(inf))
+
+
+def run():
+    rows = []
+    base = _breakdown(get_experiment(fast_state=False))
+    if base:
+        s, f, i, mean_t = base
+        rows.append(("fig9_breakdown[paper-faithful]", mean_t * 1e6,
+                     f"state={s:.3f};feature={f:.3f};inference={i:.3f}"))
+    fast = _breakdown(get_experiment(fast_state=True))
+    if fast:
+        s, f, i, mean_t = fast
+        rows.append(("fig9_breakdown[fast-state-beyond-paper]", mean_t * 1e6,
+                     f"state={s:.3f};feature={f:.3f};inference={i:.3f}"))
+    if base and fast:
+        speedup = base[3] / max(fast[3], 1e-12)
+        rows.append(("fig9_fast_path_speedup", 0.0,
+                     f"prediction_time_x={speedup:.1f}"))
+    return rows

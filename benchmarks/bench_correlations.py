@@ -1,0 +1,42 @@
+"""Paper Fig. 4: proportion of metrics per application for which each
+correlation method yields the highest |correlation| with RTT."""
+from __future__ import annotations
+
+import time
+from collections import Counter, defaultdict
+
+import numpy as np
+
+from benchmarks.fixture import get_experiment, trained_predictors
+from repro.core.correlate import METHODS, best_method_per_metric
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    per_app = defaultdict(Counter)
+    per_app_total = Counter()
+    t0 = time.perf_counter()
+    n_calls = 0
+    for (app, node), p in trained_predictors(exp):
+        if not p._corr_scores:
+            continue
+        w = p.selected.window_s
+        scores = {m: p._corr_scores[(w, m)] for m in METHODS
+                  if (w, m) in p._corr_scores}
+        names, winner, _ = best_method_per_metric(scores)
+        n_calls += 1
+        for wi in winner:
+            per_app[app][names[wi]] += 1
+            per_app_total[app] += 1
+    us = (time.perf_counter() - t0) / max(n_calls, 1) * 1e6
+    for app in sorted(per_app):
+        shares = {m: per_app[app][m] / per_app_total[app]
+                  for m in METHODS}
+        top = max(shares, key=shares.get)
+        rows.append((f"fig4_corr_importance[{app}]", us,
+                     f"top={top}:{shares[top]:.2f};" + ";".join(
+                         f"{m}={shares[m]:.2f}" for m in METHODS)))
+    if not rows:
+        rows.append(("fig4_corr_importance", us, "no-trained-predictors"))
+    return rows

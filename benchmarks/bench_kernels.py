@@ -1,0 +1,68 @@
+"""Kernel benchmarks: XLA(CPU) reference timings (wall) + Pallas interpret
+correctness deltas.  On-TPU wall timings are not measurable in this
+container; the roofline (§Roofline) covers the TPU story."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd
+from repro.models.attention import blockwise_attention
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # attention: naive vs blockwise XLA (same math, bounded memory)
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    kf = jnp.repeat(k, H // KV, 2)
+    vf = jnp.repeat(v, H // KV, 2)
+    block = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, causal=True, q_chunk=256, kv_chunk=256))
+    t_naive = _time(naive, q, k, v)
+    t_block = _time(block, q, kf, vf)
+    flops = 4 * B * S * S * H * D
+    rows.append(("kernel_attention_naive_xla", t_naive,
+                 f"gflops={flops/t_naive/1e3:.1f}"))
+    rows.append(("kernel_attention_blockwise_xla", t_block,
+                 f"gflops={flops/t_block/1e3:.1f}"))
+    # pallas interpret correctness (tiny shape; interpret is not a perf path)
+    qs, ks, vs = q[:, :128], k[:, :128], v[:, :128]
+    out = flash_attention(qs, ks, vs, causal=True, interpret=True)
+    want = ref.attention_ref(qs, ks, vs, causal=True)
+    err = float(jnp.max(jnp.abs(out - want)))
+    rows.append(("kernel_flash_attention_pallas_interp", 0.0,
+                 f"allclose_maxdiff={err:.2e}"))
+    # ssd: chunked kernel (interpret) vs sequential ref
+    Bm_ = jax.random.normal(jax.random.fold_in(key, 3), (1, 256, 1, 16))
+    Cm_ = jax.random.normal(jax.random.fold_in(key, 4), (1, 256, 1, 16))
+    x = jax.random.normal(jax.random.fold_in(key, 5), (1, 256, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 6),
+                                           (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 7), (4,)))
+    y, _ = ssd(x, dt, A, Bm_, Cm_, chunk=64, interpret=True)
+    yr, _ = ref.ssd_ref(x, dt, A, Bm_, Cm_)
+    rows.append(("kernel_ssd_pallas_interp", 0.0,
+                 f"allclose_maxdiff={float(jnp.max(jnp.abs(y-yr))):.2e}"))
+    t_ssd_ref = _time(jax.jit(lambda *a: ref.ssd_ref(*a)), x, dt, A, Bm_, Cm_)
+    rows.append(("kernel_ssd_sequential_xla", t_ssd_ref, "oracle-path"))
+    return rows

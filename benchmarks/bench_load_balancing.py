@@ -1,0 +1,38 @@
+"""Paper Fig. 11 (all four subplots): scheduling inefficiency vs prediction
+accuracy; inefficiency + resource waste vs replica count; inefficiency vs
+heterogeneity.  200 trials as in the paper."""
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import (SimConfig, scheduling_inefficiency,
+                                  sweep_accuracy, sweep_heterogeneity,
+                                  sweep_replicas)
+
+BASE = SimConfig(n_trials=200, n_requests=300)
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    acc = sweep_accuracy(BASE, accuracies=[0.0, 0.2, 0.4, 0.6, 0.8, 1.0])
+    us = (time.perf_counter() - t0) / len(acc) * 1e6
+    rows.append(("fig11_1_ineff_vs_accuracy", us, ";".join(
+        f"p{p:.1f}={r['inefficiency_pct']:.1f}%" for p, r in acc)))
+
+    t0 = time.perf_counter()
+    reps = sweep_replicas(BASE, counts=(1, 2, 4, 8))
+    us = (time.perf_counter() - t0) * 1e6 / 12
+    for pol, series in reps.items():
+        rows.append((f"fig11_2_ineff_vs_replicas[{pol}]", us, ";".join(
+            f"r{c}={r['inefficiency_pct']:.1f}%" for c, r in series)))
+        rows.append((f"fig11_3_waste_vs_replicas[{pol}]", us, ";".join(
+            f"r{c}={r['resource_waste_pct']:.1f}%" for c, r in series)))
+
+    t0 = time.perf_counter()
+    het = sweep_heterogeneity(BASE, hs=(0.0, 0.3, 0.6, 1.0))
+    us = (time.perf_counter() - t0) * 1e6 / 12
+    for pol, series in het.items():
+        rows.append((f"fig11_4_ineff_vs_heterogeneity[{pol}]", us, ";".join(
+            f"h{h:.1f}={r['inefficiency_pct']:.1f}%" for h, r in series)))
+    return rows

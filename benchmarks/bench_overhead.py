@@ -1,0 +1,42 @@
+"""Paper Fig. 7: predictor resource footprint (CPU time per cycle, memory
+for the balanced dataset, 'network' = bytes moved per prediction)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.fixture import get_experiment, trained_predictors
+
+
+def _nbytes(p):
+    total = len(p.dataset.rtts) * 8
+    for payload in p.dataset.payloads():
+        if isinstance(payload, dict):
+            total += sum(a.nbytes for a in payload.values())
+    return total
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    cpu, mem, net = [], [], []
+    for (app, node), p in trained_predictors(exp):
+        t0 = time.perf_counter()
+        rec = p.predict()
+        cpu_us = (time.perf_counter() - t0) * 1e6
+        cpu.append(cpu_us)
+        mem.append(_nbytes(p) / 1e6)
+        if rec is not None:
+            k = len(p.selected.metric_idx)
+            w_pts = p.selected.window_s / 0.2
+            net.append(k * w_pts * 4 / 1e6)     # MB per state retrieval
+    if cpu:
+        rows.append(("fig7_predictor_cpu_per_prediction",
+                     float(np.mean(cpu)),
+                     f"p95_us={np.percentile(cpu,95):.0f}"))
+        rows.append(("fig7_predictor_memory_mb", 0.0,
+                     f"mean={np.mean(mem):.2f};max={np.max(mem):.2f}"))
+        rows.append(("fig7_predictor_net_mb_per_pred", 0.0,
+                     f"mean={np.mean(net):.4f}"))
+    return rows

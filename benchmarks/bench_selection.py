@@ -1,0 +1,31 @@
+"""Paper Fig. 5: proportion of selected predictor configurations by model
+type, metric count, and observation window."""
+from __future__ import annotations
+
+import time
+from collections import Counter
+
+from benchmarks.fixture import get_experiment, trained_predictors
+
+
+def run():
+    exp = get_experiment()
+    models, counts, windows = Counter(), Counter(), Counter()
+    t0 = time.perf_counter()
+    n = 0
+    for (app, node), p in trained_predictors(exp):
+        models[p.choice.name] += 1
+        counts[len(p.selected.metric_idx)] += 1
+        windows[p.selected.window_s] += 1
+        n += 1
+    us = (time.perf_counter() - t0) / max(n, 1) * 1e6
+    total = max(sum(models.values()), 1)
+
+    def share(c):
+        return ";".join(f"{k}={v/total:.2f}" for k, v in c.most_common())
+
+    return [
+        ("fig5_selected_model_types", us, share(models)),
+        ("fig5_selected_metric_counts", us, share(counts)),
+        ("fig5_selected_windows_s", us, share(windows)),
+    ]

@@ -1,0 +1,35 @@
+"""Paper Fig. 10: state retrieval + feature extraction delay vs observation
+window and metric count (normalized to a 10 s mean RTT, as in the paper's
+Motioncor2/Worker-3 presentation)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.features import extract_features
+from repro.monitoring.metrics import MetricsStore, RetrievalModel, SimClock
+
+MEAN_RTT = 10.0
+
+
+def run():
+    store = MetricsStore(capacity_s=120.0, clock=SimClock())
+    names = [f"m{i:03d}" for i in range(100)]
+    rng = np.random.default_rng(0)
+    for _ in range(600):
+        store.scrape({n: float(v) for n, v in
+                      zip(names, rng.standard_normal(len(names)))})
+    rows = []
+    for w in (5.0, 20.0, 60.0):
+        for k in (5, 20, 50, 100):
+            arr, delay = store.query_window(names[:k], w)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                np.asarray(extract_features(arr[None]))
+            t_feat = (time.perf_counter() - t0) / 3
+            rows.append((f"fig10_state[w={int(w)}s,k={k}]",
+                         delay * 1e6,
+                         f"state_pct_rtt={delay/MEAN_RTT*100:.1f};"
+                         f"feature_pct_rtt={t_feat/MEAN_RTT*100:.2f}"))
+    return rows

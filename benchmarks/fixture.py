@@ -1,0 +1,59 @@
+"""Shared Morpheus experiment: simulated heterogeneous nodes running the
+SPA-style workload, predictors trained by the PredictionManager.  Built
+once per benchmark run (module-level cache)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.manager import PredictionManager
+from repro.core.workload import NodeWorkload
+from repro.monitoring.metrics import SimClock
+
+_CACHE = {}
+
+
+@dataclass
+class Experiment:
+    nodes: List[NodeWorkload]
+    managers: List[PredictionManager]
+    histories: List[list]
+    wall_s: float
+
+
+def get_experiment(n_nodes: int = 3, cycles: int = 4, cycle_s: float = 240.0,
+                   fast_state: bool = False, seed: int = 0) -> Experiment:
+    key = (n_nodes, cycles, cycle_s, fast_state, seed)
+    if key in _CACHE:
+        return _CACHE[key]
+    t0 = time.perf_counter()
+    factors = [0.7, 1.0, 1.6, 0.9, 1.3][:n_nodes]
+    nodes, managers, histories = [], [], []
+    for i in range(n_nodes):
+        clock = SimClock()
+        node = NodeWorkload(f"worker-{i+1}", instances_per_app=1,
+                            node_factor=factors[i], seed=seed + i,
+                            clock=clock, n_noise_metrics=12)
+        mgr = PredictionManager(c_max=40, seed=seed, fast_state=fast_state)
+        cb = mgr.attach(node)
+        mgr.bootstrap_noise(node, load=3.0, duration_s=120, on_complete=cb)
+        hist = mgr.run_cycles(node, n_cycles=cycles, cycle_s=cycle_s,
+                              on_complete=cb)
+        nodes.append(node)
+        managers.append(mgr)
+        histories.append(hist)
+    exp = Experiment(nodes, managers, histories, time.perf_counter() - t0)
+    _CACHE[key] = exp
+    return exp
+
+
+def trained_predictors(exp: Experiment):
+    out = []
+    for mgr in exp.managers:
+        for (app, node), p in mgr.predictors.items():
+            if p.choice is not None:
+                out.append(((app, node), p))
+    return out

@@ -1,0 +1,41 @@
+"""Reproduce the paper's Fig. 11 (all four subplots) as text tables.
+
+Run:  PYTHONPATH=src python examples/lb_simulation.py [--trials 200]
+"""
+import argparse
+
+from repro.core.simulator import (SimConfig, sweep_accuracy,
+                                  sweep_heterogeneity, sweep_replicas)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=200)
+    args = ap.parse_args()
+    base = SimConfig(n_trials=args.trials, n_requests=300)
+
+    print("== Fig 11.1: scheduling inefficiency vs prediction accuracy ==")
+    for p, r in sweep_accuracy(base, accuracies=[0, .2, .4, .6, .8, 1.0]):
+        bar = "#" * max(0, int(r["inefficiency_pct"]))
+        print(f"  p={p:.1f}  {r['inefficiency_pct']:6.2f}%  {bar}")
+    print("  (paper: inefficiency ~0 once accuracy reaches ~80%)\n")
+
+    print("== Fig 11.2/3: inefficiency + resource waste vs replicas ==")
+    rep = sweep_replicas(base, counts=(1, 2, 4, 8))
+    for pol, series in rep.items():
+        cells = "  ".join(f"r={c}: {r['inefficiency_pct']:5.1f}%/"
+                          f"{r['resource_waste_pct']:5.1f}%"
+                          for c, r in series)
+        print(f"  {pol:12s} {cells}")
+    print("  (inefficiency% / resource-waste% — perf-aware stays flat)\n")
+
+    print("== Fig 11.4: inefficiency vs CPU heterogeneity ==")
+    het = sweep_heterogeneity(base, hs=(0.0, 0.3, 0.6, 1.0))
+    for pol, series in het.items():
+        cells = "  ".join(f"h={h:.1f}: {r['inefficiency_pct']:5.1f}%"
+                          for h, r in series)
+        print(f"  {pol:12s} {cells}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver (the paper's Fig. 1, serving edition): a small LM
+served by heterogeneous replicas; Morpheus predictors learn each replica's
+latency profile from its monitoring metrics, and the performance-aware
+router beats round-robin / random on mean RTT.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.monitoring.metrics import SimClock
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import MorpheusRouter
+
+
+def build_replicas(cfg, params, clock):
+    # heterogeneous nodes: one fast, one medium, one slow (contended)
+    slow = [0.0, 0.02, 0.08]
+    return [ServingEngine(cfg, params, node=f"node-{i}", max_batch=4,
+                          max_seq=64, slowdown=s, clock=clock, seed=i)
+            for i, s in enumerate(slow)]
+
+
+def run_policy(policy, cfg, params, n_requests, seed=0):
+    clock = SimClock()                      # simulated queue-time clock
+    replicas = build_replicas(cfg, params, clock)
+    router = MorpheusRouter(replicas, policy=policy, seed=seed)
+    # seed the knowledge base from one observed wave per replica (predictor
+    # bootstrap); production would use RTTPredictor outputs
+    rng = np.random.default_rng(seed)
+    for rep in replicas:
+        rep.submit(Request(rid=-1, tokens=rng.integers(0, 100, 8),
+                           max_new_tokens=4))
+        done = rep.step_wave()
+        router.kb.put("serve", rep.node, clock.now(), done[0].rtt or 0.1)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, tokens=rng.integers(0, 100, size=8),
+                    max_new_tokens=4) for i in range(n_requests)]
+    for r in reqs:
+        router.route(r)
+    router.drain()
+    rtts = np.array([r.rtt for r in reqs])
+    return rtts, router.routed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--arch", default="deepseek-67b")   # smoke-sized config
+    args = ap.parse_args()
+    cfg = get_config(args.arch, smoke=True).resolve(tp=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    print(f"serving {cfg.name} ({cfg.param_count()/1e6:.1f}M params) on 3 "
+          f"heterogeneous replicas, {args.requests} requests\n")
+    for policy in ("round_robin", "random", "least_conn", "perf_aware"):
+        rtts, routed = run_policy(policy, cfg, params, args.requests)
+        share = [routed.count(i) / len(routed) for i in range(3)]
+        print(f"{policy:12s} mean RTT={rtts.mean():7.3f}s  "
+              f"p95={np.percentile(rtts, 95):7.3f}s  "
+              f"routing=[fast {share[0]:.2f}, med {share[1]:.2f}, "
+              f"slow {share[2]:.2f}]")
+
+
+if __name__ == "__main__":
+    main()

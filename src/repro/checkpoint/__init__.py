@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    install_sigterm_handler,
+)

@@ -1,0 +1,105 @@
+"""Load-balancing policies (paper §6 + serving router integration).
+
+Policies pick among IDLE replicas.  The performance-aware policy uses
+predicted RTTs from the knowledge base; it optionally HEDGES: if the
+chosen replica's predicted RTT exceeds ``hedge_factor`` x the best busy
+replica's predicted completion, the request is also queued on the
+second-best (straggler mitigation via the paper's own predictions —
+beyond-paper use of the technique)."""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+
+@dataclass
+class Replica:
+    idx: int
+    app: str
+    node: str
+    busy_until: float = 0.0
+
+    def idle(self, now: float) -> bool:
+        return self.busy_until <= now
+
+
+class Policy:
+    name = "base"
+
+    def choose(self, replicas: Sequence[Replica], now: float,
+               predicted: Optional[Sequence[float]] = None) -> Optional[int]:
+        raise NotImplementedError
+
+
+class RoundRobin(Policy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, replicas, now, predicted=None):
+        n = len(replicas)
+        for off in range(n):
+            i = (self._next + off) % n
+            if replicas[i].idle(now):
+                self._next = i + 1
+                return i
+        return None
+
+
+class RandomChoice(Policy):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def choose(self, replicas, now, predicted=None):
+        idle = [r.idx for r in replicas if r.idle(now)]
+        return self.rng.choice(idle) if idle else None
+
+
+class LeastConnections(Policy):
+    """Earliest busy_until (queue-depth proxy for single-slot replicas)."""
+    name = "least_conn"
+
+    def choose(self, replicas, now, predicted=None):
+        idle = [r for r in replicas if r.idle(now)]
+        if not idle:
+            return None
+        return min(idle, key=lambda r: r.busy_until).idx
+
+
+class PerfAware(Policy):
+    """Pick the idle replica with the lowest predicted RTT (paper §6)."""
+    name = "perf_aware"
+
+    def __init__(self, hedge_factor: Optional[float] = None):
+        self.hedge_factor = hedge_factor
+
+    def choose(self, replicas, now, predicted=None):
+        idle = [r.idx for r in replicas if r.idle(now)]
+        if not idle:
+            return None
+        if predicted is None:
+            return idle[0]
+        return min(idle, key=lambda i: predicted[i])
+
+    def hedge_candidates(self, replicas, now, predicted) -> List[int]:
+        idle = sorted((i for i, r in enumerate(replicas) if r.idle(now)),
+                      key=lambda i: predicted[i])
+        if self.hedge_factor is None or len(idle) < 2:
+            return idle[:1]
+        best, second = idle[0], idle[1]
+        if predicted[best] * self.hedge_factor < predicted[second]:
+            return [best]
+        return [best, second]
+
+
+class Oracle(PerfAware):
+    """Perfect knowledge of the true RTT (the ideal LB baseline)."""
+    name = "oracle"
+
+
+POLICIES = {p.name: p for p in (RoundRobin, RandomChoice, LeastConnections,
+                                PerfAware, Oracle)}

@@ -1,0 +1,179 @@
+"""perfCorrelate-style correlation battery (paper §3.1, Table 1).
+
+Five correlation families between each monitoring metric and RTT, all
+JAX-vectorised over metrics (one jitted call scores every metric at once):
+
+  pearson   linear                      [-1, 1]
+  spearman  monotonic (rank)            [-1, 1]
+  kendall   ordinal (tau-a, O(n^2))     [-1, 1]
+  distance  general dependence (O(n^2)) [0, 1]
+  mic       maximal information coefficient (grid approximation) [0, 1]
+
+Absolute values are used downstream so every score lands in [0, 1]
+(paper: "The absolute values of the correlation scores are used").
+
+Notes on fidelity: Spearman uses ordinal ranks (no tie averaging — metric
+streams are continuous); MIC is the equal-frequency-grid approximation with
+the B(n) = n^0.6 MINE constraint.  Both documented in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+METHODS = ("pearson", "spearman", "kendall", "distance", "mic")
+
+_KENDALL_CAP = 1024   # subsample cap for the O(n^2) methods
+_DIST_CAP = 1024
+
+
+def _std(x, eps=1e-12):
+    return jnp.sqrt(jnp.maximum(jnp.var(x, axis=-1), eps))
+
+
+@jax.jit
+def pearson(X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """X: (m, n) metrics; y: (n,) -> (m,) correlations."""
+    Xc = X - X.mean(axis=-1, keepdims=True)
+    yc = y - y.mean()
+    cov = (Xc * yc).mean(axis=-1)
+    return cov / (_std(X) * _std(y[None, :]))
+
+
+def _ranks(x: jnp.ndarray) -> jnp.ndarray:
+    """Ordinal ranks along the last axis."""
+    order = jnp.argsort(x, axis=-1)
+    n = x.shape[-1]
+    r = jnp.zeros_like(x)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=x.dtype), x.shape)
+    return jnp.take_along_axis(
+        jnp.zeros_like(x).at[..., :].set(0.0), order, axis=-1) * 0 + (
+        jnp.argsort(order, axis=-1).astype(x.dtype))
+
+
+@jax.jit
+def spearman(X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    rX = jnp.argsort(jnp.argsort(X, axis=-1), axis=-1).astype(jnp.float32)
+    ry = jnp.argsort(jnp.argsort(y)).astype(jnp.float32)
+    return pearson(rX, ry)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def kendall(X: jnp.ndarray, y: jnp.ndarray, cap: int = _KENDALL_CAP):
+    """Kendall tau-a via pairwise sign agreement (O(n^2), subsampled)."""
+    n = X.shape[-1]
+    if n > cap:
+        step = n // cap
+        X, y = X[:, : cap * step : step], y[: cap * step : step]
+        n = cap
+    sx = jnp.sign(X[:, :, None] - X[:, None, :])          # (m, n, n)
+    sy = jnp.sign(y[:, None] - y[None, :])                # (n, n)
+    concord = jnp.sum(sx * sy[None], axis=(1, 2))
+    return concord / (n * (n - 1))
+
+
+def _center_dist(a):
+    """Doubly-centered pairwise distance matrix. a: (n,) -> (n, n)."""
+    d = jnp.abs(a[:, None] - a[None, :])
+    return d - d.mean(0, keepdims=True) - d.mean(1, keepdims=True) + d.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def distance_corr(X: jnp.ndarray, y: jnp.ndarray, cap: int = _DIST_CAP):
+    """Distance correlation (Székely), O(n^2) per metric, subsampled."""
+    n = X.shape[-1]
+    if n > cap:
+        step = n // cap
+        X, y = X[:, : cap * step : step], y[: cap * step : step]
+        n = cap
+    By = _center_dist(y)
+    dvy = jnp.maximum(jnp.mean(By * By), 1e-12)
+
+    def per_metric(x):
+        Bx = _center_dist(x)
+        dcov = jnp.mean(Bx * By)
+        dvx = jnp.maximum(jnp.mean(Bx * Bx), 1e-12)
+        return jnp.sqrt(jnp.maximum(dcov, 0.0)
+                        / jnp.sqrt(jnp.sqrt(dvx) * jnp.sqrt(dvy))
+                        / jnp.sqrt(jnp.sqrt(dvx * dvy)))
+
+    # dCor = sqrt(dCov / sqrt(dVarX * dVarY))
+    def per_metric2(x):
+        Bx = _center_dist(x)
+        dcov = jnp.mean(Bx * By)
+        dvx = jnp.maximum(jnp.mean(Bx * Bx), 1e-12)
+        return jnp.sqrt(jnp.maximum(dcov / jnp.sqrt(dvx * dvy), 0.0))
+
+    return jax.lax.map(per_metric2, X)
+
+
+def _mic_grids(n: int) -> Tuple[Tuple[int, int], ...]:
+    bmax = max(4.0, n ** 0.6)
+    grids = []
+    for bx in (2, 3, 4, 6, 8, 12, 16, 24, 32):
+        for by in (2, 3, 4, 6, 8, 12, 16, 24, 32):
+            if bx * by <= bmax and max(bx, by) >= 2:
+                grids.append((bx, by))
+    return tuple(grids) or ((2, 2),)
+
+
+def _equifreq_bins(x, nb):
+    """Assign each value to one of nb equal-frequency bins."""
+    n = x.shape[-1]
+    ranks = jnp.argsort(jnp.argsort(x, axis=-1), axis=-1)
+    return jnp.minimum((ranks * nb) // n, nb - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("grids",))
+def mic(X: jnp.ndarray, y: jnp.ndarray, grids=None):
+    """Approximate MIC: max over equal-frequency grids of I(x;y)/log min(b)."""
+    n = X.shape[-1]
+    if grids is None:
+        grids = _mic_grids(n)
+
+    def mi_for(xb, yb, bx, by):
+        idx = xb * by + yb
+        counts = jnp.zeros((bx * by,), jnp.float32).at[idx].add(1.0)
+        pxy = counts / n
+        px = pxy.reshape(bx, by).sum(1)
+        py = pxy.reshape(bx, by).sum(0)
+        denom = (px[:, None] * py[None, :]).reshape(-1)
+        mi = jnp.sum(jnp.where(pxy > 0,
+                               pxy * jnp.log(pxy / jnp.maximum(denom, 1e-12)),
+                               0.0))
+        return mi / jnp.log(min(bx, by))
+
+    def per_metric(x):
+        scores = []
+        for bx, by in grids:
+            xb = _equifreq_bins(x, bx)
+            yb = _equifreq_bins(y, by)
+            scores.append(mi_for(xb, yb, bx, by))
+        return jnp.clip(jnp.max(jnp.stack(scores)), 0.0, 1.0)
+
+    return jax.lax.map(per_metric, X)
+
+
+# ----------------------------------------------------------------------
+def correlate_all(X, y, methods: Iterable[str] = METHODS) -> Dict[str, np.ndarray]:
+    """|correlation| of every metric with y, per method.  X: (m, n)."""
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    fns = {"pearson": pearson, "spearman": spearman, "kendall": kendall,
+           "distance": distance_corr, "mic": mic}
+    out = {}
+    for name in methods:
+        v = np.asarray(fns[name](X, y))
+        out[name] = np.abs(np.nan_to_num(v))
+    return out
+
+
+def best_method_per_metric(scores: Dict[str, np.ndarray]):
+    """Paper Fig. 4: which method wins per metric. Returns (names, argmax)."""
+    names = list(scores)
+    stack = np.stack([scores[m] for m in names])     # (methods, m)
+    return names, np.argmax(stack, axis=0), stack.max(axis=0)

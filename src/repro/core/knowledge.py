@@ -1,0 +1,43 @@
+"""Knowledge base: predictions store consumed by the load balancer
+(paper Fig. 1).  In-memory with optional JSON persistence."""
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+
+class KnowledgeBase:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._latest: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        self._history: Dict[Tuple[str, str], List[Tuple[float, float]]] = \
+            defaultdict(list)
+
+    def put(self, app: str, node: str, t: float, rtt_pred: float):
+        key = (app, node)
+        self._latest[key] = (t, rtt_pred)
+        self._history[key].append((t, rtt_pred))
+
+    def latest(self, app: str, node: str) -> Optional[float]:
+        v = self._latest.get((app, node))
+        return v[1] if v else None
+
+    def latest_with_age(self, app: str, node: str, now: float):
+        v = self._latest.get((app, node))
+        if v is None:
+            return None, None
+        return v[1], now - v[0]
+
+    def history(self, app: str, node: str):
+        return list(self._history.get((app, node), []))
+
+    def save(self):
+        if not self.path:
+            return
+        data = {f"{a}|{n}": h for (a, n), h in self._history.items()}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f)
+        os.replace(tmp, self.path)

@@ -1,0 +1,92 @@
+"""Prediction Manager (paper §3, Fig. 1): deploys one RTT predictor per
+(application, node) pair, re-enables paused ones, injects controlled noisy
+load at bootstrap so predictors see RTT variability (paper §4.4), and runs
+the 5-minute data-collection cycles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.knowledge import KnowledgeBase
+from repro.core.predictor import COLLECTION_PERIOD_S, RTTPredictor
+from repro.core.selection import WINDOWS_S
+from repro.core.workload import NodeWorkload, Task
+from repro.monitoring.metrics import SimClock
+
+
+class PredictionManager:
+    def __init__(self, kb: Optional[KnowledgeBase] = None, c_max: int = 50,
+                 fast_state: bool = False, seed: int = 0):
+        self.kb = kb or KnowledgeBase()
+        self.predictors: Dict[Tuple[str, str], RTTPredictor] = {}
+        self.paused: Dict[Tuple[str, str], bool] = {}
+        self.c_max = c_max
+        self.fast_state = fast_state
+        self.seed = seed
+        self._next_cycle: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------
+    def ensure_predictor(self, app: str, node: NodeWorkload) -> RTTPredictor:
+        key = (app, node.node)
+        if key in self.predictors:
+            self.paused[key] = False          # re-enable
+            return self.predictors[key]
+        pred = RTTPredictor(app, node.node, node.store, clock=node.clock,
+                            c_max=self.c_max, seed=self.seed,
+                            fast_state=self.fast_state)
+        self.predictors[key] = pred
+        self.paused[key] = False
+        return pred
+
+    def pause(self, app: str, node: str):
+        self.paused[(app, node)] = True
+
+    # ------------------------------------------------------------------
+    def attach(self, node: NodeWorkload):
+        """Wire task completions on a node into its predictors."""
+        for a, _ in node.instances:
+            self.ensure_predictor(a.name, node)
+
+        def on_complete(task: Task):
+            pred = self.predictors.get((task.app, node.node))
+            if pred is None or self.paused.get((task.app, node.node)):
+                return
+            windows = {}
+            for w in WINDOWS_S:
+                arr, _ = node.store.query_window(node.store.names, w,
+                                                 fast=True)
+                windows[w] = arr
+            pred.observe_task(task.rtt, windows)
+
+        return on_complete
+
+    def bootstrap_noise(self, node: NodeWorkload, load: float = 4.0,
+                        duration_s: float = 60.0, on_complete=None):
+        """Noisy server/client injection: temporary controlled load so the
+        predictors see diverse RTTs (paper §4.4), then removed."""
+        node.extra_load = load
+        node.run(duration_s, on_complete=on_complete)
+        node.extra_load = 0.0
+
+    # ------------------------------------------------------------------
+    def run_cycles(self, node: NodeWorkload, n_cycles: int = 3,
+                   cycle_s: float = COLLECTION_PERIOD_S, on_complete=None):
+        """Alternate workload simulation and collection/training cycles."""
+        history = []
+        for c in range(n_cycles):
+            node.run(cycle_s, on_complete=on_complete)
+            for (app, nname), pred in self.predictors.items():
+                if nname != node.node or self.paused.get((app, nname)):
+                    continue
+                notified = pred.collection_cycle()
+                if notified:
+                    rmse = pred.train()
+                    if rmse is not None:
+                        history.append((node.clock.now(), app, rmse))
+                    rec = pred.predict()
+                    if rec is not None:
+                        self.kb.put(app, nname, rec.t, rec.rtt_pred)
+        return history

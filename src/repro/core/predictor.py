@@ -1,0 +1,258 @@
+"""Per-(application, node) RTT predictor lifecycle (paper §3, Fig. 2).
+
+Three cooperating processes, driven by a SimClock (cooperative state
+machines rather than OS processes — same event order as the paper):
+
+  DataCollection (5-min cycle): new-data check -> RTT collection ->
+    balance (FD binning) -> metrics collection -> CONFIRM dataset-size
+    check -> correlations (perfCorrelate) -> state-delay analysis ->
+    (w*, r*, k*) selection (Eqs. 4-5) -> feature extraction -> notify
+  Training (event-driven): full training (Table 2 candidates, Eq. 6) or
+    re-training; RMSE_change > θ triggers correlation re-evaluation (Eq. 7)
+  Prediction (on-demand / periodic): state retrieval -> feature
+    extraction -> inference; t_prediction = t_state + t_feature + t_inf
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import correlate, selection, zoo
+from repro.core.binning import BalancedDataset
+from repro.core.features import (drop_redundant, extract_features,
+                                 select_feature_per_metric)
+from repro.monitoring.metrics import MetricsStore, SimClock
+
+THETA_RETRAIN = 0.10          # Eq. 7 threshold
+COLLECTION_PERIOD_S = 300.0   # 5-minute data-collection cycle
+CONFIRM_R = 0.05              # median within r% ...
+CONFIRM_ALPHA = 0.95          # ... at alpha confidence
+
+
+def confirm_enough_samples(rtts: np.ndarray, r: float = CONFIRM_R,
+                           alpha: float = CONFIRM_ALPHA,
+                           n_boot: int = 200, seed: int = 0) -> bool:
+    """CONFIRM-style check: bootstrap CI of the median within ±r%."""
+    rtts = np.asarray(rtts, np.float64)
+    if len(rtts) < 20:
+        return False
+    rng = np.random.default_rng(seed)
+    meds = np.median(
+        rtts[rng.integers(0, len(rtts), size=(n_boot, len(rtts)))], axis=1)
+    lo, hi = np.quantile(meds, [(1 - alpha) / 2, 1 - (1 - alpha) / 2])
+    med = np.median(rtts)
+    return med > 0 and (hi - lo) / 2 <= r * med
+
+
+@dataclass
+class MinMax:
+    lo: np.ndarray = None
+    hi: np.ndarray = None
+
+    def fit(self, X):
+        self.lo = np.min(X, axis=0)
+        self.hi = np.max(X, axis=0)
+        return self
+
+    def transform(self, X):
+        return (X - self.lo) / np.maximum(self.hi - self.lo, 1e-9)
+
+    def inverse_y(self, y):
+        return y * max(self.hi - self.lo, 1e-9) + self.lo
+
+
+@dataclass
+class PredictionRecord:
+    t: float
+    rtt_pred: float
+    t_state: float
+    t_feature: float
+    t_inference: float
+
+    @property
+    def t_prediction(self):
+        return self.t_state + self.t_feature + self.t_inference
+
+
+class RTTPredictor:
+    """One predictor for one (application, node) pair."""
+
+    def __init__(self, app: str, node: str, store: MetricsStore,
+                 clock: Optional[SimClock] = None, c_max: Optional[int] = 50,
+                 seed: int = 0, fast_state: bool = False):
+        self.app, self.node = app, node
+        self.store = store
+        self.clock = clock or store.clock
+        self.dataset = BalancedDataset(c_max=c_max, seed=seed)
+        self.seed = seed
+        self.fast_state = fast_state     # beyond-paper zero-copy state path
+        # lifecycle state
+        self.selected: Optional[selection.SelectedConfig] = None
+        self.feature_choice: Optional[np.ndarray] = None
+        self.choice: Optional[selection.ModelChoice] = None
+        self.scaler_X: Optional[MinMax] = None
+        self.y_lo = self.y_hi = None
+        self.rmse_history: List[Tuple[float, float]] = []
+        self.full_trainings = 0
+        self.retrainings = 0
+        self.correlations_valid = False
+        self._pending_rtts: List[float] = []
+        self._pending_windows: List[np.ndarray] = []
+        self.predictions: List[PredictionRecord] = []
+        self._corr_scores: Dict = {}
+
+    # ------------------------------------------------------------------
+    # data collection process
+    def observe_task(self, rtt: float, window_by_w: Dict[float, np.ndarray]):
+        """Record one completed task: its RTT + pre-submission windows.
+
+        window_by_w: window_s -> (n_metrics, points) raw monitoring slices.
+        """
+        self._pending_rtts.append(float(rtt))
+        self._pending_windows.append(window_by_w)
+
+    def collection_cycle(self) -> bool:
+        """One 5-minute cycle.  Returns True if training was notified."""
+        if not self._pending_rtts:                  # new data check
+            return False
+        rtts = np.array(self._pending_rtts)
+        payloads = list(self._pending_windows)
+        self._pending_rtts, self._pending_windows = [], []
+        keep = self.dataset.add_batch(rtts, payloads)   # balance RTT data
+        if not confirm_enough_samples(self.dataset.rtts):  # dataset size chk
+            return False
+        if not self.correlations_valid:             # correlations check
+            self._run_correlations()
+        return self.selected is not None
+
+    def _mean_rtt(self) -> float:
+        return float(np.mean(self.dataset.rtts)) if len(self.dataset.rtts) \
+            else 1.0
+
+    def _windows_matrix(self, w: float) -> np.ndarray:
+        """Stack stored windows for window length w: (n, k_metrics, points)."""
+        mats = [p[w] for p in self.dataset.payloads()]
+        return np.stack(mats)
+
+    def _run_correlations(self):
+        """perfCorrelate over all (window, method) combos + Eq. 4-5 pick."""
+        rtt = np.asarray(self.dataset.rtts, np.float32)
+        corr: Dict[Tuple[float, str], np.ndarray] = {}
+        any_w = None
+        for w in selection.WINDOWS_S:
+            X = self._windows_matrix(w)             # (n, m, points)
+            any_w = X
+            feats = np.asarray(extract_features(X))  # (n, m, F)
+            best_feat, sel = select_feature_per_metric(feats, rtt)
+            kept = drop_redundant(
+                sel, np.abs(np.corrcoef(sel.T, rtt)[-1, :-1])
+                if sel.shape[1] > 1 else np.ones(sel.shape[1]))
+            scores = correlate.correlate_all(sel[:, kept].T, rtt)
+            m = X.shape[1]
+            for method, vals in scores.items():
+                full = np.zeros(m, np.float32)
+                full[kept] = vals
+                corr[(w, method)] = full
+            self._per_window_feat = best_feat
+        self._corr_scores = corr
+        retr = self.store.retrieval
+        self.selected = selection.select_window_metrics(
+            corr,
+            state_delay=lambda k, w: 0.0 if self.fast_state
+            else retr.delay(k, w),
+            feature_delay=lambda k, w: 1e-4 * k,
+            mean_rtt=self._mean_rtt())
+        self.correlations_valid = self.selected is not None
+
+    # ------------------------------------------------------------------
+    # training process
+    def _training_arrays(self):
+        sel = self.selected
+        X_raw = self._windows_matrix(sel.window_s)[:, sel.metric_idx]
+        feats = np.asarray(extract_features(X_raw))          # (n, k, F)
+        X_feat = feats.reshape(len(feats), -1)
+        y = np.asarray(self.dataset.rtts, np.float32)
+        self.scaler_X = MinMax().fit(X_feat)
+        self._seq_lo = X_raw.min(axis=(0, 2), keepdims=True)
+        self._seq_hi = X_raw.max(axis=(0, 2), keepdims=True)
+        X_seq = (X_raw - self._seq_lo) / np.maximum(
+            self._seq_hi - self._seq_lo, 1e-9)
+        self.y_lo, self.y_hi = float(y.min()), float(y.max())
+        y_n = (y - self.y_lo) / max(self.y_hi - self.y_lo, 1e-9)
+        # outlier removal (z > 3) on the target, as in the paper
+        z = np.abs((y - y.mean()) / max(y.std(), 1e-9))
+        keep = z <= 3
+        return (self.scaler_X.transform(X_feat)[keep], X_seq[keep],
+                y_n[keep], y[keep])
+
+    def train(self, force_full: bool = False) -> Optional[float]:
+        """Full training or re-training; returns new RMSE (normalized)."""
+        if self.selected is None:
+            return None
+        X_feat, X_seq, y_n, _ = self._training_arrays()
+        mean_rtt = self._mean_rtt()
+        full = force_full or self.choice is None
+        if full:
+            cands = zoo.candidates_for(self.selected.method, len(y_n))
+            choice = selection.select_model(cands, X_feat, X_seq, y_n,
+                                            mean_rtt, seed=self.seed)
+            if choice is None:
+                return None
+            self.choice = choice
+            self.full_trainings += 1
+        else:
+            model = self.choice.model
+            X = X_seq if model.sequential else X_feat
+            model.partial_fit(X, y_n)
+            pred = np.asarray(model.predict(X))
+            self.choice.rmse = float(np.sqrt(np.mean((pred - y_n) ** 2)))
+            self.retrainings += 1
+        new_rmse = self.choice.rmse
+        # Eq. 7: regression check against the previous RMSE
+        if self.rmse_history:
+            prev = self.rmse_history[-1][1]
+            change = (new_rmse - prev) / max(prev, 1e-9)
+            if change > THETA_RETRAIN and not full:
+                self.correlations_valid = False      # re-evaluate correlations
+                self._run_correlations()
+                if self.selected is not None:
+                    return self.train(force_full=True)
+        self.rmse_history.append((self.clock.now(), new_rmse))
+        return new_rmse
+
+    # ------------------------------------------------------------------
+    # prediction process
+    def predict(self) -> Optional[PredictionRecord]:
+        if self.choice is None or self.selected is None:
+            return None
+        sel = self.selected
+        names = [self.store.names[i] for i in sel.metric_idx
+                 if i < len(self.store.names)]
+        t0 = time.perf_counter()
+        window, t_state = self.store.query_window(
+            names, sel.window_s, fast=self.fast_state)
+        t1 = time.perf_counter()
+        model = self.choice.model
+        if model.sequential:
+            lo = self._seq_lo[0]
+            hi = self._seq_hi[0]
+            X = (window - lo) / np.maximum(hi - lo, 1e-9)
+            t2 = time.perf_counter()
+            t_feature = t2 - t1
+        else:
+            feats = np.asarray(extract_features(window[None]))  # (1,k,F)
+            X = self.scaler_X.transform(feats.reshape(1, -1))[0]
+            t2 = time.perf_counter()
+            t_feature = t2 - t1
+        y_n = float(np.asarray(model.predict(X)).reshape(-1)[0])
+        t_inf = time.perf_counter() - t2
+        rtt = y_n * max(self.y_hi - self.y_lo, 1e-9) + self.y_lo
+        rec = PredictionRecord(self.clock.now(), rtt,
+                               t_state if not self.fast_state
+                               else (t1 - t0),
+                               t_feature, t_inf)
+        self.predictions.append(rec)
+        return rec

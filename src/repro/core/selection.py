@@ -1,0 +1,120 @@
+"""Configuration selection (paper Eqs. 4–6 + Table 2).
+
+(w*, r*, k*): among (window, method, metric-count) combinations whose state
+preparation fits the τ_prepare budget, maximize the summed |correlation|.
+Model selection: among candidates within the τ_inference budget, min RMSE.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import zoo
+
+WINDOWS_S = (1.0, 5.0, 20.0, 60.0)    # paper's observation windows
+TAU_PREPARE = 0.09                     # ≤ 9% of mean RTT (Eq. 4)
+TAU_INFERENCE = 0.01                   # ≤ 1% of mean RTT (Eq. 6)
+K_STEP = 5                             # metric count increments (paper)
+
+
+@dataclass
+class SelectedConfig:
+    window_s: float
+    method: str
+    metric_idx: np.ndarray       # indices of the k* chosen metrics
+    total_corr: float
+    t_state: float
+    t_feature: float
+
+
+def select_window_metrics(
+        corr: Dict[Tuple[float, str], np.ndarray],
+        state_delay: Callable[[int, float], float],
+        feature_delay: Callable[[int, float], float],
+        mean_rtt: float,
+        tau_prepare: float = TAU_PREPARE,
+        k_step: int = K_STEP) -> Optional[SelectedConfig]:
+    """Eq. 4–5.  corr maps (window_s, method) -> |corr| per metric."""
+    budget = tau_prepare * mean_rtt
+    best: Optional[SelectedConfig] = None
+    for (w, method), scores in corr.items():
+        order = np.argsort(-scores)
+        m = len(scores)
+        for k in range(k_step, m + k_step, k_step):
+            k = min(k, m)
+            ts = state_delay(k, w)
+            tf = feature_delay(k, w)
+            if ts + tf > budget:
+                break                       # delays grow with k
+            total = float(scores[order[:k]].sum())
+            if best is None or total > best.total_corr:
+                best = SelectedConfig(w, method, order[:k].copy(), total,
+                                      ts, tf)
+            if k == m:
+                break
+    return best
+
+
+@dataclass
+class ModelChoice:
+    name: str
+    model: object
+    rmse: float
+    t_inference: float
+
+
+def _rmse(pred, y) -> float:
+    pred = np.asarray(pred, np.float64)
+    y = np.asarray(y, np.float64)
+    return float(np.sqrt(np.mean((pred - y) ** 2)))
+
+
+def _time_inference(model, X1, repeats: int = 5) -> float:
+    np.asarray(model.predict(X1))            # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        np.asarray(model.predict(X1))
+    return (time.perf_counter() - t0) / repeats
+
+
+def select_model(candidates: Sequence[str],
+                 X_feat, X_seq, y,
+                 mean_rtt: float,
+                 splits=(0.8, 0.1, 0.1),
+                 tau_inference: float = TAU_INFERENCE,
+                 seed: int = 0,
+                 model_kwargs: Optional[dict] = None) -> Optional[ModelChoice]:
+    """Eq. 6: full training — train every candidate, filter by inference
+    budget, pick min-RMSE on the test split.
+
+    X_feat: (n, F) features; X_seq: (n, k, w) raw windows (or None); y: (n,).
+    """
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_tr = int(splits[0] * n)
+    n_va = int(splits[1] * n)
+    tr, va, te = (perm[:n_tr], perm[n_tr:n_tr + n_va], perm[n_tr + n_va:])
+    if len(te) == 0:
+        te = va if len(va) else tr
+    best: Optional[ModelChoice] = None
+    for name in candidates:
+        cls = zoo.ALL_MODELS[name]
+        model = cls(**(model_kwargs or {}).get(name, {}))
+        X = X_seq if model.sequential else X_feat
+        if X is None:
+            continue
+        try:
+            model.fit(X[tr], y[tr])
+        except Exception:        # noqa: BLE001 — candidate failed, skip
+            continue
+        t_inf = _time_inference(model, X[te[:1]])
+        if t_inf > tau_inference * mean_rtt:
+            continue
+        rmse = _rmse(model.predict(X[te]), y[te])
+        if best is None or rmse < best.rmse:
+            best = ModelChoice(name, model, rmse, t_inf)
+    return best

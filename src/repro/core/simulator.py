@@ -1,0 +1,197 @@
+"""§6 load-balancing simulation (paper Fig. 11), vectorised across trials.
+
+Heterogeneous nodes (acceleration factor), empirically-shaped interference
+matrix, log-normal RTT (Eqs. 10-11), noisy predictions (Eq. 12), four
+policies + an oracle.  Parameters are derived from the paper's own tables
+(Table 4 RMSE range, Table 5 CoV range, Fig. 11 axes) since the exact
+repo parameters are not in the paper text — documented in DESIGN.md §7.
+
+All trials advance request-by-request in lockstep so every step is a
+vectorised numpy op over (n_trials, n_replicas) arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
+# the paper's app set (upload / MotionCor2 / FFT mock / gCTF / ctffind4).
+APPS = {
+    "upload": (20.0, 0.5, 1.0),
+    "motioncor2": (5.0, 2.0, 4.0),
+    "fft_mock": (10.0, 1.0, 2.0),
+    "gctf": (5.0, 2.0, 3.0),
+    "ctffind4": (3.0, 1.0, 1.0),
+}
+
+
+@dataclass
+class SimConfig:
+    n_nodes: int = 10
+    n_replicas_per_app: int = 4
+    apps: Tuple[str, ...] = tuple(APPS)
+    n_requests: int = 400           # per trial (all apps interleaved)
+    n_trials: int = 200
+    accuracy: float = 0.8           # p in Eq. 12
+    heterogeneity: float = 0.3      # std of node acceleration factors
+    interference_strength: float = 0.5
+    arrival_rate: float = 2.0       # requests/s entering the cluster
+    seed: int = 0
+
+
+def _interference_matrix(apps: Sequence[str], strength: float,
+                         rng) -> np.ndarray:
+    """I[a, b]: relative RTT-std increase on app a per co-located busy b."""
+    n = len(apps)
+    base = rng.uniform(0.05, 0.35, size=(n, n))
+    return strength * (base + base.T) / 2.0
+
+
+def run_sim(cfg: SimConfig, policy: str = "perf_aware",
+            oracle_assign: Optional[np.ndarray] = None):
+    """Simulate cfg.n_trials trials under one policy.
+
+    Returns dict with per-trial mean RTT, cpu-seconds, mem-GB-seconds and
+    the assignment matrix (for oracle reuse).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    T = cfg.n_trials
+    A = len(cfg.apps)
+    R = A * cfg.n_replicas_per_app       # replicas total
+    app_of = np.repeat(np.arange(A), cfg.n_replicas_per_app)
+    mean_rtt = np.array([APPS[a][0] for a in cfg.apps])
+    cpu_req = np.array([APPS[a][1] for a in cfg.apps])
+    mem_req = np.array([APPS[a][2] for a in cfg.apps])
+    imat = _interference_matrix(cfg.apps, cfg.interference_strength, rng)
+
+    # per-trial random placement (isolate policy effect, as in the paper)
+    node_of = rng.integers(0, cfg.n_nodes, size=(T, R))
+    accel = rng.normal(0.0, cfg.heterogeneity, size=(T, cfg.n_nodes))
+    accel = np.clip(accel, -0.8, 2.0)
+
+    # request stream: same per policy for paired comparison
+    req_rng = np.random.default_rng(cfg.seed + 1)
+    req_app = req_rng.integers(0, A, size=cfg.n_requests)
+    req_gap = req_rng.exponential(1.0 / cfg.arrival_rate,
+                                  size=cfg.n_requests)
+    req_t = np.cumsum(req_gap)
+    # pre-drawn per-request randomness (same across policies & trials order)
+    z_rtt = req_rng.standard_normal((T, cfg.n_requests))
+    z_pred = req_rng.standard_normal((T, cfg.n_requests, R))
+    rr_state = np.zeros(T, dtype=np.int64)
+
+    busy_until = np.zeros((T, R))
+    rtt_sum = np.zeros(T)
+    rtt_n = np.zeros(T)
+    cpu_s = np.zeros(T)
+    mem_s = np.zeros(T)
+    chosen = np.zeros((T, cfg.n_requests), dtype=np.int64)
+
+    trial_idx = np.arange(T)
+    for j in range(cfg.n_requests):
+        a = int(req_app[j])
+        now = req_t[j]
+        candidates = np.flatnonzero(app_of == a)     # replicas of this app
+        idle = busy_until[:, candidates] <= now       # (T, C)
+        # actual RTT per candidate: log-normal with interference (Eqs. 10-11)
+        nodes = node_of[:, candidates]                # (T, C)
+        # co-location load: how many busy replicas share the node now
+        same_node = nodes[:, :, None] == node_of[:, None, :]   # (T,C,R)
+        busy = (busy_until[:, None, :] > now)
+        inter = (same_node & busy) @ imat[a][app_of]  # (T, C)
+        rbar = mean_rtt[a]
+        s = rbar * (0.1 + inter)                     # RTT std (interference)
+        mu = np.log(rbar ** 2 / np.sqrt(s ** 2 + rbar ** 2))
+        sigma = np.sqrt(np.log(1 + s ** 2 / rbar ** 2))
+        x = np.exp(mu + sigma * z_rtt[:, j, None])    # (T, C)
+        actual = x * (1.0 + accel[trial_idx[:, None], nodes])  # Eq. 10
+        # predicted RTT: Eq. 12 with eps = (1 - p) * actual
+        eps = (1.0 - cfg.accuracy) * actual
+        predicted = actual + eps * z_pred[:, j, :][:, candidates]
+
+        # queue wait if the replica is busy (all policies see the same
+        # queueing semantics; the oracle minimises wait + true RTT)
+        wait = np.maximum(busy_until[:, candidates] - now, 0.0)   # (T, C)
+        if policy == "oracle":
+            pick = np.argmin(wait + actual, axis=1)
+        elif policy == "perf_aware":
+            pick = np.argmin(wait + predicted, axis=1)
+        elif policy == "random":
+            r = req_rng.random((T, len(candidates)))
+            score = np.where(idle, r, np.inf)
+            pick = np.where(idle.any(1), np.argmin(score, axis=1),
+                            np.argmin(wait, axis=1))
+        elif policy == "round_robin":
+            offs = (np.arange(len(candidates))[None, :]
+                    + rr_state[:, None]) % len(candidates)
+            order = np.argsort(offs, axis=1)
+            idle_ord = np.take_along_axis(idle, order, axis=1)
+            first = np.argmax(idle_ord, axis=1)
+            rr_pick = np.take_along_axis(order, first[:, None], axis=1)[:, 0]
+            pick = np.where(idle.any(1), rr_pick, np.argmin(wait, axis=1))
+            rr_state = (pick + 1) % len(candidates)
+        else:
+            raise ValueError(policy)
+
+        rep = candidates[pick]                        # (T,)
+        rtt = np.take_along_axis(actual, pick[:, None], axis=1)[:, 0]
+        finish = np.maximum(now, busy_until[trial_idx, rep]) + rtt
+        wait_adj = finish - now
+        busy_until[trial_idx, rep] = finish
+        rtt_sum += wait_adj
+        rtt_n += 1
+        cpu_s += cpu_req[a] * rtt
+        mem_s += mem_req[a] * rtt
+        chosen[:, j] = rep
+
+    return {"mean_rtt": rtt_sum / np.maximum(rtt_n, 1),
+            "cpu_s": cpu_s, "mem_s": mem_s, "chosen": chosen}
+
+
+def scheduling_inefficiency(cfg: SimConfig, policy: str) -> Dict[str, float]:
+    """Performance loss vs the oracle LB (paper's metric), in %."""
+    res = run_sim(cfg, policy)
+    ora = run_sim(cfg, "oracle")
+    ineff = (res["mean_rtt"] - ora["mean_rtt"]) / ora["mean_rtt"] * 100.0
+    waste_cpu = (res["cpu_s"] - ora["cpu_s"]) / np.maximum(ora["cpu_s"], 1e-9) * 100.0
+    return {"inefficiency_pct": float(np.mean(ineff)),
+            "inefficiency_std": float(np.std(ineff)),
+            "resource_waste_pct": float(np.mean(waste_cpu))}
+
+
+def sweep_accuracy(base: SimConfig, accuracies=np.linspace(0, 1, 11)):
+    """Fig. 11 subplot 1."""
+    out = []
+    for p in accuracies:
+        cfg = SimConfig(**{**base.__dict__, "accuracy": float(p)})
+        out.append((float(p),
+                    scheduling_inefficiency(cfg, "perf_aware")))
+    return out
+
+
+def sweep_replicas(base: SimConfig, counts=(1, 2, 3, 4, 6, 8, 10),
+                   policies=("perf_aware", "round_robin", "random")):
+    """Fig. 11 subplots 2-3."""
+    out = {}
+    for pol in policies:
+        rows = []
+        for c in counts:
+            cfg = SimConfig(**{**base.__dict__, "n_replicas_per_app": int(c)})
+            rows.append((int(c), scheduling_inefficiency(cfg, pol)))
+        out[pol] = rows
+    return out
+
+
+def sweep_heterogeneity(base: SimConfig, hs=(0.0, 0.15, 0.3, 0.5, 0.75, 1.0),
+                        policies=("perf_aware", "round_robin", "random")):
+    """Fig. 11 subplot 4."""
+    out = {}
+    for pol in policies:
+        rows = []
+        for h in hs:
+            cfg = SimConfig(**{**base.__dict__, "heterogeneity": float(h)})
+            rows.append((float(h), scheduling_inefficiency(cfg, pol)))
+        out[pol] = rows
+    return out

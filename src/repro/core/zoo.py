@@ -1,0 +1,501 @@
+"""Predictor model zoo (paper §3.2, Table 2) in pure JAX.
+
+Non-sequential (feature vectors): LinearRegression (ridge closed form),
+SVR-linear (epsilon-insensitive, SGD), GBT (histogram gradient-boosted
+depth-2 trees — the offline XGBoost stand-in), RandTrees (randomized-
+threshold ensemble — the RF stand-in), FNN.
+
+Sequential (raw time-series windows (k_metrics, w)): RNN, LSTM, GRU, CNN.
+
+Every model implements:
+  fit(X, y)        — full training
+  partial_fit(X, y)— online / warm update (paper's re-training mode)
+  predict(X)       — jitted inference (single sample or batch)
+  name, sequential
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _as2d(X):
+    X = jnp.asarray(X, jnp.float32)
+    return X[None] if X.ndim == 1 else X
+
+
+class _Base:
+    sequential = False
+    name = "base"
+
+    def fit(self, X, y):
+        raise NotImplementedError
+
+    def partial_fit(self, X, y):
+        return self.fit(X, y)
+
+    def predict(self, X):
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------
+class LinearRegression(_Base):
+    name = "lr"
+
+    def __init__(self, l2: float = 1e-4):
+        self.l2 = l2
+        self.w = None
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        A = Xb.T @ Xb + self.l2 * np.eye(Xb.shape[1])
+        self.w = jnp.asarray(np.linalg.solve(A, Xb.T @ y), jnp.float32)
+        return self
+
+    def predict(self, X):
+        X = _as2d(X)
+        return X @ self.w[:-1] + self.w[-1]
+
+
+class SVRLinear(_Base):
+    """Linear epsilon-insensitive SVR trained by SGD (SVM stand-in)."""
+    name = "svm"
+
+    def __init__(self, epsilon: float = 0.05, l2: float = 1e-4,
+                 lr: float = 0.05, epochs: int = 200, seed: int = 0):
+        self.epsilon, self.l2, self.lr, self.epochs = epsilon, l2, lr, epochs
+        self.seed = seed
+        self.w = None
+
+    def fit(self, X, y):
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        d = X.shape[1]
+        w0 = jnp.zeros((d + 1,), jnp.float32)
+
+        def loss(w):
+            pred = X @ w[:-1] + w[-1]
+            err = jnp.abs(pred - y) - self.epsilon
+            return jnp.mean(jnp.maximum(err, 0.0)) + self.l2 * jnp.sum(w[:-1] ** 2)
+
+        g = jax.jit(jax.grad(loss))
+
+        def step(w, _):
+            return w - self.lr * g(w), None
+
+        self.w, _ = jax.lax.scan(step, w0, None, length=self.epochs)
+        return self
+
+    def partial_fit(self, X, y):
+        if self.w is None:
+            return self.fit(X, y)
+        old = self.w
+        self.epochs, e = 50, self.epochs
+        self.fit(X, y)
+        self.epochs = e
+        self.w = 0.5 * old + 0.5 * self.w
+        return self
+
+    def predict(self, X):
+        X = _as2d(X)
+        return X @ self.w[:-1] + self.w[-1]
+
+
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_rounds", "n_bins"))
+def _gbt_fit(Xb, y, thresholds, n_rounds: int, n_bins: int, lr):
+    """Histogram gradient boosting with depth-2 trees (axis-aligned),
+    fully vectorised: per round, evaluate every (feature, bin) split by
+    cumulative sums of residual histograms; children get a second-level
+    split each (depth 2) chosen the same way.
+
+    Xb: (n, d) int32 bin indices; thresholds: (d, n_bins) bin uppers.
+    Returns stacked tree params.
+    """
+    n, d = Xb.shape
+    onehot = jax.nn.one_hot(Xb, n_bins, dtype=jnp.float32)     # (n, d, B)
+
+    def best_split(res, mask):
+        """mask: (n,) membership. Returns (feat, bin, gain, lmean, rmean)."""
+        w = mask[:, None, None] * onehot                       # (n,d,B)
+        cnt = w.sum(0)                                         # (d,B)
+        s = (w * res[:, None, None]).sum(0)                    # (d,B)
+        ccnt = jnp.cumsum(cnt, axis=1)
+        csum = jnp.cumsum(s, axis=1)
+        tot_c = ccnt[:, -1:]
+        tot_s = csum[:, -1:]
+        lc = jnp.maximum(ccnt, 1e-9)
+        rc = jnp.maximum(tot_c - ccnt, 1e-9)
+        gain = csum ** 2 / lc + (tot_s - csum) ** 2 / rc       # (d,B)
+        gain = jnp.where((ccnt > 0) & (tot_c - ccnt > 0), gain, -jnp.inf)
+        flat = jnp.argmax(gain)
+        f, b = flat // n_bins, flat % n_bins
+        lmean = csum[f, b] / lc[f, b]
+        rmean = (tot_s[f, 0] - csum[f, b]) / rc[f, b]
+        return f, b, lmean, rmean
+
+    def round_step(carry, _):
+        res, = carry
+        full = jnp.ones((n,), jnp.float32)
+        f0, b0, _, _ = best_split(res, full)
+        left = (Xb[:, f0] <= b0).astype(jnp.float32)
+        right = 1.0 - left
+        f1, b1, lm1, rm1 = best_split(res, left)
+        f2, b2, lm2, rm2 = best_split(res, right)
+        ll = left * (Xb[:, f1] <= b1)
+        lr_ = left * (Xb[:, f1] > b1)
+        rl = right * (Xb[:, f2] <= b2)
+        rr = right * (Xb[:, f2] > b2)
+        leaf_vals = jnp.stack([lm1, rm1, lm2, rm2]) * lr
+        pred = (ll * leaf_vals[0] + lr_ * leaf_vals[1]
+                + rl * leaf_vals[2] + rr * leaf_vals[3])
+        res = res - pred
+        tree = (jnp.stack([f0, f1, f2]).astype(jnp.int32),
+                jnp.stack([b0, b1, b2]).astype(jnp.int32), leaf_vals)
+        return (res,), tree
+
+    base = y.mean()
+    (_,), trees = jax.lax.scan(round_step, (y - base,), None, length=n_rounds)
+    return base, trees
+
+
+@jax.jit
+def _gbt_predict(Xb, base, trees):
+    feats, bins, leaves = trees                                # (T,3),(T,3),(T,4)
+
+    def one_tree(carry, t):
+        f, b, lv = t
+        left = Xb[:, f[0]] <= b[0]
+        l2 = Xb[:, f[1]] <= b[1]
+        r2 = Xb[:, f[2]] <= b[2]
+        pred = jnp.where(left, jnp.where(l2, lv[0], lv[1]),
+                         jnp.where(r2, lv[2], lv[3]))
+        return carry + pred, None
+
+    out, _ = jax.lax.scan(one_tree,
+                          jnp.full((Xb.shape[0],), base), (feats, bins, leaves))
+    return out
+
+
+class GBT(_Base):
+    """Histogram gradient-boosted depth-2 trees (XGBoost stand-in)."""
+    name = "xgb"
+
+    def __init__(self, n_rounds: int = 150, n_bins: int = 32, lr: float = 0.1):
+        self.n_rounds, self.n_bins, self.lr = n_rounds, n_bins, lr
+        self.edges = None
+
+    def _bin(self, X):
+        X = np.asarray(X, np.float32)
+        idx = np.zeros(X.shape, np.int32)
+        for j in range(X.shape[1]):
+            idx[:, j] = np.clip(np.searchsorted(self.edges[j], X[:, j]),
+                                0, self.n_bins - 1)
+        return jnp.asarray(idx)
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float32)
+        qs = np.linspace(0, 1, self.n_bins + 1)[1:-1]
+        self.edges = [np.unique(np.quantile(X[:, j], qs))
+                      for j in range(X.shape[1])]
+        self.edges = [np.pad(e, (0, self.n_bins - 1 - len(e)),
+                             constant_values=np.inf) for e in self.edges]
+        Xb = self._bin(X)
+        self.base, self.trees = _gbt_fit(
+            Xb, jnp.asarray(y, jnp.float32), None, self.n_rounds,
+            self.n_bins, self.lr)
+        return self
+
+    def partial_fit(self, X, y):
+        # boosted trees retrain on the full dataset with kept hyperparams
+        return self.fit(X, y)
+
+    def predict(self, X):
+        return _gbt_predict(self._bin(_as2d(X)), self.base, self.trees)
+
+
+class RandTrees(GBT):
+    """Randomized-threshold averaged trees (Random-Forest stand-in): same
+    histogram machinery but each round fits on a bootstrap residual of the
+    ORIGINAL target (bagging, averaged), not the boosted residual."""
+    name = "rf"
+
+    def __init__(self, n_rounds: int = 80, n_bins: int = 32):
+        super().__init__(n_rounds=n_rounds, n_bins=n_bins, lr=1.0 / n_rounds)
+
+
+# ----------------------------------------------------------------------
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append((jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5,
+                       jnp.zeros((b,))))
+    return params
+
+
+def _adam_update(params, grads, m, v, t, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_p, new_m, new_v = [], [], []
+    for (p, g, mm, vv) in zip(params, grads, m, v):
+        mm = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, mm, g)
+        vv = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, vv, g)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** t), mm)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** t), vv)
+        p = jax.tree.map(lambda a, x, y: a - lr * x / (jnp.sqrt(y) + eps),
+                         p, mh, vh)
+        new_p.append(p)
+        new_m.append(mm)
+        new_v.append(vv)
+    return new_p, new_m, new_v
+
+
+class FNN(_Base):
+    name = "fnn"
+
+    def __init__(self, hidden=(64, 32), lr=1e-3, epochs=300, seed=0):
+        self.hidden, self.lr, self.epochs, self.seed = hidden, lr, epochs, seed
+        self.params = None
+
+    def _fwd(self, params, X):
+        h = X
+        for (w, b) in params[:-1]:
+            h = jax.nn.relu(h @ w + b)
+        w, b = params[-1]
+        return (h @ w + b)[:, 0]
+
+    def _train(self, params, X, y, epochs):
+        def loss(p):
+            return jnp.mean((self._fwd(p, X) - y) ** 2)
+
+        g = jax.grad(loss)
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+
+        def step(carry, t):
+            p, m, v = carry
+            grads = g(p)
+            p, m, v = _adam_update(p, grads, m, v, t + 1.0, self.lr)
+            return (p, m, v), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, m, v), jnp.arange(epochs, dtype=jnp.float32))
+        return params
+
+    def fit(self, X, y):
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        self.params = _mlp_init(jax.random.PRNGKey(self.seed),
+                                (X.shape[1], *self.hidden, 1))
+        self.params = self._train(self.params, X, y, self.epochs)
+        return self
+
+    def partial_fit(self, X, y):
+        if self.params is None:
+            return self.fit(X, y)
+        self.params = self._train(self.params, jnp.asarray(X, jnp.float32),
+                                  jnp.asarray(y, jnp.float32), 50)
+        return self
+
+    def predict(self, X):
+        return self._fwd(self.params, _as2d(X))
+
+
+# ----------------------------------------------------------------------
+class _Recurrent(_Base):
+    """Shared scaffolding for RNN/LSTM/GRU over (n, k_metrics, w) windows."""
+    sequential = True
+    hidden = 32
+
+    def __init__(self, lr=1e-2, epochs=300, seed=0):
+        self.lr, self.epochs, self.seed = lr, epochs, seed
+        self.params = None
+
+    def _init(self, key, d_in):
+        raise NotImplementedError
+
+    def _cell(self, params, h, x):
+        raise NotImplementedError
+
+    def _fwd(self, params, X):
+        # X: (n, k, w) -> scan over w with input (n, k)
+        cell_p, (wo, bo) = params
+        Xt = jnp.moveaxis(X, -1, 0)                            # (w, n, k)
+        h0 = self._h0(X.shape[0])
+
+        def step(h, x):
+            return self._cell(cell_p, h, x), None
+
+        h, _ = jax.lax.scan(step, h0, Xt)
+        hf = h[0] if isinstance(h, tuple) else h
+        return (hf @ wo + bo)[:, 0]
+
+    def _h0(self, n):
+        return jnp.zeros((n, self.hidden))
+
+    def fit(self, X, y):
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        key = jax.random.PRNGKey(self.seed)
+        self.params = self._init(key, X.shape[1])
+        self.params = self._train(self.params, X, y, self.epochs)
+        return self
+
+    def partial_fit(self, X, y):
+        if self.params is None:
+            return self.fit(X, y)
+        self.params = self._train(self.params, jnp.asarray(X, jnp.float32),
+                                  jnp.asarray(y, jnp.float32), 40)
+        return self
+
+    def _train(self, params, X, y, epochs):
+        def loss(p):
+            return jnp.mean((self._fwd(p, X) - y) ** 2)
+
+        g = jax.grad(loss)
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+
+        def step(carry, t):
+            p, m, v = carry
+            grads = g(p)
+            m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, grads)
+            v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, grads)
+            t1 = t + 1.0
+            p = jax.tree.map(
+                lambda pp, mm, vv: pp - self.lr * (mm / (1 - b1 ** t1))
+                / (jnp.sqrt(vv / (1 - b2 ** t1)) + eps), p, m, v)
+            return (p, m, v), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, m, v), jnp.arange(epochs, dtype=jnp.float32))
+        return params
+
+    def predict(self, X):
+        X = jnp.asarray(X, jnp.float32)
+        if X.ndim == 2:
+            X = X[None]
+        return self._fwd(self.params, X)
+
+
+class RNN(_Recurrent):
+    name = "rnn"
+
+    def _init(self, key, d_in):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = self.hidden ** -0.5
+        cell = (jax.random.normal(k1, (d_in, self.hidden)) * s,
+                jax.random.normal(k2, (self.hidden, self.hidden)) * s,
+                jnp.zeros((self.hidden,)))
+        out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
+        return (cell, out)
+
+    def _cell(self, p, h, x):
+        wx, wh, b = p
+        return jnp.tanh(x @ wx + h @ wh + b)
+
+
+class GRU(_Recurrent):
+    name = "gru"
+
+    def _init(self, key, d_in):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = self.hidden ** -0.5
+        cell = (jax.random.normal(k1, (d_in, 3 * self.hidden)) * s,
+                jax.random.normal(k2, (self.hidden, 3 * self.hidden)) * s,
+                jnp.zeros((3 * self.hidden,)))
+        out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
+        return (cell, out)
+
+    def _cell(self, p, h, x):
+        wx, wh, b = p
+        zrg = x @ wx + h @ wh + b
+        z, r, g = jnp.split(zrg, 3, axis=-1)
+        z, r = jax.nn.sigmoid(z), jax.nn.sigmoid(r)
+        g = jnp.tanh(x @ wx[:, 2 * self.hidden:]
+                     + (r * h) @ wh[:, 2 * self.hidden:]
+                     + b[2 * self.hidden:])
+        return (1 - z) * h + z * g
+
+
+class LSTM(_Recurrent):
+    name = "lstm"
+
+    def _init(self, key, d_in):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = self.hidden ** -0.5
+        cell = (jax.random.normal(k1, (d_in, 4 * self.hidden)) * s,
+                jax.random.normal(k2, (self.hidden, 4 * self.hidden)) * s,
+                jnp.zeros((4 * self.hidden,)))
+        out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
+        return (cell, out)
+
+    def _h0(self, n):
+        return (jnp.zeros((n, self.hidden)), jnp.zeros((n, self.hidden)))
+
+    def _cell(self, p, hc, x):
+        wx, wh, b = p
+        h, c = hc
+        ifgo = x @ wx + h @ wh + b
+        i, f, g, o = jnp.split(ifgo, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+        c = f * c + i * jnp.tanh(g)
+        return (o * jnp.tanh(c), c)
+
+
+class CNN(_Recurrent):
+    """1-D conv over the time axis, 2 layers + global pool + linear."""
+    name = "cnn"
+    channels = 32
+
+    def _init(self, key, d_in):
+        k1, k2, k3 = jax.random.split(key, 3)
+        c = self.channels
+        return ((jax.random.normal(k1, (3, d_in, c)) * (d_in * 3) ** -0.5,
+                 jnp.zeros((c,)),
+                 jax.random.normal(k2, (3, c, c)) * (c * 3) ** -0.5,
+                 jnp.zeros((c,))),
+                (jax.random.normal(k3, (c, 1)) * c ** -0.5, jnp.zeros((1,))))
+
+    def _fwd(self, params, X):
+        (w1, b1, w2, b2), (wo, bo) = params
+        h = jnp.moveaxis(X, 1, 2)                              # (n, w, k)
+
+        def conv(h, w, b):
+            W = w.shape[0]
+            pad = jnp.pad(h, ((0, 0), (W - 1, 0), (0, 0)))
+            out = sum(pad[:, i:i + h.shape[1], :] @ w[i] for i in range(W))
+            return jax.nn.relu(out + b)
+
+        h = conv(h, w1, b1)
+        h = conv(h, w2, b2)
+        h = h.mean(axis=1)                                     # global pool
+        return (h @ wo + bo)[:, 0]
+
+
+# ----------------------------------------------------------------------
+NONSEQ_MODELS = {"lr": LinearRegression, "svm": SVRLinear, "xgb": GBT,
+                 "rf": RandTrees, "fnn": FNN}
+SEQ_MODELS = {"rnn": RNN, "lstm": LSTM, "gru": GRU, "cnn": CNN}
+ALL_MODELS = {**NONSEQ_MODELS, **SEQ_MODELS}
+
+
+def candidates_for(corr_method: str, n_samples: int):
+    """Paper Table 2: candidate models by correlation type + dataset size."""
+    if corr_method == "pearson":
+        return ["lr", "xgb"]
+    if corr_method in ("spearman", "kendall"):
+        return ["rf", "xgb", "svm"]
+    # distance / mic (non-linear)
+    if n_samples < 1_000:
+        return ["xgb"]
+    if n_samples < 10_000:
+        return ["xgb", "fnn"]
+    return ["xgb", "fnn", "rnn", "cnn"]

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the framework's compute hot-spots:
+#   flash_attention.py  blockwise causal GQA attention (train/prefill)
+#   decode_attention.py flash-decoding over a long KV cache
+#   ssd.py              Mamba2 SSD chunked scan
+#   moe_gmm.py          expert-batched (grouped) matmul
+# ops.py: jit'd wrappers (pallas <-> XLA-ref dispatch); ref.py: jnp oracles.

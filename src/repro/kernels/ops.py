@@ -1,0 +1,48 @@
+"""jit'd wrappers dispatching Pallas kernels vs XLA reference paths.
+
+On the CPU container, Pallas runs in interpret mode (correctness only);
+the model's default compute path is the blockwise-XLA implementation.
+``use_pallas`` selects the kernel path on real TPUs.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.moe_gmm import gmm as _gmm_pallas
+from repro.kernels.ssd import ssd as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, use_pallas=False,
+                    interpret=None):
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _flash_pallas(q, k, v, causal=causal, interpret=interp)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, kv_len, *, use_pallas=False, interpret=None):
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _decode_pallas(q, k, v, kv_len, interpret=interp)
+    return ref.decode_attention_ref(q, k, v, kv_len)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=256, use_pallas=False, interpret=None):
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)
+    return ref.ssd_ref(x, dt, A, Bm, Cm)
+
+
+def gmm(x, w, *, use_pallas=False, interpret=None):
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _gmm_pallas(x, w, interpret=interp)
+    return ref.gmm_ref(x, w)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Deliberately naive: full score matrices, sequential recurrences — obviously
+correct, memory-heavy.  Tests sweep shapes/dtypes of each kernel against
+these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KV, D) GQA. Returns (B, Sq, H, Dv)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool),
+                        k.shape[1] - Sq)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, 1, H, D); k/v: (B, S, KV, D); kv_len: (B,) valid lengths."""
+    B, _, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, v.shape[-1]).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential (per-step) SSD recurrence — the ground truth.
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, G, N).
+    Returns (y (B, L, H, P) f32, final_state (B, H, P, N) f32).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32) * dt[..., None]
+    dA = jnp.exp(dt * A)                                   # (B, L, H)
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # (B, L, H, N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    def step(state, t):
+        xt, dAt, Bt, Ct = t
+        state = state * dAt[..., None, None] + \
+            jnp.einsum("bhp,bhn->bhpn", xt, Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, s0, (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dA, 1, 0),
+                   jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def gmm_ref(x, w):
+    """Grouped (expert-batched) matmul. x: (E, C, D); w: (E, D, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

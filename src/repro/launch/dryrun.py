@@ -1,0 +1,10 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything else lives in dryrun_lib.
+import sys  # noqa: E402
+
+from repro.launch.dryrun_lib import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

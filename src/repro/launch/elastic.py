@@ -1,0 +1,63 @@
+"""Elastic restart: restore a checkpoint onto a DIFFERENT mesh.
+
+Node failures / resizes change the device count; checkpoints are stored
+unsharded (per-leaf global arrays) so restoring under a new mesh is just
+device_put with the new shardings (see Checkpointer docstring for the
+sharded-at-scale variant).  The subprocess test in tests/test_distributed.py
+exercises a 4x2 -> 2x4 resize; this CLI does the same for any train run:
+
+  PYTHONPATH=src python -m repro.launch.elastic --arch mamba2-1.3b --smoke \
+      --ckpt-dir /tmp/repro_launch_train --mesh 2x4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import TrainConfig, get_config
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import rules_for, tree_arg_shardings
+from repro.models import model as M
+from repro.parallel.sharding import axis_rules
+from repro.training.train_step import make_train_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--mesh", default="2x4", help="new data x model mesh")
+    args = ap.parse_args(argv)
+
+    dp, tp = (int(x) for x in args.mesh.split("x"))
+    cfg = get_config(args.arch, smoke=args.smoke).resolve(tp=tp, dp=dp)
+    mesh = make_mesh((dp, tp), ("data", "model"))
+    rules = rules_for(cfg, mesh, "train")
+    tcfg = TrainConfig()
+    with axis_rules(rules):
+        template = jax.eval_shape(
+            lambda k: make_train_state(k, cfg, tcfg), jax.random.PRNGKey(0))
+        template = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), template)
+    ck = Checkpointer(args.ckpt_dir)
+    step = ck.latest_step()
+    restored = ck.restore(template)
+    # apply the NEW mesh's shardings
+    p_logical = M.params_logical(cfg)
+    shardings = tree_arg_shardings(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     restored["params"]), p_logical, rules)
+    restored["params"] = jax.tree.map(jax.device_put, restored["params"],
+                                      shardings)
+    print(f"[elastic] restored step {step} of {cfg.name} onto mesh "
+          f"{dp}x{tp}; params resharded "
+          f"({sum(x.size for x in jax.tree.leaves(restored['params']))} "
+          f"elements)")
+
+
+if __name__ == "__main__":
+    main()

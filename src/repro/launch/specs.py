@@ -1,0 +1,233 @@
+"""Cell construction for the dry-run: ShapeDtypeStruct inputs, sharding
+trees, and the jittable step function per (architecture x shape x mesh).
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (MeshConfig, ModelConfig, ShapeSpec, SHAPES,
+                                TrainConfig, get_config)
+from repro.models import model as M
+from repro.models.encdec import enc_len_for
+from repro.parallel.sharding import (AxisRules, axis_rules, logical_to_pspec,
+                                     make_rules)
+from repro.training.train_step import make_train_step
+
+
+# ----------------------------------------------------------------------
+def use_fsdp(cfg: ModelConfig, kind: str) -> bool:
+    """Shard weight d_model dims over the dp axis.
+
+    train: params + optimizer (master/m/v = 12 B/param fp32) must fit
+    16 GB/chip -> FSDP for everything over ~8B params.
+    serve: bf16 params / tp must leave room for the KV cache.
+    """
+    n = cfg.param_count()
+    if kind == "train":
+        return n > 8e9
+    return n * 2 / 16 > 8e9        # tp=16 fixed in the production mesh
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, kind: str) -> AxisRules:
+    mesh_axes = mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    mode = "train" if kind == "train" else ("decode" if kind == "decode"
+                                            else "prefill")
+    return make_rules(mesh, mode=mode, fsdp=use_fsdp(cfg, kind),
+                      zero1=True, dp_axes=dp_axes)
+
+
+def arg_sharding(shape: Tuple[int, ...], axes, rules: AxisRules):
+    """NamedSharding for a jit *argument*: drops axes that don't divide."""
+    mesh = rules.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        phys = rules.physical(name) if name else None
+        cand = phys if isinstance(phys, tuple) else ((phys,) if phys else ())
+        cand = tuple(a for a in cand if a not in used)
+        total = math.prod(sizes[a] for a in cand) if cand else 1
+        if cand and dim % total == 0:
+            used.update(cand)
+            parts.append(cand if len(cand) > 1 else cand[0])
+        else:
+            parts.append(None)
+    return NamedSharding(mesh, P(*parts))
+
+
+def tree_arg_shardings(sds_tree, logical_tree, rules: AxisRules):
+    return jax.tree.map(
+        lambda sds, axes: arg_sharding(sds.shape, axes, rules),
+        sds_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+# ----------------------------------------------------------------------
+def batch_logical(cfg: ModelConfig, kind: str) -> Dict[str, tuple]:
+    lg: Dict[str, tuple] = {}
+    if kind == "train":
+        lg["tokens"] = ("batch", None)
+        lg["labels"] = ("batch", None)
+        if cfg.family == "vlm":
+            lg["vision_embeds"] = ("batch", None, None)
+            lg["positions"] = ("batch", None, None)
+            lg["loss_mask"] = ("batch", None)
+        if cfg.family == "encdec":
+            lg["enc_frames"] = ("batch", None, None)
+    elif kind == "prefill":
+        lg["tokens"] = ("batch", None)
+        if cfg.family == "vlm":
+            lg["vision_embeds"] = ("batch", None, None)
+            lg["positions"] = ("batch", None, None)
+        if cfg.family == "encdec":
+            lg["enc_frames"] = ("batch", None, None)
+    else:  # decode
+        lg["tokens"] = ("batch", None)
+    return lg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = sds((B, cfg.num_frontend_tokens,
+                                          cfg.d_model), bf16)
+            batch["positions"] = sds((B, S, 3), i32)
+            batch["loss_mask"] = sds((B, S), jnp.float32)
+        if cfg.family == "encdec":
+            batch["enc_frames"] = sds((B, enc_len_for(S), cfg.d_model), bf16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = sds((B, cfg.num_frontend_tokens,
+                                          cfg.d_model), bf16)
+            batch["positions"] = sds((B, S, 3), i32)
+        if cfg.family == "encdec":
+            batch["enc_frames"] = sds((B, enc_len_for(S), cfg.d_model), bf16)
+        return batch
+    # decode: one new token against a seq_len KV cache
+    return {"tokens": sds((B, 1), i32)}
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+    cfg: ModelConfig
+    shape: ShapeSpec
+    rules: AxisRules
+    fn: Any                   # jittable step
+    args: tuple               # SDS pytrees
+    in_shardings: tuple
+    kind: str
+    donate: tuple = ()        # donated arg indices (state / KV cache)
+    out_shardings: Any = None # pin donated outputs to input shardings
+
+
+def _state_sds(cfg, tcfg):
+    from repro.training.train_step import make_train_state
+    return jax.eval_shape(
+        lambda k: make_train_state(k, cfg, tcfg), jax.random.PRNGKey(0))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None,
+               cfg: Optional[ModelConfig] = None,
+               tcfg_overrides: Optional[dict] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if cfg is None:
+        cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cfg = cfg.resolve(tp=tp, dp=dp)
+    kind = shape.kind
+    rules = rules_for(cfg, mesh, kind)
+    p_logical = M.params_logical(cfg)
+    batch_sds = input_specs(cfg, shape)
+    b_logical = batch_logical(cfg, kind)
+    b_shard = tree_arg_shardings(batch_sds, b_logical, rules)
+
+    if kind == "train":
+        # grad-accumulate 4 microbatches: divides the remat-saved residual
+        # stack (and its backward f32 hoist) by 4; tokens/step unchanged.
+        # fp32 master weights unless 14 B/param of state would blow HBM.
+        chips = mesh.size
+        hbm_bound = cfg.param_count() * 14 / chips >= 11e9
+        tkw = dict(microbatches=8 if hbm_bound else 4,
+                   master_fp32=not hbm_bound,
+                   moment_dtype="bfloat16" if hbm_bound else "float32")
+        tkw.update(tcfg_overrides or {})
+        tcfg = TrainConfig(**tkw)
+        state_sds = _state_sds(cfg, tcfg)
+        opt_swap = {"embed": "opt_embed"}
+        opt_logical = {
+            "master": jax.tree.map(
+                lambda a: tuple(opt_swap.get(x, x) for x in a), p_logical,
+                is_leaf=lambda x: isinstance(x, tuple)),
+        }
+        opt_logical["m"] = opt_logical["master"]
+        opt_logical["v"] = opt_logical["master"]
+        opt_logical["step"] = ()
+        state_logical = {"params": p_logical, "opt": opt_logical}
+        state_shard = tree_arg_shardings(state_sds, state_logical, rules)
+        with axis_rules(rules):
+            step = make_train_step(cfg, tcfg, rules)
+
+        def fn(state, batch):
+            with axis_rules(rules):
+                return step(state, batch)
+
+        return Cell(cfg, shape, rules, fn, (state_sds, batch_sds),
+                    (state_shard, b_shard), kind, donate=(0,),
+                    out_shardings=(state_shard, None))
+
+    params_sds = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    params_shard = tree_arg_shardings(params_sds, p_logical, rules)
+
+    if kind == "prefill":
+        def fn(params, batch):
+            with axis_rules(rules):
+                return M.prefill(params, cfg, batch)
+
+        return Cell(cfg, shape, rules, fn, (params_sds, batch_sds),
+                    (params_shard, b_shard), kind)
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    cache_shard = tree_arg_shardings(cache_sds, M.cache_logical(cfg), rules)
+
+    def fn(params, cache, tokens):
+        with axis_rules(rules):
+            return M.decode_step(params, cfg, cache, tokens)
+
+    return Cell(cfg, shape, rules, fn, (params_sds, cache_sds, batch_sds["tokens"]),
+                (params_shard, cache_shard, b_shard["tokens"]), kind,
+                donate=(1,), out_shardings=(None, cache_shard))
+
+
+def lower_cell(cell: Cell):
+    return jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                   out_shardings=cell.out_shardings,
+                   donate_argnums=cell.donate).lower(*cell.args)

@@ -1,0 +1,210 @@
+"""Encoder-decoder assembly (SeamlessM4T backbone).
+
+The speech/conformer frontend is a STUB: the encoder consumes precomputed
+frame embeddings (B, S_enc, D) supplied by the input pipeline / input_specs.
+Decoder shapes use the cell's seq_len; the encoder (audio-context) length is
+bounded at ENC_MAX (4096) — recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_decode, attention_fwd, init_attention
+from repro.models.common import (chunked_cross_entropy, embed_tokens,
+                                 init_embedding, init_mlp, init_rmsnorm,
+                                 logits_from_hidden, rmsnorm)
+from repro.parallel.sharding import shard
+
+ENC_MAX = 4096
+
+
+def enc_len_for(seq_len: int) -> int:
+    return min(seq_len, ENC_MAX)
+
+
+# ----------------------------------------------------------------------
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    p, lg = {}, {}
+    p["attn"], lg["attn"] = init_attention(ks[0], cfg)
+    p["mlp"], lg["mlp"] = init_mlp(ks[1], cfg, swiglu=False)
+    p["ln1"], lg["ln1"] = init_rmsnorm(cfg.d_model, None)
+    p["ln2"], lg["ln2"] = init_rmsnorm(cfg.d_model, None)
+    return p, lg
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    p, lg = {}, {}
+    p["self"], lg["self"] = init_attention(ks[0], cfg)
+    p["cross"], lg["cross"] = init_attention(ks[1], cfg)
+    p["mlp"], lg["mlp"] = init_mlp(ks[2], cfg, swiglu=False)
+    p["ln1"], lg["ln1"] = init_rmsnorm(cfg.d_model, None)
+    p["ln2"], lg["ln2"] = init_rmsnorm(cfg.d_model, None)
+    p["ln3"], lg["ln3"] = init_rmsnorm(cfg.d_model, None)
+    return p, lg
+
+
+def init_params(key, cfg):
+    from repro.models.model import stacked_init
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(ks[0], cfg)[0],
+        "enc_layers": stacked_init(lambda k: _init_enc_layer(k, cfg), ks[1],
+                                   cfg.enc_layers),
+        "dec_layers": stacked_init(lambda k: _init_dec_layer(k, cfg), ks[2],
+                                   cfg.num_layers),
+        "enc_norm": init_rmsnorm(cfg.d_model, None)[0],
+        "final_norm": init_rmsnorm(cfg.d_model, None)[0],
+    }
+
+
+def params_logical(cfg):
+    from repro.models.model import capture_logical, stacked_logical
+    key = jax.random.PRNGKey(0)
+    return {
+        "embed": capture_logical(lambda k: init_embedding(k, cfg), key),
+        "enc_layers": stacked_logical(lambda k: _init_enc_layer(k, cfg), key),
+        "dec_layers": stacked_logical(lambda k: _init_dec_layer(k, cfg), key),
+        "enc_norm": capture_logical(lambda k: init_rmsnorm(cfg.d_model, None),
+                                    key),
+        "final_norm": capture_logical(lambda k: init_rmsnorm(cfg.d_model, None),
+                                      key),
+    }
+
+
+# ----------------------------------------------------------------------
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, D) precomputed frontend embeddings."""
+    from repro.models.model import default_positions, maybe_remat
+    B, S, _ = frames.shape
+    h = shard(frames, "batch", "act_seq", None)
+    positions = default_positions(cfg, B, S)
+
+    def body(hh, lp):
+        a, _ = attention_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                             positions, causal=False)
+        hh = shard(hh + a, "batch", "residual_seq", None)
+        from repro.models.common import mlp as mlp_fwd
+        hh = hh + mlp_fwd(lp["mlp"], rmsnorm(lp["ln2"], hh, cfg.norm_eps),
+                          swiglu=False)
+        return shard(hh, "batch", "residual_seq", None), None
+
+    h = shard(h, "batch", "residual_seq", None)
+    body = maybe_remat(cfg, body)
+    from repro.models.model import scan_or_unroll
+    h, _ = scan_or_unroll(cfg, body, h, params["enc_layers"])
+    h = shard(h, "batch", "act_seq", None)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decoder(params, cfg, tokens, enc_out, collect_cache: bool):
+    from repro.models.common import mlp as mlp_fwd
+    from repro.models.model import default_positions, maybe_remat
+    B, S = tokens.shape
+    h = embed_tokens(params["embed"], cfg, tokens)
+    positions = default_positions(cfg, B, S)
+
+    def body(hh, lp):
+        a, kv_self = attention_fwd(lp["self"], cfg,
+                                   rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                                   positions, causal=True)
+        hh = shard(hh + a, "batch", "residual_seq", None)
+        c, kv_cross = attention_fwd(lp["cross"], cfg,
+                                    rmsnorm(lp["ln2"], hh, cfg.norm_eps),
+                                    None, causal=False, x_kv=enc_out,
+                                    use_rope=False)
+        hh = shard(hh + c, "batch", "residual_seq", None)
+        hh = hh + mlp_fwd(lp["mlp"], rmsnorm(lp["ln3"], hh, cfg.norm_eps),
+                          swiglu=False)
+        hh = shard(hh, "batch", "residual_seq", None)
+        return hh, (kv_self, kv_cross) if collect_cache else None
+
+    h = shard(h, "batch", "residual_seq", None)
+    body = maybe_remat(cfg, body)
+    from repro.models.model import scan_or_unroll
+    h, kvs = scan_or_unroll(cfg, body, h, params["dec_layers"])
+    h = shard(h, "batch", "act_seq", None)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), kvs
+
+
+def train_forward(params, cfg, batch):
+    enc_out = encode(params, cfg, batch["enc_frames"])
+    h, _ = _decoder(params, cfg, batch["tokens"], enc_out, collect_cache=False)
+    loss, cnt = chunked_cross_entropy(
+        lambda hc: logits_from_hidden(params["embed"], cfg, hc),
+        h, batch["labels"], cfg, batch.get("loss_mask"))
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0.0), "tokens": cnt}
+
+
+def prefill(params, cfg, batch, cache_len: Optional[int] = None):
+    from repro.models.model import _pad_seq
+    enc_out = encode(params, cfg, batch["enc_frames"])
+    h, kvs = _decoder(params, cfg, batch["tokens"], enc_out, collect_cache=True)
+    (k_self, v_self), (k_cross, v_cross) = kvs
+    B, S = batch["tokens"].shape
+    logits = logits_from_hidden(params["embed"], cfg, h[:, -1:, :])[:, 0]
+    cache = {"k": _pad_seq(k_self, 2, cache_len),
+             "v": _pad_seq(v_self, 2, cache_len),
+             "ck": k_cross, "cv": v_cross,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    from repro.models.common import mlp as mlp_fwd
+    B = tokens.shape[0]
+    h = embed_tokens(params["embed"], cfg, tokens)
+    pos = cache["len"]
+    enc_len = cache["ck"].shape[2]
+
+    from repro.models.model import cache_read, cache_write, scan_or_unroll
+    idx = jnp.arange(cfg.num_layers)
+
+    def body(carry, xs):
+        hh, ks, vs = carry
+        lp, ck, cv, i = xs
+        kc, vc = cache_read(ks, i), cache_read(vs, i)
+        a_in = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+        a, kc, vc, _ = attention_decode(lp["self"], cfg, a_in, pos, kc, vc,
+                                        cache["len"])
+        hh = hh + a
+        c_in = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+        c, _, _, _ = attention_decode(
+            lp["cross"], cfg, c_in, pos, ck, cv,
+            jnp.full((B,), enc_len, jnp.int32), update_cache=False,
+            use_rope=False)
+        hh = hh + c
+        hh = hh + mlp_fwd(lp["mlp"], rmsnorm(lp["ln3"], hh, cfg.norm_eps),
+                          swiglu=False)
+        return (hh, cache_write(ks, kc, i), cache_write(vs, vc, i)), None
+
+    (h, ks, vs), _ = scan_or_unroll(
+        cfg, body, (h, cache["k"], cache["v"]),
+        (params["dec_layers"], cache["ck"], cache["cv"], idx))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_from_hidden(params["embed"], cfg, h)[:, 0]
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                    "len": cache["len"] + 1}
+
+
+def init_cache(cfg, B, S, dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    L = cfg.num_layers
+    KV, dh = cfg.padded_kv, cfg.head_dim
+    Se = enc_len if enc_len is not None else enc_len_for(S)
+    return {"k": jnp.zeros((L, B, S, KV, dh), dtype),
+            "v": jnp.zeros((L, B, S, KV, dh), dtype),
+            "ck": jnp.zeros((L, B, Se, KV, dh), dtype),
+            "cv": jnp.zeros((L, B, Se, KV, dh), dtype),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def cache_logical(cfg):
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "ck": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "cv": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "len": ("noshard",)}

@@ -1,0 +1,373 @@
+"""SSM (Mamba2) and hybrid (Zamba2) model assemblies.
+
+Zamba2: a Mamba2 backbone of ``num_layers`` blocks; after every
+``hybrid.shared_every`` blocks, one *shared* transformer block (weights
+reused across invocations, per-invocation LoRA deltas on the q- and
+FFN-in projections) runs on concat(hidden, token-embedding) and its
+output is projected back to d_model and added to the stream.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    init_attention, repeat_kv)
+from repro.models.common import (apply_rope, chunked_cross_entropy, dtype_of,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_rmsnorm, logits_from_hidden, normal_init,
+                                 rmsnorm)
+from repro.models.ssm import init_mamba2, mamba2_decode, mamba2_fwd
+from repro.parallel.sharding import shard
+
+
+# ----------------------------------------------------------------------
+def _init_mamba_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    mp, mlg = init_mamba2(ks[0], cfg)
+    lp, llg = init_rmsnorm(cfg.d_model, None)
+    return {"ln": lp, "mixer": mp}, {"ln": llg, "mixer": mlg}
+
+
+def _mamba_layer_fwd(cfg, lp, h):
+    y, states = mamba2_fwd(lp["mixer"], cfg, rmsnorm(lp["ln"], h, cfg.norm_eps))
+    return h + y, states
+
+
+def _mamba_layer_decode(cfg, lp, h, conv_s, ssm_s):
+    y, conv_s, ssm_s = mamba2_decode(
+        lp["mixer"], cfg, rmsnorm(lp["ln"], h, cfg.norm_eps), conv_s, ssm_s)
+    return h + y, conv_s, ssm_s
+
+
+# ----------------------------------------------------------------------
+# Zamba2 shared block
+def _init_shared_block(key, cfg):
+    hb = cfg.hybrid
+    D2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 4)
+    attn_p, attn_lg = init_attention(
+        ks[0], cfg, d_in=D2, d_out=D2, num_heads=hb.shared_num_heads,
+        num_kv_heads=hb.shared_kv_heads, head_dim=cfg.head_dim)
+    mlp_p, mlp_lg = init_mlp(ks[1], cfg, d_ff=hb.shared_d_ff, d_in=D2)
+    dt = dtype_of(cfg)
+    p = {"attn": attn_p, "mlp": mlp_p,
+         "ln1": init_rmsnorm(D2, None)[0], "ln2": init_rmsnorm(D2, None)[0],
+         "down": normal_init(ks[2], (D2, cfg.d_model), D2 ** -0.5, dt)}
+    lg = {"attn": attn_lg, "mlp": mlp_lg,
+          "ln1": init_rmsnorm(D2, None)[1], "ln2": init_rmsnorm(D2, None)[1],
+          "down": (None, "embed")}
+    return p, lg
+
+
+def _init_lora(key, cfg):
+    hb = cfg.hybrid
+    D2 = 2 * cfg.d_model
+    r = hb.lora_rank
+    Hdh = hb.shared_num_heads * cfg.head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {"qa": normal_init(ks[0], (D2, r), D2 ** -0.5, dt),
+         "qb": jnp.zeros((r, Hdh), dt),
+         "ia": normal_init(ks[1], (D2, r), D2 ** -0.5, dt),
+         "ib": jnp.zeros((r, hb.shared_d_ff), dt)}
+    lg = {"qa": (None, None), "qb": (None, "heads"),
+          "ia": (None, None), "ib": (None, "mlp")}
+    return p, lg
+
+
+def _shared_qkv(cfg, sp, lp, x, positions=None, pos_scalar=None):
+    """QKV for the shared block with per-invocation LoRA on q."""
+    hb = cfg.hybrid
+    H, dh = hb.shared_num_heads, cfg.head_dim
+    ap = sp["attn"]
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    q_lora = jnp.einsum("bsr,rk->bsk", jnp.einsum("bsd,dr->bsr", x, lp["qa"]),
+                        lp["qb"]).reshape(*x.shape[:2], H, dh)
+    q = q + q_lora
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif pos_scalar is not None:
+        q = apply_rope(q, pos_scalar[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_scalar[:, None], cfg.rope_theta)
+    q = shard(q, "batch", "act_seq", "heads", None)
+    k = shard(k, "batch", "act_seq", "kv_heads", None)
+    v = shard(v, "batch", "act_seq", "kv_heads", None)
+    return q, k, v
+
+
+def _shared_mlp(cfg, sp, lp, x):
+    mp = sp["mlp"]
+    h = jnp.einsum("bsd,df->bsf", x, mp["wi"])
+    h = h + jnp.einsum("bsr,rf->bsf",
+                       jnp.einsum("bsd,dr->bsr", x, lp["ia"]), lp["ib"])
+    g = jnp.einsum("bsd,df->bsf", x, mp["wg"])
+    h = shard(jax.nn.silu(g) * h, "batch", "act_seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, mp["wo"])
+
+
+def _shared_block_fwd(cfg, sp, lp, h, emb, positions):
+    hb = cfg.hybrid
+    u = jnp.concatenate([h, emb], axis=-1)
+    x1 = rmsnorm(sp["ln1"], u, cfg.norm_eps)
+    q, k, v = _shared_qkv(cfg, sp, lp, x1, positions=positions)
+    rep = hb.shared_num_heads // hb.shared_kv_heads
+    att = blockwise_attention(q, repeat_kv(k, rep), repeat_kv(v, rep),
+                              causal=True, q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+    u = u + jnp.einsum("bshk,hkd->bsd", att, sp["attn"]["wo"])
+    x2 = rmsnorm(sp["ln2"], u, cfg.norm_eps)
+    u = u + _shared_mlp(cfg, sp, lp, x2)
+    out = jnp.einsum("bsd,dk->bsk", u, sp["down"])
+    k_c = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v_c = shard(v, "batch", "kv_seq", "kv_heads", None)
+    return shard(out, "batch", "act_seq", None), (k_c, v_c)
+
+
+def _shared_block_decode(cfg, sp, lp, h, emb_t, pos, k_cache, v_cache):
+    hb = cfg.hybrid
+    u = jnp.concatenate([h, emb_t], axis=-1)                  # (B,1,2D)
+    x1 = rmsnorm(sp["ln1"], u, cfg.norm_eps)
+    q, k, v = _shared_qkv(cfg, sp, lp, x1, pos_scalar=pos)
+    b_idx = jnp.arange(k_cache.shape[0])
+    k_cache = k_cache.at[b_idx, pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b_idx, pos].set(v[:, 0].astype(v_cache.dtype))
+    k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", None)
+    att = decode_attention(q, k_cache.astype(q.dtype),
+                           v_cache.astype(q.dtype), pos + 1)
+    u = u + jnp.einsum("bshk,hkd->bsd", att, sp["attn"]["wo"])
+    x2 = rmsnorm(sp["ln2"], u, cfg.norm_eps)
+    u = u + _shared_mlp(cfg, sp, lp, x2)
+    out = jnp.einsum("bsd,dk->bsk", u, sp["down"])
+    return shard(out, "batch", "act_seq", None), k_cache, v_cache
+
+
+# ----------------------------------------------------------------------
+def _n_groups(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    assert cfg.num_layers % cfg.hybrid.shared_every == 0
+    return cfg.num_layers // cfg.hybrid.shared_every
+
+
+def init_params(key, cfg):
+    from repro.models.model import stacked_init  # avoid import cycle
+    ks = jax.random.split(key, 5)
+    p = {"embed": init_embedding(ks[0], cfg)[0],
+         "final_norm": init_rmsnorm(cfg.d_model, None)[0]}
+    if cfg.family == "ssm":
+        p["layers"] = stacked_init(lambda k: _init_mamba_layer(k, cfg), ks[1],
+                                   cfg.num_layers)
+        return p
+    G, per = _n_groups(cfg), cfg.hybrid.shared_every
+    gkeys = jax.random.split(ks[1], G)
+    p["mamba"] = jax.vmap(
+        lambda gk: stacked_init(lambda k: _init_mamba_layer(k, cfg), gk, per)
+    )(gkeys)
+    p["shared"] = _init_shared_block(ks[2], cfg)[0]
+    p["lora"] = stacked_init(lambda k: _init_lora(k, cfg), ks[3], G)
+    return p
+
+
+def params_logical(cfg):
+    from repro.models.model import capture_logical, stacked_logical
+    key = jax.random.PRNGKey(0)
+    lg = {"embed": capture_logical(lambda k: init_embedding(k, cfg), key),
+          "final_norm": capture_logical(
+              lambda k: init_rmsnorm(cfg.d_model, None), key)}
+    if cfg.family == "ssm":
+        lg["layers"] = stacked_logical(lambda k: _init_mamba_layer(k, cfg), key)
+        return lg
+    inner = stacked_logical(lambda k: _init_mamba_layer(k, cfg), key)
+    lg["mamba"] = jax.tree.map(lambda axes: ("layers",) + axes, inner,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    lg["shared"] = capture_logical(lambda k: _init_shared_block(k, cfg), key)
+    lg["lora"] = stacked_logical(lambda k: _init_lora(k, cfg), key)
+    return lg
+
+
+# ----------------------------------------------------------------------
+def _backbone(params, cfg, batch, collect_cache: bool):
+    from repro.models.model import default_positions, maybe_remat
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    emb = embed_tokens(params["embed"], cfg, tokens)
+    h = emb
+    if cfg.family == "ssm":
+        def body(hh, lp):
+            hh, states = _mamba_layer_fwd(cfg, lp, hh)
+            hh = shard(hh, "batch", "residual_seq", None)
+            return hh, states if collect_cache else None
+
+        h = shard(h, "batch", "residual_seq", None)
+        body = maybe_remat(cfg, body)
+        from repro.models.model import scan_or_unroll
+        h, states = scan_or_unroll(cfg, body, h, params["layers"])
+        h = shard(h, "batch", "act_seq", None)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return h, states, None
+
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+
+    def group_body(hh, xs):
+        mp, lp = xs
+
+        def mbody(hm, mxs):
+            hm, st = _mamba_layer_fwd(cfg, mxs, hm)
+            hm = shard(hm, "batch", "residual_seq", None)
+            return hm, st if collect_cache else None
+
+        hh, m_states = jax.lax.scan(mbody, hh, mp)
+        blk, kv = _shared_block_fwd(cfg, params["shared"], lp, hh, emb,
+                                    positions)
+        hh = shard(hh + blk, "batch", "residual_seq", None)
+        return hh, (m_states, kv) if collect_cache else None
+
+    h = shard(h, "batch", "residual_seq", None)
+    group_body = maybe_remat(cfg, group_body)
+    from repro.models.model import scan_or_unroll
+    h, cache_ys = scan_or_unroll(cfg, group_body, h,
+                                 (params["mamba"], params["lora"]))
+    h = shard(h, "batch", "act_seq", None)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, cache_ys, None
+
+
+def train_forward(params, cfg, batch):
+    h, _, _ = _backbone(params, cfg, batch, collect_cache=False)
+    loss, cnt = chunked_cross_entropy(
+        lambda hc: logits_from_hidden(params["embed"], cfg, hc),
+        h, batch["labels"], cfg, batch.get("loss_mask"))
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0.0), "tokens": cnt}
+
+
+def prefill(params, cfg, batch, cache_len: Optional[int] = None):
+    from repro.models.model import _pad_seq
+    h, cache_ys, _ = _backbone(params, cfg, batch, collect_cache=True)
+    B, S = batch["tokens"].shape
+    logits = logits_from_hidden(params["embed"], cfg, h[:, -1:, :])[:, 0]
+
+    def conv_cache(tails):
+        tx, tb, tc = tails
+        return {"x": tx.astype(jnp.float32), "B": tb.astype(jnp.float32),
+                "C": tc.astype(jnp.float32)}
+
+    if cfg.family == "ssm":
+        tails, ssm_state = cache_ys
+        cache = {"conv": conv_cache(tails), "ssm": ssm_state,
+                 "len": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+    (tails, ssm_state), (k, v) = cache_ys
+    cache = {"conv": conv_cache(tails), "ssm": ssm_state,
+             "k": _pad_seq(k, 2, cache_len), "v": _pad_seq(v, 2, cache_len),
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    emb_t = embed_tokens(params["embed"], cfg, tokens)        # (B,1,D)
+    h = emb_t
+    pos = cache["len"]
+    from repro.models.model import cache_read, cache_write, scan_or_unroll
+    if cfg.family == "ssm":
+        idx = jnp.arange(cfg.num_layers)
+
+        def body(carry, xs):
+            hh, conv, ssm = carry
+            lp, i = xs
+            cs = jax.tree.map(lambda s: cache_read(s, i), conv)
+            ss = cache_read(ssm, i)
+            hh, cs, ss = _mamba_layer_decode(cfg, lp, hh, cs, ss)
+            conv = jax.tree.map(lambda s, v: cache_write(s, v, i), conv, cs)
+            return (hh, conv, cache_write(ssm, ss, i)), None
+
+        (h, conv_s, ssm_s), _ = scan_or_unroll(
+            cfg, body, (h, cache["conv"], cache["ssm"]),
+            (params["layers"], idx))
+        new_cache = {"conv": conv_s, "ssm": ssm_s, "len": cache["len"] + 1}
+    else:
+        idx = jnp.arange(_n_groups(cfg))
+
+        def group_body(carry, xs):
+            hh, conv, ssm, ks, vs = carry
+            mp, lp, g = xs
+            conv_g = jax.tree.map(lambda s: cache_read(s, g), conv)
+            ssm_g = cache_read(ssm, g)
+            kc, vc = cache_read(ks, g), cache_read(vs, g)
+
+            def mbody(hm, mxs):
+                lp2, cs, ss = mxs
+                hm, cs, ss = _mamba_layer_decode(cfg, lp2, hm, cs, ss)
+                return hm, (cs, ss)
+
+            hh, (conv_g, ssm_g) = jax.lax.scan(mbody, hh, (mp, conv_g, ssm_g))
+            blk, kc, vc = _shared_block_decode(cfg, params["shared"], lp, hh,
+                                               emb_t, pos, kc, vc)
+            hh = hh + blk
+            conv = jax.tree.map(lambda s, v: cache_write(s, v, g), conv, conv_g)
+            return (hh, conv, cache_write(ssm, ssm_g, g),
+                    cache_write(ks, kc, g), cache_write(vs, vc, g)), None
+
+        (h, conv_s, ssm_s, ks, vs), _ = scan_or_unroll(
+            cfg, group_body, (h, cache["conv"], cache["ssm"],
+                              cache["k"], cache["v"]),
+            (params["mamba"], params["lora"], idx))
+        new_cache = {"conv": conv_s, "ssm": ssm_s, "k": ks, "v": vs,
+                     "len": cache["len"] + 1}
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_from_hidden(params["embed"], cfg, h)[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg, B, S, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    D = cfg.d_model
+    W = s.d_conv
+    di = s.d_inner(D)
+    gn = s.n_groups * s.d_state
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+
+    def conv_zeros(*lead):
+        return {"x": jnp.zeros((*lead, B, W - 1, di), jnp.float32),
+                "B": jnp.zeros((*lead, B, W - 1, gn), jnp.float32),
+                "C": jnp.zeros((*lead, B, W - 1, gn), jnp.float32)}
+
+    if cfg.family == "ssm":
+        L = cfg.num_layers
+        return {"conv": conv_zeros(L),
+                "ssm": jnp.zeros((L, B, H, P, N), jnp.float32),
+                "len": jnp.zeros((B,), jnp.int32)}
+    G, per = _n_groups(cfg), cfg.hybrid.shared_every
+    hb = cfg.hybrid
+    return {"conv": conv_zeros(G, per),
+            "ssm": jnp.zeros((G, per, B, H, P, N), jnp.float32),
+            "k": jnp.zeros((G, B, S, hb.shared_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((G, B, S, hb.shared_kv_heads, cfg.head_dim), dtype),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def cache_logical(cfg):
+    conv_ssm = {"x": ("layers", "batch", None, "ssm_inner"),
+                "B": ("layers", "batch", None, None),
+                "C": ("layers", "batch", None, None)}
+    conv_hyb = {"x": ("layers", None, "batch", None, "ssm_inner"),
+                "B": ("layers", None, "batch", None, None),
+                "C": ("layers", None, "batch", None, None)}
+    if cfg.family == "ssm":
+        return {"conv": conv_ssm,
+                "ssm": ("layers", "batch", "ssm_inner", None, None),
+                "len": ("noshard",)}
+    return {"conv": conv_hyb,
+            "ssm": ("layers", None, "batch", "ssm_inner", None, None),
+            "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "len": ("noshard",)}

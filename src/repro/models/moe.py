@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN: top-k router + GShard-style einsum dispatch.
+
+Expert parallelism: experts are sharded over the "model" mesh axis, dispatch
+groups over the dp axes, so the dispatch/combine einsums lower to the
+all-to-all-like collectives GSPMD schedules.  Capacity is per *group*
+(C = S_g * k / E * capacity_factor) which keeps the one-hot dispatch tensor
+(G, S_g, E, C) small per device.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of, normal_init
+from repro.parallel.sharding import shard
+
+
+def init_moe(key, cfg) -> Tuple[dict, dict]:
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    D, F, E = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": normal_init(ks[0], (D, E), D ** -0.5, jnp.float32),
+        "wi": normal_init(ks[1], (E, D, F), D ** -0.5, dt),
+        "wg": normal_init(ks[2], (E, D, F), D ** -0.5, dt),
+        "wo": normal_init(ks[3], (E, F, D), F ** -0.5, dt),
+    }
+    lg = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", None),
+        "wg": ("experts", "embed", None),
+        "wo": ("experts", None, "embed"),
+    }
+    return p, lg
+
+
+def moe_ffn(p, cfg, x, *, use_pallas: bool = False):
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar).
+
+    Routing is token-choice top-k with per-group capacity; dropped tokens
+    (over capacity) fall back to the residual stream (their FFN output is 0).
+    """
+    import math as _math
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    # Dispatch-tensor size is G * S_g * E * C with C ∝ S_g — quadratic in
+    # tokens-per-group.  Use enough groups to keep S_g ≲ 2048 (GShard-style),
+    # while staying divisible by the dp shard count.
+    G = _math.gcd(T, max(1, m.num_groups))
+    while T // G > 2048 and T % (2 * G) == 0:
+        G *= 2
+    Sg = T // G
+    xg = shard(x.reshape(G, Sg, D), "groups", None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (G,Sg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # qwen3 renorm
+
+    cap = int(Sg * K / E * m.capacity_factor)
+    cap = max(4, (cap + 3) // 4 * 4)
+
+    # slot-by-slot dispatch (top-1 gets capacity priority, GShard-style)
+    counts = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, Sg, E, cap), jnp.bfloat16)
+    combine = jnp.zeros((G, Sg, E, cap), jnp.float32)
+    for k in range(K):
+        oh = jax.nn.one_hot(expert_ids[..., k], E, dtype=jnp.float32)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts             # (G,Sg,E)
+        keep = oh * (pos < cap)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                                dtype=jnp.float32)             # (G,Sg,E,cap)
+        slot = keep[..., None] * pos_oh
+        dispatch = dispatch + slot.astype(jnp.bfloat16)
+        combine = combine + slot * gate_vals[..., k, None, None]
+        counts = counts + oh.sum(axis=1, keepdims=True)
+    dispatch = shard(dispatch, "groups", None, "experts", None)
+    combine = shard(combine, "groups", None, "experts", None)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(jnp.bfloat16))
+    xe = shard(xe, "experts", "groups", None, None)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["wi"])
+    g = jnp.einsum("egcd,edf->egcf", xe, p["wg"])
+    h = jax.nn.silu(g) * h
+    oe = jnp.einsum("egcf,efd->egcd", h, p["wo"])
+    oe = shard(oe, "experts", "groups", None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(oe.dtype), oe)
+    y = shard(y, "groups", None, None)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    frac = jax.nn.one_hot(expert_ids[..., 0], E).mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob) * m.router_aux_weight
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,230 @@
+"""Mamba2 block: depthwise causal conv + SSD (state-space duality) scan.
+
+TP note: the reference Mamba2 packs (z, x, B, C, dt) into one in_proj and
+runs one depthwise conv over packed (x, B, C).  Packed layouts slice at
+offsets that do NOT align with a 16-way model sharding of the packed dim,
+which forces GSPMD to all-gather the full activation every layer (observed:
+2.2 GB f32 buffers/device on the production mesh).  Since depthwise conv
+commutes with channel concat, we keep separate projections and per-part
+convs: z, x head-sharded over "model"; B, C, dt replicated (small, grouped).
+Same math, TP-friendly layout — recorded in DESIGN.md §deviations.
+
+The training/prefill path is the chunked SSD algorithm (intra-chunk
+quadratic + inter-chunk state recurrence) run as a sequential scan over
+chunks — the XLA analogue of the Pallas SSD kernel (kernels/ssd.py).
+The decode path is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of, normal_init, rmsnorm
+from repro.parallel.sharding import shard
+
+
+def init_mamba2(key, cfg) -> Tuple[dict, dict]:
+    s = cfg.ssm
+    dt_ = dtype_of(cfg)
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    # dt bias st. softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(ks[6], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+                  + jnp.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))                  # inv softplus
+    a0 = jax.random.uniform(ks[7], (nh,), jnp.float32,
+                            s.a_init_range[0], s.a_init_range[1])
+    p = {
+        "in_z": normal_init(ks[0], (D, di), D ** -0.5, dt_),
+        "in_x": normal_init(ks[1], (D, di), D ** -0.5, dt_),
+        "in_B": normal_init(ks[2], (D, gn), D ** -0.5, dt_),
+        "in_C": normal_init(ks[3], (D, gn), D ** -0.5, dt_),
+        "in_dt": normal_init(ks[4], (D, nh), D ** -0.5, dt_),
+        "conv_x_w": normal_init(ks[5], (s.d_conv, di), 0.1, jnp.float32),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_B_w": normal_init(jax.random.fold_in(ks[5], 1), (s.d_conv, gn),
+                                0.1, jnp.float32),
+        "conv_B_b": jnp.zeros((gn,), jnp.float32),
+        "conv_C_w": normal_init(jax.random.fold_in(ks[5], 2), (s.d_conv, gn),
+                                0.1, jnp.float32),
+        "conv_C_b": jnp.zeros((gn,), jnp.float32),
+        "A_log": jnp.log(a0),
+        "Dskip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": normal_init(jax.random.fold_in(ks[5], 3), (di, D),
+                                di ** -0.5, dt_),
+    }
+    lg = {
+        "in_z": ("embed", "ssm_inner"), "in_x": ("embed", "ssm_inner"),
+        "in_B": ("embed", None), "in_C": ("embed", None),
+        "in_dt": ("embed", None),
+        "conv_x_w": (None, "ssm_inner"), "conv_x_b": ("ssm_inner",),
+        "conv_B_w": (None, None), "conv_B_b": (None,),
+        "conv_C_w": (None, None), "conv_C_b": (None,),
+        "A_log": ("noshard",), "Dskip": ("noshard",), "dt_bias": ("noshard",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return p, lg
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv + silu. x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+              for i in range(W))
+    return jax.nn.silu(out + b).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (reference / XLA path).
+
+    x: (B,L,H,P) inputs NOT yet multiplied by dt;
+    dt: (B,L,H) post-softplus; A: (H,) negative; Bm, Cm: (B,L,G,N).
+    Returns y: (B,L,H,P), final_state: (B,H,P,N), all f32.
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    nc = L // Q
+    assert L % Q == 0, (L, Q)
+
+    xd = (x * dt[..., None]).astype(jnp.float32)               # dt-scaled input
+    dA = dt * A                                                # (B,L,H) negative
+    xd = jnp.moveaxis(xd.reshape(Bsz, nc, Q, H, P), 1, 0)      # (nc,B,Q,H,P)
+    dA = jnp.moveaxis(dA.reshape(Bsz, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.astype(jnp.float32).reshape(Bsz, nc, Q, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.astype(jnp.float32).reshape(Bsz, nc, Q, G, N), 1, 0)
+    xd = shard(xd, None, "batch", None, "ssm_inner", None)
+    dA = shard(dA, None, "batch", None, "ssm_inner")
+
+    def chunk_step(state, xs):
+        xq, dAq, Bq, Cq = xs                                   # per-chunk
+        cum = jnp.cumsum(dAq, axis=1)                          # (B,Q,H)
+        # intra-chunk: Lmat[q,k] = exp(cum_q - cum_k), q >= k
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,K,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        Lmat = shard(Lmat, "batch", None, None, "ssm_inner")
+        if rep > 1:
+            Bh = jnp.repeat(Bq, rep, axis=2)                   # (B,Q,H,N)
+            Ch = jnp.repeat(Cq, rep, axis=2)
+        else:
+            Bh = jnp.broadcast_to(Bq, (*Bq.shape[:2], H, N))
+            Ch = jnp.broadcast_to(Cq, (*Cq.shape[:2], H, N))
+        scores = jnp.einsum("bqhn,bkhn->bqkh", Ch, Bh) * Lmat
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores, xq)
+        # inter-chunk: contribution of the incoming state
+        decay_in = jnp.exp(cum)                                # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", Ch, state) * decay_in[..., None]
+        # state update for the next chunk
+        tot = cum[:, -1, :]                                    # (B,H)
+        decay_out = jnp.exp(tot[:, None, :] - cum)             # (B,Q,H)
+        add = jnp.einsum("bqhn,bqh,bqhp->bhpn", Bh, decay_out, xq)
+        state = state * jnp.exp(tot)[..., None, None] + add
+        state = shard(state, "batch", "ssm_inner", None, None)
+        return state, shard(y_diag + y_off, "batch", None, "ssm_inner", None)
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(chunk_step, state0, (xd, dA, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, P)
+    return y, final
+
+
+def _project(p, cfg, x):
+    """x: (B, L, D) -> z, xr, Br, Cr, dt (pre-conv, pre-softplus)."""
+    z = shard(jnp.einsum("bld,dk->blk", x, p["in_z"]),
+              "batch", "act_seq", "ssm_inner")
+    xr = shard(jnp.einsum("bld,dk->blk", x, p["in_x"]),
+               "batch", "act_seq", "ssm_inner")
+    Br = jnp.einsum("bld,dk->blk", x, p["in_B"])
+    Cr = jnp.einsum("bld,dk->blk", x, p["in_C"])
+    dt = jnp.einsum("bld,dk->blk", x, p["in_dt"])
+    return z, xr, Br, Cr, dt
+
+
+def mamba2_fwd(p, cfg, x):
+    """Train/prefill path. x: (B, L, D).
+
+    Returns (y (B,L,D), (conv_tails, final_state)) so a prefill can seed the
+    decode caches; conv_tails = (x, B, C) pre-conv tails of length W-1.
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    W = s.d_conv
+    z, xr, Br, Cr, dt = _project(p, cfg, x)
+    tails = (xr[:, -(W - 1):, :], Br[:, -(W - 1):, :], Cr[:, -(W - 1):, :])
+    xc = causal_conv1d(xr, p["conv_x_w"], p["conv_x_b"])
+    Bc = causal_conv1d(Br, p["conv_B_w"], p["conv_B_b"])
+    Cc = causal_conv1d(Cr, p["conv_C_w"], p["conv_C_b"])
+    xs = xc.reshape(*xc.shape[:2], nh, s.head_dim)
+    Bm = Bc.reshape(*Bc.shape[:2], s.n_groups, s.d_state)
+    Cm = Cc.reshape(*Cc.shape[:2], s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(xs.astype(jnp.float32), dtv, A, Bm, Cm,
+                                 s.chunk_size)
+    y = y + p["Dskip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], di)
+    y = shard(y, "batch", "act_seq", "ssm_inner")
+    y = rmsnorm({"scale": p["norm"]},
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bld,dk->blk", y, p["out_proj"])
+    return shard(out, "batch", "act_seq", None), (tails, final_state)
+
+
+def _conv_step(buf, new, w, b):
+    """buf: (B, W-1, C) raw history; new: (B, C). Returns (act, new_buf)."""
+    full = jnp.concatenate([buf, new[:, None, :].astype(buf.dtype)], axis=1)
+    out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w) + b
+    return jax.nn.silu(out), full[:, 1:]
+
+
+def mamba2_decode(p, cfg, x, conv_state, ssm_state):
+    """O(1) decode step.
+
+    x: (B, 1, D); conv_state: dict of (x, B, C) tails; ssm_state (B,H,P,N) f32.
+    Returns (y (B,1,D), conv_state, ssm_state).
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    z, xr, Br, Cr, dt = _project(p, cfg, x)
+    z, xr, Br, Cr, dt = (t[:, 0] for t in (z, xr, Br, Cr, dt))
+    xc, cx = _conv_step(conv_state["x"], xr, p["conv_x_w"], p["conv_x_b"])
+    Bc, cb = _conv_step(conv_state["B"], Br, p["conv_B_w"], p["conv_B_b"])
+    Cc, cc = _conv_step(conv_state["C"], Cr, p["conv_C_w"], p["conv_C_b"])
+    new_conv = {"x": cx, "B": cb, "C": cc}
+    xs = xc.reshape(-1, nh, s.head_dim)
+    Bm = Bc.reshape(-1, s.n_groups, s.d_state)
+    Cm = Cc.reshape(-1, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)           # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dtv * A)                                          # (B,H)
+    ssm_state = (ssm_state * dA[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dtv,
+                              xs.astype(jnp.float32), Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch)
+    y = y + p["Dskip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(-1, di)
+    y = rmsnorm({"scale": p["norm"]},
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bd,dk->bk", y, p["out_proj"])[:, None, :]
+    return shard(out, "batch", "act_seq", None), new_conv, ssm_state

@@ -1,0 +1,1 @@
+from repro.monitoring.metrics import MetricsStore, SimClock, RetrievalModel  # noqa: F401

@@ -1,0 +1,106 @@
+"""Prometheus stand-in: per-node ring-buffer time-series store.
+
+The paper scrapes metrics every 200 ms and finds state *retrieval* to be
+89.2% of the total prediction delay (its Fig. 9/10).  We keep the 200 ms
+resolution and model the retrieval latency explicitly (calibrated to the
+shape of Fig. 10: grows with #metrics and window length), so the paper's
+(w*, r*, k*) trade-off (Eq. 4) is reproducible.  The *fast path*
+(``query_window(..., fast=True)``) bypasses the modeled HTTP/TSDB latency —
+that's the beyond-paper optimization of serving windows zero-copy from the
+in-process ring buffer (quantified in benchmarks/bench_breakdown.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+SCRAPE_INTERVAL = 0.2     # 200 ms, as in the paper
+
+
+class SimClock:
+    """Deterministic simulated clock (benchmarks) or wall clock (serving)."""
+
+    def __init__(self, simulated: bool = True, t0: float = 0.0):
+        self.simulated = simulated
+        self._t = t0
+
+    def now(self) -> float:
+        return self._t if self.simulated else time.time()
+
+    def advance(self, dt: float):
+        if self.simulated:
+            self._t += dt
+        else:  # pragma: no cover - wall clock
+            time.sleep(dt)
+
+
+@dataclass
+class RetrievalModel:
+    """t_state(k, w) latency model, calibrated so that with a mean RTT of
+    10 s: (w=5s, k=100) -> <20% RTT and (w=60s, k=100) -> ~35% RTT (paper
+    Fig. 10), linear in k and in k*w like a range query."""
+    base: float = 0.15            # fixed HTTP/TSDB round trip (s)
+    per_metric: float = 0.012     # per-series overhead (s)
+    per_point: float = 3.9e-5     # per returned sample (s)
+
+    def delay(self, k: int, window_s: float) -> float:
+        points = k * window_s / SCRAPE_INTERVAL
+        return self.base + self.per_metric * k + self.per_point * points
+
+
+class MetricsStore:
+    """Ring buffers (one per metric) at 200 ms resolution."""
+
+    def __init__(self, capacity_s: float = 600.0, clock: Optional[SimClock] = None,
+                 retrieval: Optional[RetrievalModel] = None):
+        self.capacity = int(capacity_s / SCRAPE_INTERVAL)
+        self.clock = clock or SimClock()
+        self.retrieval = retrieval or RetrievalModel()
+        self._buf: Dict[str, np.ndarray] = {}
+        self._head = 0            # global write index (same for all metrics)
+        self._t_head = 0.0
+        self.query_time_spent = 0.0   # accumulated modeled retrieval delay
+
+    def register(self, names: Sequence[str]):
+        for n in names:
+            if n not in self._buf:
+                self._buf[n] = np.zeros((self.capacity,), np.float32)
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(self._buf)
+
+    def scrape(self, values: Dict[str, float], t: Optional[float] = None):
+        """Record one 200 ms scrape of all metrics."""
+        self.register(list(values))
+        i = self._head % self.capacity
+        for n, buf in self._buf.items():
+            buf[i] = np.float32(values.get(n, buf[(i - 1) % self.capacity]))
+        self._head += 1
+        self._t_head = self.clock.now() if t is None else t
+
+    def query_window(self, names: Sequence[str], window_s: float,
+                     end_t: Optional[float] = None, fast: bool = False):
+        """Return (k, w_points) array for the window ending at end_t.
+
+        fast=False models the Prometheus range-query latency (added to the
+        sim clock and accounted in query_time_spent); fast=True is the
+        zero-copy in-process path (beyond-paper).
+        Returns (array, modeled_delay_seconds).
+        """
+        w_points = max(1, int(round(window_s / SCRAPE_INTERVAL)))
+        w_points = min(w_points, self.capacity)
+        out = np.zeros((len(names), w_points), np.float32)
+        avail = min(w_points, self._head)      # zero-pad pre-history
+        if avail > 0:
+            idx = (np.arange(self._head - avail, self._head)) % self.capacity
+            for j, n in enumerate(names):
+                if n in self._buf:
+                    out[j, w_points - avail:] = self._buf[n][idx]
+        delay = 0.0 if fast else self.retrieval.delay(len(names), window_s)
+        self.query_time_spent += delay
+        self.clock.advance(delay)
+        return out, delay

@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights, bias correction, global-norm clipping,
+warmup+cosine schedule.  Pure pytree functions (no optax offline).
+
+ZeRO-1 / FSDP integration is done by the *caller* through sharding
+constraints: optimizer-state leaves are annotated with the `opt_embed`
+logical axis (sharded over the dp axis), so XLA reduce-scatters gradients
+into the update and all-gathers fresh bf16 params out — exactly the ZeRO-1
+collective schedule, derived from annotations.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def lr_schedule(tcfg) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    base, warm, total = tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warmup = base * step / max(warm, 1)
+        t = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        cosine = 0.5 * base * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warm, warmup, cosine)
+
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params, master_fp32: bool = True,
+               moment_dtype: str = "float32"):
+    """master_fp32=False keeps the master copy in the param dtype (bf16) and
+    moment_dtype="bfloat16" stores Adam moments reduced-precision (the
+    8-bit-optimizer idea at 16 bits) — both needed when 14 B/param of
+    optimizer state cannot fit HBM (235B on v5e); updates still run fp32."""
+    mdt = jnp.dtype(moment_dtype)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), t)
+    if master_fp32:
+        master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    else:
+        master = jax.tree.map(lambda x: x, params)
+    return {"master": master, "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms / biases / 1-d params."""
+    return not any(k in path for k in ("norm", "scale", "bias", "A_log",
+                                       "dt_bias", "Dskip"))
+
+
+def adamw_update(params, grads, opt, tcfg, *, constrain_opt=None,
+                 constrain_param=None, eps: float = 1e-8):
+    """One AdamW step.  Returns (new_params_bf16, new_opt, metrics).
+
+    constrain_opt / constrain_param: optional fns(tree)->tree applying
+    sharding constraints (ZeRO-1: opt-sharded vs param-sharded layouts).
+    """
+    ident = lambda t: t
+    c_opt = constrain_opt or ident
+    c_par = constrain_param or ident
+    step = opt["step"] + 1
+    lr = lr_schedule(tcfg)(step)
+
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads = c_opt(grads)                       # ZeRO-1: reduce-scatter here
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2, wd = tcfg.beta1, tcfg.beta2, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(kp, mst, g, m, v):
+        mf = mst.astype(jnp.float32)
+        mdt = m.dtype
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if _decay_mask(jax.tree_util.keystr(kp)):
+            delta = delta + wd * mf
+        return ((mf - lr * delta).astype(mst.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    flat = jax.tree_util.tree_leaves_with_path(opt["master"])
+    g_l = jax.tree.leaves(grads)
+    m_l = jax.tree.leaves(opt["m"])
+    v_l = jax.tree.leaves(opt["v"])
+    out = [upd(kp, mst, g, m, v)
+           for (kp, mst), g, m, v in zip(flat, g_l, m_l, v_l)]
+    treedef = jax.tree.structure(opt["master"])
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_master, new_m, new_v = c_opt(new_master), c_opt(new_m), c_opt(new_v)
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = c_par(jax.tree.map(lambda x, dt: x.astype(dt),
+                                    new_master, dtypes))
+    new_opt = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_opt, metrics

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_to_pspec,
+    shard,
+    specs_for_tree,
+)

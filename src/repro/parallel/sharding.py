@@ -1,0 +1,149 @@
+"""Logical-axis sharding (t5x-style, minimal).
+
+Model code annotates activations/params with *logical* axis names; a rule set
+maps logical names onto physical mesh axes.  Rules live in a context variable
+so the same model code lowers for 1-device smoke tests (no rules -> no-ops)
+and for the 512-chip production mesh (rules active -> GSPMD constraints).
+
+Logical axes used across the framework:
+
+  batch      global batch                 -> ("pod","data") / ("data",)
+  act_seq    activation sequence dim      -> None (kept local)
+  kv_seq     KV-cache sequence dim        -> "model" (sequence-parallel cache)
+  heads      q attention heads            -> "model"
+  kv_heads   kv heads (GQA, small)        -> None (replicated)
+  mlp        FFN hidden                   -> "model"
+  vocab      vocabulary                   -> "model"
+  experts    MoE experts                  -> "model"  (expert parallelism)
+  groups     MoE dispatch groups          -> dp axes
+  embed      weight d_model dim           -> "data" when FSDP else None
+  ssm_inner  mamba inner channels         -> "model"
+  layers     stacked-layer leading dim    -> None
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Physical = Union[None, str, Tuple[str, ...]]
+
+
+class AxisRules:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Physical]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def physical(self, logical: Optional[str]) -> Physical:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"no rule for logical axis {logical!r}")
+        return self.rules[logical]
+
+
+_ACTIVE: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _ACTIVE.get()
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     rules: Optional[AxisRules] = None) -> P:
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    parts, used = [], set()
+    for name in axes:
+        phys = rules.physical(name)
+        if isinstance(phys, tuple):
+            phys = tuple(a for a in phys if a not in used)
+            used.update(phys)
+            parts.append(phys if phys else None)
+        else:
+            if phys in used:
+                phys = None
+            if phys is not None:
+                used.add(phys)
+            parts.append(phys)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation ``x`` to the sharding implied by logical axes.
+
+    No-op outside an ``axis_rules`` context (single-device smoke tests).
+    Uneven dims are fine here: GSPMD pads intermediates.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert x.ndim == len(axes), (x.shape, axes)
+    spec = logical_to_pspec(axes, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def specs_for_tree(logical_tree, rules: AxisRules):
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    Argument shardings must divide evenly, so this is used for params /
+    caches / inputs whose dims were padded at config-resolution time.
+    """
+    return jax.tree.map(
+        lambda axes: NamedSharding(rules.mesh, logical_to_pspec(axes, rules)),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+# ----------------------------------------------------------------------
+def make_rules(mesh: Mesh, *, mode: str, fsdp: bool, zero1: bool = True,
+               dp_axes: Tuple[str, ...] = ("data",)) -> AxisRules:
+    """Build the rule set for ``mode`` in {"train","prefill","decode"}.
+
+    fsdp:  shard weight `embed` dims over the data axis (params + grads);
+    zero1: shard *optimizer state* over the data axis even when params are
+           replicated (applied in the optimizer, uses the "opt_embed" rule).
+    """
+    rules: Dict[str, Physical] = {
+        "batch": dp_axes,
+        "act_seq": None,
+        # sequence-parallel residual stream (Megatron-SP): the per-layer scan
+        # carry is stored seq-sharded over "model" so remat's saved
+        # activations shrink by the TP degree, and row-parallel all-reduces
+        # become reduce-scatters.  Applies to train AND prefill (full-seq);
+        # decode activations are a single position (nothing to shard).
+        "residual_seq": "model" if mode in ("train", "prefill") else None,
+        "kv_seq": "model",
+        "heads": "model",
+        "kv_heads": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "groups": dp_axes,
+        "layers": None,
+        "ssm_inner": "model",
+        "embed": "data" if fsdp else None,
+        "opt_embed": "data" if (fsdp or zero1) else None,
+        "noshard": None,
+    }
+    if mode in ("decode", "prefill"):
+        # no optimizer in serving; FSDP-style 2D weights only if requested
+        rules["opt_embed"] = rules["embed"]
+    return AxisRules(mesh, rules)

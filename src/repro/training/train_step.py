@@ -1,0 +1,104 @@
+"""Train-step builder: value_and_grad -> clip -> AdamW, with optional
+microbatch gradient accumulation and ZeRO-1/FSDP sharding constraints.
+
+The same builder serves (a) single-device smoke tests (rules=None) and
+(b) the 512-chip dry-run (rules active, jit in_shardings from specs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.models import model as M
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.parallel.sharding import AxisRules, logical_to_pspec
+
+
+def make_train_state(key, cfg, tcfg):
+    params = M.init_params(key, cfg)
+    return {"params": params,
+            "opt": adamw_init(params, getattr(tcfg, "master_fp32", True),
+                              getattr(tcfg, "moment_dtype", "float32"))}
+
+
+def _constrainer(logical_tree, rules: Optional[AxisRules], swap=None):
+    """Build fn(tree)->tree applying NamedSharding constraints per leaf."""
+    if rules is None:
+        return None
+
+    def sub(axes):
+        if swap:
+            axes = tuple(swap.get(a, a) for a in axes)
+        return axes
+
+    specs = jax.tree.map(
+        lambda axes: NamedSharding(rules.mesh, logical_to_pspec(sub(axes),
+                                                                rules)),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+    def constrain(tree):
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, specs)
+
+    return constrain
+
+
+def make_train_step(cfg, tcfg, rules: Optional[AxisRules] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    logical = M.params_logical(cfg)
+    c_par = _constrainer(logical, rules)
+    c_opt = _constrainer(logical, rules, swap={"embed": "opt_embed"})
+
+    def loss_fn(params, batch):
+        return M.train_forward(params, cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        n = tcfg.microbatches
+        mb = jax.tree.map(
+            lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            if c_opt is not None:          # accumulate in the sharded layout
+                grads = c_opt(grads)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if getattr(tcfg, "unroll_microbatches", False):
+            carry = (zeros, 0.0)
+            for i in range(n):
+                carry, metrics = body(carry,
+                                      jax.tree.map(lambda x: x[i], mb))
+            grads, loss_sum = carry
+        else:
+            (grads, loss_sum), metrics = jax.lax.scan(body, (zeros, 0.0), mb)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return loss_sum / n, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], tcfg,
+            constrain_opt=c_opt, constrain_param=c_par)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

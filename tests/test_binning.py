@@ -1,0 +1,69 @@
+"""FD-rule dynamic balancing — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.binning import BalancedDataset, freedman_diaconis_bins
+
+
+def test_fd_rule_matches_numpy():
+    rng = np.random.default_rng(0)
+    v = rng.lognormal(0, 0.5, size=1000)
+    nb, edges = freedman_diaconis_bins(v)
+    q75, q25 = np.percentile(v, [75, 25])
+    h = 2 * (q75 - q25) / 1000 ** (1 / 3)
+    assert abs((edges[1] - edges[0]) - h) < 1e-9
+    assert nb == int(np.ceil((v.max() - v.min()) / h))
+
+
+def test_case1_keeps_everything():
+    ds = BalancedDataset(c_max=5)
+    keep = ds.add_batch([1.0, 2.0, 3.0, 100.0])
+    assert keep.all()
+    assert len(ds) == 4
+
+
+def test_skewed_stream_is_rebalanced():
+    ds = BalancedDataset(c_max=10, seed=1)
+    rng = np.random.default_rng(0)
+    ds.add_batch(rng.uniform(0, 10, 50))
+    for _ in range(20):
+        ds.add_batch(rng.normal(5.0, 0.1, 100))   # heavily skewed arrivals
+    assert ds.reduction > 0.5
+    # rare values must still get through
+    kept = ds.add_batch([42.0])
+    assert kept.all()
+
+
+def test_always_keeps_at_least_one_when_full():
+    ds = BalancedDataset(c_max=1)
+    ds.add_batch([1.0, 1.1, 1.2])
+    keep = ds.add_batch([1.05, 1.15])
+    assert keep.sum() >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(hst.lists(hst.floats(min_value=0.01, max_value=100.0,
+                            allow_nan=False), min_size=1, max_size=60),
+       hst.lists(hst.floats(min_value=0.01, max_value=100.0,
+                            allow_nan=False), min_size=1, max_size=60))
+def test_property_add_only_and_lengths(first, second):
+    ds = BalancedDataset(c_max=8)
+    k1 = ds.add_batch(first)
+    assert k1.all()                         # case 1: keep all
+    n1 = len(ds)
+    k2 = ds.add_batch(second)
+    assert len(ds) == n1 + int(k2.sum())    # add-only (never drops old)
+    assert ds.n_seen == len(first) + len(second)
+    assert 0 <= ds.reduction <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(hst.integers(min_value=2, max_value=40),
+       hst.integers(min_value=1, max_value=10))
+def test_property_payload_alignment(n, c_max):
+    ds = BalancedDataset(c_max=c_max)
+    rtts = np.linspace(1, 10, n)
+    ds.add_batch(rtts, [f"p{i}" for i in range(n)])
+    ds.add_batch(rtts + 0.5, [f"q{i}" for i in range(n)])
+    assert len(ds.payloads()) == len(ds.rtts)

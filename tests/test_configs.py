@@ -1,0 +1,62 @@
+"""Architecture configs: registry, published param counts, padding rules."""
+import pytest
+
+from repro.configs.base import SHAPES, available_archs, get_config, supported_shapes
+
+EXPECTED_PARAMS = {  # published sizes, +/-12% tolerance (analytic count)
+    "qwen2-vl-7b": 7.6e9,
+    "qwen3-moe-235b-a22b": 235e9,
+    "qwen3-moe-30b-a3b": 30e9,
+    "minicpm3-4b": 4e9,
+    "mistral-large-123b": 123e9,
+    "deepseek-67b": 67e9,
+    "qwen1.5-32b": 32e9,
+    "mamba2-1.3b": 1.3e9,
+    "zamba2-2.7b": 2.7e9,
+    "seamless-m4t-medium": 0.88e9,  # backbone (untied 256k-vocab embeddings dominate; conformer frontend is a stub)
+}
+
+
+def test_all_archs_registered():
+    archs = available_archs()
+    assert len(archs) == 10, archs
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expect = EXPECTED_PARAMS[arch]
+    assert abs(n - expect) / expect < 0.15, (arch, n, expect)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS))
+def test_resolve_padding_divisible(arch):
+    cfg = get_config(arch).resolve(tp=16, dp=16)
+    if cfg.family != "ssm":
+        assert cfg.padded_heads % 16 == 0
+    assert cfg.padded_vocab % 16 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    if cfg.num_kv_heads == cfg.num_heads and cfg.family != "ssm":
+        assert cfg.padded_kv == cfg.padded_heads
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.param_count(active_only=True)
+    assert 18e9 < active < 26e9, active   # A22B
+
+
+def test_shape_cells():
+    total = 0
+    skipped = 0
+    for a in available_archs():
+        cfg = get_config(a)
+        names = {s.name for s in supported_shapes(cfg)}
+        total += len(names)
+        skipped += len(SHAPES) - len(names)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+    assert total + skipped == 40

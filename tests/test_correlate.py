@@ -1,0 +1,76 @@
+"""Correlation battery vs scipy + property checks."""
+import numpy as np
+import pytest
+import scipy.stats as st
+
+from repro.core import correlate
+
+
+def _data(n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    lin = 2.0 * x + 0.1 * rng.standard_normal(n)
+    mono = np.exp(x) + 0.1 * rng.standard_normal(n)
+    quad = x ** 2 + 0.1 * rng.standard_normal(n)
+    noise = rng.standard_normal(n)
+    return x, lin, mono, quad, noise
+
+
+def test_pearson_matches_scipy():
+    x, lin, mono, quad, noise = _data()
+    X = np.stack([lin, mono, quad, noise])
+    ours = correlate.correlate_all(X, x, methods=("pearson",))["pearson"]
+    want = [abs(st.pearsonr(m, x)[0]) for m in X]
+    np.testing.assert_allclose(ours, want, atol=1e-4)
+
+
+def test_spearman_matches_scipy():
+    x, lin, mono, quad, noise = _data()
+    X = np.stack([lin, mono, noise])
+    ours = correlate.correlate_all(X, x, methods=("spearman",))["spearman"]
+    want = [abs(st.spearmanr(m, x)[0]) for m in X]
+    np.testing.assert_allclose(ours, want, atol=5e-3)
+
+
+def test_kendall_matches_scipy():
+    x, lin, mono, quad, noise = _data(n=300)
+    X = np.stack([lin, noise])
+    ours = correlate.correlate_all(X, x, methods=("kendall",))["kendall"]
+    want = [abs(st.kendalltau(m, x)[0]) for m in X]
+    np.testing.assert_allclose(ours, want, atol=2e-2)
+
+
+def test_distance_corr_detects_nonlinear():
+    x, lin, mono, quad, noise = _data()
+    X = np.stack([quad, noise])
+    d = correlate.correlate_all(X, x, methods=("distance",))["distance"]
+    # pearson misses x^2 (symmetric), distance correlation must not
+    p = correlate.correlate_all(X, x, methods=("pearson",))["pearson"]
+    assert d[0] > 0.3 and p[0] < 0.2
+    assert d[0] > d[1] + 0.2
+
+
+def test_mic_detects_nonlinear_and_bounded():
+    x, lin, mono, quad, noise = _data()
+    X = np.stack([lin, quad, noise])
+    m = correlate.correlate_all(X, x, methods=("mic",))["mic"]
+    assert np.all((m >= 0) & (m <= 1))
+    assert m[0] > 0.5            # strong linear
+    assert m[1] > m[2] + 0.15    # quadratic beats noise
+
+
+def test_all_scores_absolute_range():
+    x, lin, mono, quad, noise = _data(n=256)
+    X = np.stack([lin, -lin, mono, quad, noise])
+    out = correlate.correlate_all(X, x)
+    for name, v in out.items():
+        assert np.all(v >= 0) and np.all(v <= 1 + 1e-6), name
+
+
+def test_best_method_per_metric():
+    x, lin, mono, quad, noise = _data()
+    X = np.stack([lin, quad])
+    scores = correlate.correlate_all(X, x)
+    names, winner, vals = correlate.best_method_per_metric(scores)
+    assert len(winner) == 2
+    assert vals[0] > 0.9

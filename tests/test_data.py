@@ -1,0 +1,45 @@
+"""Data pipeline: determinism, learnable structure, prefetch."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticLMData, make_batch_iterator
+
+
+def test_deterministic():
+    d = SyntheticLMData(vocab_size=128, seed=1)
+    rng1 = np.random.default_rng(7)
+    rng2 = np.random.default_rng(7)
+    b1 = d.sample(rng1, 4, 16)
+    b2 = d.sample(rng2, 4, 16)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_labels_shifted():
+    d = SyntheticLMData(vocab_size=64, seed=0)
+    b = d.sample(np.random.default_rng(0), 2, 10)
+    assert b["tokens"].shape == (2, 10)
+    assert b["labels"].shape == (2, 10)
+
+
+def test_structure_is_learnable():
+    """bigram successors should cover most transitions (10% noise)."""
+    d = SyntheticLMData(vocab_size=64, seed=0, branching=4)
+    b = d.sample(np.random.default_rng(0), 64, 64)
+    tok, lab = b["tokens"], b["labels"]
+    hits = 0
+    total = 0
+    for i in range(tok.shape[0]):
+        for t in range(tok.shape[1]):
+            total += 1
+            if lab[i, t] in d.succ[tok[i, t]]:
+                hits += 1
+    assert hits / total > 0.8
+
+
+def test_prefetch_iterator():
+    d = SyntheticLMData(vocab_size=32, seed=0)
+    it = make_batch_iterator(d, batch=2, seq=8, seed=0)
+    b1 = next(it)
+    b2 = next(it)
+    assert b1["tokens"].shape == (2, 8)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    it.close()

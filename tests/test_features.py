@@ -1,0 +1,61 @@
+"""Feature extraction: batch vs rolling equivalence (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.features import (FEATURE_NAMES, RollingFeatures,
+                                 drop_redundant, extract_features,
+                                 select_feature_per_metric)
+
+
+def test_extract_features_shapes():
+    X = np.random.default_rng(0).standard_normal((5, 3, 20)).astype(np.float32)
+    F = np.asarray(extract_features(X))
+    assert F.shape == (5, 3, len(FEATURE_NAMES))
+    assert np.isfinite(F).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.lists(hst.floats(min_value=-50, max_value=50, allow_nan=False,
+                            width=32), min_size=8, max_size=64))
+def test_rolling_matches_batch(stream):
+    w = len(stream)
+    roll = RollingFeatures(window=w)
+    for v in stream:
+        roll.update(float(np.float32(v)))
+    got = roll.features()
+    want = np.asarray(extract_features(
+        np.asarray(stream, np.float32)[None, None, :]))[0, 0]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_rolling_window_eviction():
+    roll = RollingFeatures(window=4)
+    for v in [1, 2, 3, 4, 100]:
+        roll.update(float(v))
+    f = roll.features()
+    assert f[3] == 100.0        # max
+    assert f[2] == 2.0          # min (1 evicted)
+
+
+def test_select_feature_per_metric_prefers_informative():
+    rng = np.random.default_rng(0)
+    n, w = 200, 16
+    rtt = rng.uniform(1, 5, n).astype(np.float32)
+    informative = np.repeat(rtt[:, None], w, 1) + \
+        0.05 * rng.standard_normal((n, w)).astype(np.float32)
+    noise = rng.standard_normal((n, w)).astype(np.float32)
+    X = np.stack([informative, noise], axis=1)      # (n, 2, w)
+    feats = np.asarray(extract_features(X))
+    best, sel = select_feature_per_metric(feats, rtt)
+    c0 = abs(np.corrcoef(sel[:, 0], rtt)[0, 1])
+    c1 = abs(np.corrcoef(sel[:, 1], rtt)[0, 1])
+    assert c0 > 0.95 and c0 > c1
+
+
+def test_drop_redundant():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(300)
+    X = np.stack([a, a * 2 + 1e-3, rng.standard_normal(300)], axis=1)
+    kept = drop_redundant(X, scores=np.array([0.9, 0.8, 0.5]))
+    assert 0 in kept and 1 not in kept and 2 in kept

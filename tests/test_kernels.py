@@ -1,0 +1,86 @@
+"""Pallas kernels vs jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import gmm
+from repro.kernels.ssd import ssd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,bq,bk", [
+    (1, 128, 4, 4, 32, 64, 64),      # MHA
+    (2, 256, 8, 2, 64, 128, 128),    # GQA
+    (1, 128, 8, 1, 16, 32, 64),      # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, B, S, H, KV, D, bq, bk, causal):
+    q = jax.random.normal(KEY, (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,H,P,G,N,chunk", [
+    (1, 64, 2, 8, 1, 4, 16),
+    (2, 128, 4, 16, 2, 8, 32),
+    (1, 256, 8, 32, 1, 16, 64),
+])
+def test_ssd_sweep(dtype, B, L, H, P, G, N, chunk):
+    x = jax.random.normal(KEY, (B, L, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (B, L, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (H,)))
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 3), (B, L, G, N)).astype(dtype)
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 4), (B, L, G, N)).astype(dtype)
+    y, s = ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, sr = ref.ssd_ref(x, dt, A, Bm, Cm)
+    rt = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **rt)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), **rt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,blk", [
+    (2, 128, 4, 4, 32, 64), (1, 256, 8, 2, 64, 128), (3, 64, 8, 1, 16, 32),
+])
+def test_decode_attention_sweep(dtype, B, S, H, KV, D, blk):
+    q = jax.random.normal(KEY, (B, 1, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, D)).astype(dtype)
+    kl = jnp.minimum(jnp.arange(1, B + 1) * (S // 2), S).astype(jnp.int32)
+    out = decode_attention(q, k, v, kl, block=blk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,bc,bf,bd", [
+    (2, 64, 32, 48, 32, 16, 16), (4, 128, 64, 64, 64, 64, 32),
+    (1, 32, 16, 128, 32, 64, 16),
+])
+def test_gmm_sweep(dtype, E, C, D, F, bc, bf, bd):
+    x = jax.random.normal(KEY, (E, C, D)).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (E, D, F)).astype(dtype)
+    out = gmm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    want = ref.gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))

@@ -1,0 +1,81 @@
+"""Serving engine + Morpheus router."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.monitoring.metrics import SimClock
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import MorpheusRouter
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("deepseek-67b", smoke=True).resolve(tp=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(n, rng):
+    return [Request(rid=i, tokens=rng.integers(0, 100, size=8),
+                    max_new_tokens=4) for i in range(n)]
+
+
+def test_engine_serves_wave(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=32, clock=clock)
+    rng = np.random.default_rng(0)
+    for r in _reqs(5, rng):
+        eng.submit(r)
+    done = eng.step_wave()
+    assert len(done) == 3
+    assert eng.pending() == 2
+    for r in done:
+        assert r.output is not None and len(r.output) == 4
+        assert r.rtt is not None and r.rtt >= 0
+
+
+def test_engine_exports_metrics(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=32, clock=clock,
+                        slowdown=0.01)
+    rng = np.random.default_rng(1)
+    for r in _reqs(2, rng):
+        eng.submit(r)
+    eng.step_wave()
+    names = eng.store.names
+    assert "queue_depth" in names and "token_rate" in names
+
+
+def test_router_perf_aware_avoids_slow_replica(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    fast = ServingEngine(cfg, params, node="fast", max_batch=2, max_seq=32,
+                         clock=clock, slowdown=0.0)
+    slow = ServingEngine(cfg, params, node="slow", max_batch=2, max_seq=32,
+                         clock=clock, slowdown=0.5)
+    router = MorpheusRouter([fast, slow], policy="perf_aware")
+    router.kb.put("serve", "fast", 0.0, 0.1)
+    router.kb.put("serve", "slow", 0.0, 5.0)
+    rng = np.random.default_rng(2)
+    for r in _reqs(4, rng):
+        router.route(r)
+    assert router.routed.count(0) >= 3       # mostly the fast replica
+
+
+def test_router_round_robin_spreads(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(3)]
+    router = MorpheusRouter(reps, policy="round_robin")
+    rng = np.random.default_rng(3)
+    for r in _reqs(6, rng):
+        router.route(r)
+    assert router.routed == [0, 1, 2, 0, 1, 2]
+    done = router.drain()
+    assert len(done) == 6

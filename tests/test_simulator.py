@@ -1,0 +1,46 @@
+"""§6 load-balancing simulation sanity + paper-claim checks."""
+import numpy as np
+import pytest
+
+from repro.core.simulator import (SimConfig, run_sim, scheduling_inefficiency,
+                                  sweep_accuracy)
+
+FAST = SimConfig(n_trials=40, n_requests=150)
+
+
+def test_oracle_is_best():
+    for pol in ("perf_aware", "round_robin", "random"):
+        r = scheduling_inefficiency(FAST, pol)
+        assert r["inefficiency_pct"] > -2.0, (pol, r)
+
+
+def test_perf_aware_beats_baselines():
+    pa = scheduling_inefficiency(FAST, "perf_aware")["inefficiency_pct"]
+    rr = scheduling_inefficiency(FAST, "round_robin")["inefficiency_pct"]
+    rd = scheduling_inefficiency(FAST, "random")["inefficiency_pct"]
+    assert pa < rr and pa < rd, (pa, rr, rd)
+
+
+def test_accuracy_monotone_trend():
+    """Paper Fig. 11-1: inefficiency decreases with accuracy and flattens
+    near p≈0.8 (we assert the coarse trend, not exact values)."""
+    rows = sweep_accuracy(FAST, accuracies=[0.0, 0.4, 0.8, 1.0])
+    vals = [r[1]["inefficiency_pct"] for r in rows]
+    assert vals[0] > vals[2], vals          # low accuracy is worse
+    assert abs(vals[2] - vals[3]) < max(3.0, 0.5 * abs(vals[0])), vals
+
+
+def test_determinism():
+    a = run_sim(FAST, "perf_aware")
+    b = run_sim(FAST, "perf_aware")
+    np.testing.assert_array_equal(a["chosen"], b["chosen"])
+
+
+def test_heterogeneity_hurts_static_policies_more():
+    lo = SimConfig(**{**FAST.__dict__, "heterogeneity": 0.05})
+    hi = SimConfig(**{**FAST.__dict__, "heterogeneity": 0.8})
+    rr_lo = scheduling_inefficiency(lo, "round_robin")["inefficiency_pct"]
+    rr_hi = scheduling_inefficiency(hi, "round_robin")["inefficiency_pct"]
+    pa_hi = scheduling_inefficiency(hi, "perf_aware")["inefficiency_pct"]
+    assert rr_hi > pa_hi
+    assert rr_hi > rr_lo * 0.8   # static policy degrades (allow noise)

@@ -1,0 +1,69 @@
+"""Predictor model zoo: every model learns a learnable target."""
+import numpy as np
+import pytest
+
+from repro.core import zoo
+
+
+def _tabular(n=400, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, d)).astype(np.float32)
+    y = (2 * X[:, 0] + np.sin(3 * X[:, 1]) + 0.5 * X[:, 2] ** 2
+         + 0.05 * rng.standard_normal(n)).astype(np.float32)
+    y = (y - y.min()) / (y.max() - y.min())
+    return X, y
+
+
+def _seq(n=200, k=3, w=16, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, k, w)).astype(np.float32)
+    y = X[:, 0].mean(-1) + 0.3 * X[:, 1, -1]
+    y = (y - y.min()) / (y.max() - y.min())
+    return X.astype(np.float32), y.astype(np.float32)
+
+
+@pytest.mark.parametrize("name", sorted(zoo.NONSEQ_MODELS))
+def test_nonseq_models_learn(name):
+    X, y = _tabular()
+    model = zoo.NONSEQ_MODELS[name]()
+    model.fit(X[:300], y[:300])
+    pred = np.asarray(model.predict(X[300:]))
+    rmse = float(np.sqrt(np.mean((pred - y[300:]) ** 2)))
+    base = float(np.sqrt(np.mean((y[300:].mean() - y[300:]) ** 2)))
+    assert rmse < 0.8 * base, (name, rmse, base)
+
+
+@pytest.mark.parametrize("name", sorted(zoo.SEQ_MODELS))
+def test_seq_models_learn(name):
+    X, y = _seq()
+    model = zoo.SEQ_MODELS[name]()
+    model.fit(X[:150], y[:150])
+    pred = np.asarray(model.predict(X[150:]))
+    rmse = float(np.sqrt(np.mean((pred - y[150:]) ** 2)))
+    base = float(np.sqrt(np.mean((y[150:].mean() - y[150:]) ** 2)))
+    assert rmse < 0.9 * base, (name, rmse, base)
+
+
+def test_partial_fit_improves_or_holds():
+    X, y = _tabular(seed=1)
+    m = zoo.FNN(epochs=100)
+    m.fit(X[:200], y[:200])
+    r1 = float(np.sqrt(np.mean((np.asarray(m.predict(X[300:])) - y[300:]) ** 2)))
+    m.partial_fit(X[200:300], y[200:300])
+    r2 = float(np.sqrt(np.mean((np.asarray(m.predict(X[300:])) - y[300:]) ** 2)))
+    assert r2 < r1 * 1.3
+
+
+def test_single_sample_predict():
+    X, y = _tabular()
+    m = zoo.LinearRegression().fit(X, y)
+    out = np.asarray(m.predict(X[0]))
+    assert out.shape == (1,)
+
+
+def test_table2_candidates():
+    assert zoo.candidates_for("pearson", 500) == ["lr", "xgb"]
+    assert "svm" in zoo.candidates_for("spearman", 500)
+    assert zoo.candidates_for("mic", 500) == ["xgb"]
+    assert "fnn" in zoo.candidates_for("distance", 5_000)
+    assert "rnn" in zoo.candidates_for("mic", 20_000)
