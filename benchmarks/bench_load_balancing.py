@@ -1,13 +1,20 @@
-"""Paper Fig. 11 (all four subplots): scheduling inefficiency vs prediction
-accuracy; inefficiency + resource waste vs replica count; inefficiency vs
-heterogeneity.  200 trials as in the paper."""
+"""Paper Fig. 11 (all four subplots) + beyond-paper scenarios, all
+dispatched through the shared policy engine (``repro.core.balancer
+.POLICIES``) — the same classes the simulator and the live router use.
+
+Rows: scheduling inefficiency vs prediction accuracy; inefficiency +
+resource waste vs replica count; inefficiency vs heterogeneity;
+per-policy registry sweep with p99 tails; hedging / stale-prediction /
+node-churn scenario deltas.  200 trials as in the paper."""
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 
-from repro.core.simulator import (SimConfig, scheduling_inefficiency,
-                                  sweep_accuracy, sweep_heterogeneity,
-                                  sweep_replicas)
+from repro.core.balancer import POLICIES
+from repro.core.simulator import (SimConfig, run_sim,
+                                  scheduling_inefficiency, sweep_accuracy,
+                                  sweep_heterogeneity, sweep_replicas)
 
 BASE = SimConfig(n_trials=200, n_requests=300)
 
@@ -22,7 +29,8 @@ def run():
 
     t0 = time.perf_counter()
     reps = sweep_replicas(BASE, counts=(1, 2, 4, 8))
-    us = (time.perf_counter() - t0) * 1e6 / 12
+    n_cells = sum(len(s) for s in reps.values())
+    us = (time.perf_counter() - t0) * 1e6 / n_cells
     for pol, series in reps.items():
         rows.append((f"fig11_2_ineff_vs_replicas[{pol}]", us, ";".join(
             f"r{c}={r['inefficiency_pct']:.1f}%" for c, r in series)))
@@ -31,8 +39,37 @@ def run():
 
     t0 = time.perf_counter()
     het = sweep_heterogeneity(BASE, hs=(0.0, 0.3, 0.6, 1.0))
-    us = (time.perf_counter() - t0) * 1e6 / 12
+    n_cells = sum(len(s) for s in het.values())
+    us = (time.perf_counter() - t0) * 1e6 / n_cells
     for pol, series in het.items():
         rows.append((f"fig11_4_ineff_vs_heterogeneity[{pol}]", us, ";".join(
             f"h{h:.1f}={r['inefficiency_pct']:.1f}%" for h, r in series)))
+
+    # every registered policy vs the oracle baseline (which would be a
+    # tautological 0% row against itself, so it is skipped)
+    for pol in sorted(POLICIES):
+        if pol == "oracle":
+            continue
+        t0 = time.perf_counter()
+        r = scheduling_inefficiency(BASE, pol)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"policy_registry[{pol}]", us,
+                     f"ineff={r['inefficiency_pct']:.1f}%;"
+                     f"p99={r['p99_inefficiency_pct']:.1f}%;"
+                     f"waste={r['resource_waste_pct']:.1f}%"))
+
+    # beyond-paper scenarios on the same engine
+    scen = {
+        "hedged": replace(BASE, arrival_rate=4.0, hedge_factor=0.7),
+        "stale_pred_50s": replace(BASE, prediction_lag_s=50.0),
+        "node_churn": replace(BASE, churn=(10.0, 60.0)),
+    }
+    for name, cfg in scen.items():
+        t0 = time.perf_counter()
+        res = run_sim(cfg, "perf_aware")
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"scenario[{name}]", us,
+                     f"mean={res['mean_rtt'].mean():.2f}s;"
+                     f"p99={res['p99_rtt'].mean():.2f}s;"
+                     f"hedged={res['n_hedged']}"))
     return rows

@@ -1,23 +1,59 @@
-"""Reproduce the paper's Fig. 11 (all four subplots) as text tables.
+"""Reproduce the paper's Fig. 11 (all four subplots) as text tables,
+plus the beyond-paper scenarios the unified policy engine supports.
 
 Run:  PYTHONPATH=src python examples/lb_simulation.py [--trials 200]
+      PYTHONPATH=src python examples/lb_simulation.py --smoke
+The --smoke mode runs every registered policy (and the hedging / stale /
+churn scenarios) on a tiny config — CI uses it to catch policy/simulator
+drift on every PR.
 """
 import argparse
+from dataclasses import replace
 
-from repro.core.simulator import (SimConfig, sweep_accuracy,
+from repro.core.balancer import POLICIES
+from repro.core.simulator import (SimConfig, run_sim, sweep_accuracy,
                                   sweep_heterogeneity, sweep_replicas)
+
+
+def smoke() -> None:
+    """Fast sweep of every registered policy + scenario variants."""
+    cfg = SimConfig(n_trials=8, n_requests=50)
+    print("== policy-engine smoke (8 trials x 50 requests) ==")
+    for pol in sorted(POLICIES):
+        res = run_sim(cfg, pol)
+        print(f"  {pol:12s} mean={res['mean_rtt'].mean():6.2f}s "
+              f"p50={res['p50_rtt'].mean():6.2f}s "
+              f"p95={res['p95_rtt'].mean():6.2f}s "
+              f"p99={res['p99_rtt'].mean():6.2f}s")
+    variants = {
+        "hedged": replace(cfg, arrival_rate=4.0, hedge_factor=0.7),
+        "stale_pred": replace(cfg, prediction_lag_s=20.0),
+        "node_churn": replace(cfg, churn=(5.0, 30.0)),
+    }
+    for name, vcfg in variants.items():
+        res = run_sim(vcfg, "perf_aware")
+        print(f"  {name:12s} mean={res['mean_rtt'].mean():6.2f}s "
+              f"p99={res['p99_rtt'].mean():6.2f}s "
+              f"hedged={res['n_hedged']}")
+    print("smoke OK")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast every-policy sanity sweep (used by CI)")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     base = SimConfig(n_trials=args.trials, n_requests=300)
 
     print("== Fig 11.1: scheduling inefficiency vs prediction accuracy ==")
     for p, r in sweep_accuracy(base, accuracies=[0, .2, .4, .6, .8, 1.0]):
         bar = "#" * max(0, int(r["inefficiency_pct"]))
-        print(f"  p={p:.1f}  {r['inefficiency_pct']:6.2f}%  {bar}")
+        print(f"  p={p:.1f}  {r['inefficiency_pct']:6.2f}%  "
+              f"(p99 {r['p99_inefficiency_pct']:6.2f}%)  {bar}")
     print("  (paper: inefficiency ~0 once accuracy reaches ~80%)\n")
 
     print("== Fig 11.2/3: inefficiency + resource waste vs replicas ==")
@@ -35,6 +71,13 @@ def main():
         cells = "  ".join(f"h={h:.1f}: {r['inefficiency_pct']:5.1f}%"
                           for h, r in series)
         print(f"  {pol:12s} {cells}")
+
+    print("\n== beyond-paper: tail latency under one policy engine ==")
+    res = run_sim(base, "perf_aware")
+    print(f"  perf_aware   p50={res['p50_rtt'].mean():.2f}s "
+          f"p95={res['p95_rtt'].mean():.2f}s p99={res['p99_rtt'].mean():.2f}s")
+    for app, v in res["per_app"].items():
+        print(f"    {app:12s} mean RTT {v.mean():6.2f}s")
 
 
 if __name__ == "__main__":

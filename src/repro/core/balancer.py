@@ -1,16 +1,42 @@
-"""Load-balancing policies (paper §6 + serving router integration).
+"""Unified load-balancing policy engine (paper §6 + serving router).
 
-Policies pick among IDLE replicas.  The performance-aware policy uses
-predicted RTTs from the knowledge base; it optionally HEDGES: if the
-chosen replica's predicted RTT exceeds ``hedge_factor`` x the best busy
-replica's predicted completion, the request is also queued on the
-second-best (straggler mitigation via the paper's own predictions —
-beyond-paper use of the technique)."""
+One policy == one class, used by THREE layers through the same
+``POLICIES`` registry so the simulated, served, and benchmarked policy
+can never diverge (DESIGN.md §8):
+
+  * the §6 simulator calls the vectorized ``score(state) -> (T, C)``
+    interface over a :class:`ClusterState` of ``n_trials`` parallel
+    clusters and picks ``argmin`` per trial;
+  * the live :class:`~repro.serving.router.MorpheusRouter` builds a
+    1-trial :class:`ClusterState` from its replicas and calls the same
+    code through the scalar ``choose()`` convenience wrapper;
+  * ``benchmarks/bench_load_balancing.py`` sweeps the registry.
+
+Scores are "estimated completion seconds, lower is better" for the
+latency-aware policies and synthetic orderings (rotation distance,
+uniform draws) for the reactive ones; reactive policies prefer idle
+replicas and fall back to the least-loaded busy one via a large
+additive penalty.
+
+The performance-aware policy optionally HEDGES (straggler mitigation
+via the paper's own predictions — beyond-paper use of the technique):
+if the chosen replica's predicted RTT exceeds ``hedge_factor`` x the
+best busy replica's predicted completion (its remaining wait plus its
+predicted RTT), the prediction is suspiciously slow relative to simply
+waiting, so the request is also queued on the second-best candidate
+and the earlier completion wins.
+"""
 from __future__ import annotations
 
-import random
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+import inspect
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+# Idle replicas always beat busy ones for the reactive policies; the
+# penalty dominates any realistic wait (seconds) or synthetic score (<C).
+_BUSY_PENALTY = 1e9
 
 
 @dataclass
@@ -19,87 +45,242 @@ class Replica:
     app: str
     node: str
     busy_until: float = 0.0
+    queue_depth: float = 0.0
 
     def idle(self, now: float) -> bool:
         return self.busy_until <= now
 
 
-class Policy:
-    name = "base"
+@dataclass
+class ClusterState:
+    """Snapshot of ``T`` parallel clusters with ``C`` candidate replicas.
 
-    def choose(self, replicas: Sequence[Replica], now: float,
-               predicted: Optional[Sequence[float]] = None) -> Optional[int]:
+    ``busy_until``/``queue_depth`` are what a real router can observe;
+    ``predicted`` is the Morpheus knowledge-base signal; ``actual`` is
+    the true RTT, populated only in simulation for the oracle baseline.
+    """
+    now: float
+    busy_until: np.ndarray                    # (T, C) absolute seconds
+    queue_depth: Optional[np.ndarray] = None  # (T, C) pending requests
+    predicted: Optional[np.ndarray] = None    # (T, C) predicted RTT (s)
+    actual: Optional[np.ndarray] = None       # (T, C) true RTT (oracle)
+
+    def __post_init__(self):
+        self.busy_until = np.atleast_2d(np.asarray(self.busy_until, float))
+        if self.queue_depth is None:
+            self.queue_depth = np.zeros_like(self.busy_until)
+        self.queue_depth = np.atleast_2d(np.asarray(self.queue_depth, float))
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.busy_until.shape
+
+    def wait(self) -> np.ndarray:
+        """Remaining queue wait per candidate, clamped at 0."""
+        return np.maximum(self.busy_until - self.now, 0.0)
+
+    def idle(self) -> np.ndarray:
+        return self.busy_until <= self.now
+
+    @classmethod
+    def from_replicas(cls, replicas: Sequence[Replica], now: float,
+                      predicted: Optional[Sequence[float]] = None,
+                      actual: Optional[Sequence[float]] = None
+                      ) -> "ClusterState":
+        """1-trial state for the scalar / live-router path."""
+        busy = np.array([[r.busy_until for r in replicas]], float)
+        queue = np.array([[getattr(r, "queue_depth", 0.0)
+                           for r in replicas]], float)
+        pred = None if predicted is None else \
+            np.asarray(predicted, float)[None, :]
+        act = None if actual is None else np.asarray(actual, float)[None, :]
+        return cls(now=now, busy_until=busy, queue_depth=queue,
+                   predicted=pred, actual=act)
+
+
+class Policy:
+    """Base policy: implement ``score``; everything else is shared."""
+    name = "base"
+    #: signals the policy reads from ClusterState (documentation/metadata;
+    #: the policy itself raises when a required signal is missing)
+    requires: Tuple[str, ...] = ()
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    # -- vectorized path (simulator) -----------------------------------
+    def score(self, state: ClusterState) -> np.ndarray:
+        """(T, C) scores, lower is better.  Must not mutate ``state``."""
         raise NotImplementedError
+
+    def pick(self, state: ClusterState) -> np.ndarray:
+        """argmin over candidates per trial, then advance policy state."""
+        picks = np.argmin(self.score(state), axis=1)
+        self.update(state, picks)
+        return picks
+
+    def update(self, state: ClusterState, picks: np.ndarray):
+        """Post-pick hook for stateful policies (e.g. the RR cursor)."""
+
+    # -- scalar path (live router) -------------------------------------
+    def choose(self, replicas: Sequence[Replica], now: float,
+               predicted: Optional[Sequence[float]] = None,
+               actual: Optional[Sequence[float]] = None) -> Optional[int]:
+        """Pick one replica index; same code path as the simulator."""
+        if not replicas:
+            return None
+        state = ClusterState.from_replicas(replicas, now, predicted=predicted,
+                                           actual=actual)
+        return int(self.pick(state)[0])
 
 
 class RoundRobin(Policy):
+    """First idle replica at/after the rotating cursor; least-wait
+    fallback when everything is busy."""
     name = "round_robin"
 
-    def __init__(self):
-        self._next = 0
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self._cursor: Optional[np.ndarray] = None   # (T,)
 
-    def choose(self, replicas, now, predicted=None):
-        n = len(replicas)
-        for off in range(n):
-            i = (self._next + off) % n
-            if replicas[i].idle(now):
-                self._next = i + 1
-                return i
-        return None
+    def _ensure(self, T: int):
+        if self._cursor is None or len(self._cursor) != T:
+            self._cursor = np.zeros(T, dtype=np.int64)
+
+    def score(self, state):
+        T, C = state.shape
+        self._ensure(T)
+        dist = (np.arange(C)[None, :] - self._cursor[:, None]) % C
+        return np.where(state.idle(), dist.astype(float),
+                        _BUSY_PENALTY + state.wait())
+
+    def update(self, state, picks):
+        C = state.shape[1]
+        self._cursor = (picks + 1) % C
 
 
 class RandomChoice(Policy):
+    """Uniform over idle replicas; least-wait fallback when all busy."""
     name = "random"
 
     def __init__(self, seed: int = 0):
-        self.rng = random.Random(seed)
+        super().__init__(seed)
+        self.rng = np.random.default_rng(seed)
 
-    def choose(self, replicas, now, predicted=None):
-        idle = [r.idx for r in replicas if r.idle(now)]
-        return self.rng.choice(idle) if idle else None
+    def score(self, state):
+        draws = self.rng.random(state.shape)
+        return np.where(state.idle(), draws, _BUSY_PENALTY + state.wait())
 
 
 class LeastConnections(Policy):
-    """Earliest busy_until (queue-depth proxy for single-slot replicas)."""
+    """Lowest (busy_until - now) + queue depth.  In the single-slot
+    simulator that is the earliest-free replica; in the live router
+    (busy_until unknown, queue_depth = pending) it is classic
+    least-connections."""
     name = "least_conn"
 
-    def choose(self, replicas, now, predicted=None):
-        idle = [r for r in replicas if r.idle(now)]
-        if not idle:
-            return None
-        return min(idle, key=lambda r: r.busy_until).idx
+    def score(self, state):
+        return (state.busy_until - state.now) + state.queue_depth
 
 
 class PerfAware(Policy):
-    """Pick the idle replica with the lowest predicted RTT (paper §6)."""
+    """Minimize queue wait + predicted RTT (paper §6), with optional
+    prediction-guided hedging (module docstring)."""
     name = "perf_aware"
+    requires = ("predicted",)
 
-    def __init__(self, hedge_factor: Optional[float] = None):
+    def __init__(self, seed: int = 0, hedge_factor: Optional[float] = None):
+        super().__init__(seed)
         self.hedge_factor = hedge_factor
 
-    def choose(self, replicas, now, predicted=None):
-        idle = [r.idx for r in replicas if r.idle(now)]
-        if not idle:
-            return None
-        if predicted is None:
-            return idle[0]
-        return min(idle, key=lambda i: predicted[i])
+    def signal(self, state: ClusterState) -> np.ndarray:
+        if state.predicted is None:
+            raise ValueError(f"{self.name} policy needs state.predicted")
+        return state.predicted
 
-    def hedge_candidates(self, replicas, now, predicted) -> List[int]:
-        idle = sorted((i for i, r in enumerate(replicas) if r.idle(now)),
-                      key=lambda i: predicted[i])
-        if self.hedge_factor is None or len(idle) < 2:
-            return idle[:1]
-        best, second = idle[0], idle[1]
-        if predicted[best] * self.hedge_factor < predicted[second]:
-            return [best]
-        return [best, second]
+    def score(self, state):
+        return state.wait() + self.signal(state)
+
+    # -- hedging -------------------------------------------------------
+    def hedge_plan(self, state: ClusterState, picks: np.ndarray,
+                   scores: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized hedge decision for already-made ``picks``.
+
+        Returns ``(second, mask)``: the runner-up candidate per trial and
+        a bool mask of trials that should hedge.  A trial hedges when the
+        chosen replica's predicted RTT exceeds ``hedge_factor`` x the
+        best BUSY replica's predicted completion (wait + predicted) —
+        i.e. the pick is predicted slower than simply waiting.  Pass the
+        ``scores`` already computed for ``picks`` to avoid re-scoring.
+        """
+        T, C = state.shape
+        trial = np.arange(T)
+        second = picks.copy()
+        mask = np.zeros(T, dtype=bool)
+        if self.hedge_factor is None or C < 2:
+            return second, mask
+        sig = self.signal(state)
+        completion = state.wait() + sig
+        # runner-up by score, excluding the pick
+        s = (self.score(state) if scores is None else scores).copy()
+        s[trial, picks] = np.inf
+        second = np.argmin(s, axis=1)
+        # best busy completion (inf when no replica is busy -> no hedge)
+        busy_completion = np.where(~state.idle(), completion, np.inf)
+        ref = busy_completion.min(axis=1)
+        chosen_pred = sig[trial, picks]
+        mask = chosen_pred > self.hedge_factor * ref
+        return second, mask
+
+    def hedge_candidates(self, replicas: Sequence[Replica], now: float,
+                         predicted: Sequence[float]) -> List[int]:
+        """Scalar convenience: ``[pick]`` or ``[pick, runner-up]``.
+
+        A 1-trial wrapper over ``score`` + ``hedge_plan`` (the same code
+        path the simulator and the live router use), exactly as
+        ``choose`` wraps ``pick`` — there is one hedge decision, not
+        two."""
+        if not replicas:
+            return []
+        state = ClusterState.from_replicas(replicas, now, predicted=predicted)
+        scores = self.score(state)
+        picks = np.argmin(scores, axis=1)
+        second, mask = self.hedge_plan(state, picks, scores)
+        if bool(mask[0]):
+            return [int(picks[0]), int(second[0])]
+        return [int(picks[0])]
 
 
 class Oracle(PerfAware):
     """Perfect knowledge of the true RTT (the ideal LB baseline)."""
     name = "oracle"
+    requires = ("actual",)
+
+    def signal(self, state):
+        # no silent fallback to predicted: an "oracle" scored on noisy
+        # predictions would be a mislabeled perf_aware run
+        if state.actual is None:
+            raise ValueError("oracle policy needs state.actual (true RTTs "
+                             "exist only in simulation)")
+        return state.actual
 
 
-POLICIES = {p.name: p for p in (RoundRobin, RandomChoice, LeastConnections,
-                                PerfAware, Oracle)}
+_POLICY_CLASSES: Tuple[Type[Policy], ...] = (
+    RoundRobin, RandomChoice, LeastConnections, PerfAware, Oracle)
+
+#: the ONE registry all three layers dispatch through
+POLICIES: Dict[str, Type[Policy]] = {p.name: p for p in _POLICY_CLASSES}
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    """Instantiate a registered policy, dropping kwargs it doesn't take
+    (so callers can pass seed/hedge_factor uniformly)."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; registered: {sorted(POLICIES)}")
+    params = inspect.signature(cls.__init__).parameters
+    accepted = {k: v for k, v in kwargs.items() if k in params}
+    return cls(**accepted)

@@ -45,6 +45,23 @@ class PredictionManager:
         self.paused[(app, node)] = True
 
     # ------------------------------------------------------------------
+    def router_predictors(self, app: str) -> Dict[str, RTTPredictor]:
+        """Active predictors for one app, keyed by node name — the shape
+        ``MorpheusRouter`` consumes for its batched prediction sweep."""
+        return {node: p for (a, node), p in self.predictors.items()
+                if a == app and not self.paused.get((a, node))}
+
+    def make_router(self, replicas, app: str = "serve",
+                    policy: str = "perf_aware", **kwargs):
+        """Build a MorpheusRouter wired to this manager's knowledge base
+        and predictors; ``policy`` is any name in the shared
+        ``repro.core.balancer.POLICIES`` registry."""
+        from repro.serving.router import MorpheusRouter
+        return MorpheusRouter(replicas, policy=policy, kb=self.kb,
+                              predictors=self.router_predictors(app),
+                              **kwargs)
+
+    # ------------------------------------------------------------------
     def attach(self, node: NodeWorkload):
         """Wire task completions on a node into its predictors."""
         for a, _ in node.instances:

@@ -61,7 +61,9 @@ class MinMax:
         return (X - self.lo) / np.maximum(self.hi - self.lo, 1e-9)
 
     def inverse_y(self, y):
-        return y * max(self.hi - self.lo, 1e-9) + self.lo
+        # np.maximum, not builtin max(): hi - lo is an ndarray for any
+        # multi-feature scaler and builtin max() raises on it
+        return y * np.maximum(self.hi - self.lo, 1e-9) + self.lo
 
 
 @dataclass

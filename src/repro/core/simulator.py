@@ -1,20 +1,40 @@
 """§6 load-balancing simulation (paper Fig. 11), vectorised across trials.
 
 Heterogeneous nodes (acceleration factor), empirically-shaped interference
-matrix, log-normal RTT (Eqs. 10-11), noisy predictions (Eq. 12), four
-policies + an oracle.  Parameters are derived from the paper's own tables
-(Table 4 RMSE range, Table 5 CoV range, Fig. 11 axes) since the exact
-repo parameters are not in the paper text — documented in DESIGN.md §7.
+matrix, log-normal RTT (Eqs. 10-11), noisy predictions (Eq. 12).  Policies
+are NOT implemented here: every request is routed through the shared
+policy engine (``repro.core.balancer.POLICIES``), the same classes the
+live router and the benchmarks dispatch through (DESIGN.md §8).
+Parameters are derived from the paper's own tables (Table 4 RMSE range,
+Table 5 CoV range, Fig. 11 axes) since the exact repo parameters are not
+in the paper text — documented in DESIGN.md §7.
 
 All trials advance request-by-request in lockstep so every step is a
-vectorised numpy op over (n_trials, n_replicas) arrays.
+vectorised numpy op over (n_trials, n_candidates) arrays.  The loop is
+split into three parts: cluster construction (:func:`_build_cluster`),
+a per-request policy step inside :func:`run_sim`, and metrics
+accumulation (:class:`_Metrics` — mean, p50/p95/p99 tails, per-app
+breakdown, resource-seconds).
+
+Beyond the seed scenarios, the simulator supports:
+  * every registered policy, including ``least_conn``;
+  * prediction-guided hedging (``SimConfig.hedge_factor``);
+  * stale predictions (``SimConfig.prediction_lag_s``): the predictor's
+    view of cluster occupancy refreshes only every ``lag`` seconds, so
+    interference-driven RTT shifts are seen late (paper §4's collection
+    cycles are periodic, not per-request);
+  * node failure / churn (``SimConfig.churn``): one random node per
+    trial goes down at ``t_fail`` for ``downtime`` seconds — its
+    replicas stop accepting work and policies must route around it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
 
 # SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
 # the paper's app set (upload / MotionCor2 / FFT mock / gCTF / ctffind4).
@@ -39,6 +59,10 @@ class SimConfig:
     interference_strength: float = 0.5
     arrival_rate: float = 2.0       # requests/s entering the cluster
     seed: int = 0
+    # -- beyond-seed scenarios (defaults reproduce the seed behaviour) --
+    hedge_factor: Optional[float] = None    # PerfAware hedging threshold
+    prediction_lag_s: float = 0.0           # stale-prediction refresh lag
+    churn: Optional[Tuple[float, float]] = None  # (t_fail_s, downtime_s)
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -49,105 +73,192 @@ def _interference_matrix(apps: Sequence[str], strength: float,
     return strength * (base + base.T) / 2.0
 
 
-def run_sim(cfg: SimConfig, policy: str = "perf_aware",
-            oracle_assign: Optional[np.ndarray] = None):
-    """Simulate cfg.n_trials trials under one policy.
+@dataclass
+class _Cluster:
+    """Static per-run arrays: topology, request stream, pre-drawn noise."""
+    cfg: SimConfig
+    app_of: np.ndarray        # (R,) app index per replica
+    mean_rtt: np.ndarray      # (A,)
+    cpu_req: np.ndarray       # (A,)
+    mem_req: np.ndarray       # (A,)
+    imat: np.ndarray          # (A, A) interference matrix
+    node_of: np.ndarray       # (T, R) node per replica per trial
+    accel: np.ndarray         # (T, N) node acceleration factors
+    req_app: np.ndarray       # (J,) app index per request
+    req_t: np.ndarray         # (J,) arrival time per request
+    z_rtt: np.ndarray         # (T, J) RTT noise
+    z_pred: np.ndarray        # (T, J, R) prediction noise
+    failed_node: Optional[np.ndarray] = None   # (T,) churn target
 
-    Returns dict with per-trial mean RTT, cpu-seconds, mem-GB-seconds and
-    the assignment matrix (for oracle reuse).
-    """
+    def rtt_draw(self, j: int, a: int, candidates: np.ndarray,
+                 busy_until: np.ndarray, now: float) -> np.ndarray:
+        """True RTT per candidate under the given occupancy snapshot
+        (log-normal with co-location interference, Eqs. 10-11)."""
+        nodes = self.node_of[:, candidates]                     # (T, C)
+        same_node = nodes[:, :, None] == self.node_of[:, None, :]  # (T,C,R)
+        busy = busy_until[:, None, :] > now
+        inter = (same_node & busy) @ self.imat[a][self.app_of]  # (T, C)
+        rbar = self.mean_rtt[a]
+        s = rbar * (0.1 + inter)                  # RTT std (interference)
+        mu = np.log(rbar ** 2 / np.sqrt(s ** 2 + rbar ** 2))
+        sigma = np.sqrt(np.log(1 + s ** 2 / rbar ** 2))
+        x = np.exp(mu + sigma * self.z_rtt[:, j, None])          # (T, C)
+        trial = np.arange(len(x))
+        return x * (1.0 + self.accel[trial[:, None], nodes])     # Eq. 10
+
+
+def _build_cluster(cfg: SimConfig) -> _Cluster:
+    """Topology + request stream; same RNG order as the seed simulator so
+    the default scenarios stay statistically unchanged."""
     rng = np.random.default_rng(cfg.seed)
     T = cfg.n_trials
     A = len(cfg.apps)
-    R = A * cfg.n_replicas_per_app       # replicas total
-    app_of = np.repeat(np.arange(A), cfg.n_replicas_per_app)
-    mean_rtt = np.array([APPS[a][0] for a in cfg.apps])
-    cpu_req = np.array([APPS[a][1] for a in cfg.apps])
-    mem_req = np.array([APPS[a][2] for a in cfg.apps])
+    R = A * cfg.n_replicas_per_app
     imat = _interference_matrix(cfg.apps, cfg.interference_strength, rng)
-
     # per-trial random placement (isolate policy effect, as in the paper)
     node_of = rng.integers(0, cfg.n_nodes, size=(T, R))
-    accel = rng.normal(0.0, cfg.heterogeneity, size=(T, cfg.n_nodes))
-    accel = np.clip(accel, -0.8, 2.0)
-
+    accel = np.clip(rng.normal(0.0, cfg.heterogeneity, size=(T, cfg.n_nodes)),
+                    -0.8, 2.0)
     # request stream: same per policy for paired comparison
     req_rng = np.random.default_rng(cfg.seed + 1)
     req_app = req_rng.integers(0, A, size=cfg.n_requests)
-    req_gap = req_rng.exponential(1.0 / cfg.arrival_rate,
-                                  size=cfg.n_requests)
-    req_t = np.cumsum(req_gap)
-    # pre-drawn per-request randomness (same across policies & trials order)
+    req_t = np.cumsum(req_rng.exponential(1.0 / cfg.arrival_rate,
+                                          size=cfg.n_requests))
     z_rtt = req_rng.standard_normal((T, cfg.n_requests))
     z_pred = req_rng.standard_normal((T, cfg.n_requests, R))
-    rr_state = np.zeros(T, dtype=np.int64)
+    failed_node = None
+    if cfg.churn is not None:
+        failed_node = np.random.default_rng(cfg.seed + 3).integers(
+            0, cfg.n_nodes, size=T)
+    return _Cluster(
+        cfg=cfg,
+        app_of=np.repeat(np.arange(A), cfg.n_replicas_per_app),
+        mean_rtt=np.array([APPS[a][0] for a in cfg.apps]),
+        cpu_req=np.array([APPS[a][1] for a in cfg.apps]),
+        mem_req=np.array([APPS[a][2] for a in cfg.apps]),
+        imat=imat, node_of=node_of, accel=accel,
+        req_app=req_app, req_t=req_t, z_rtt=z_rtt, z_pred=z_pred,
+        failed_node=failed_node)
 
+
+class _Metrics:
+    """Per-trial accumulation: full RTT matrix (for tail percentiles and
+    the per-app breakdown), resource-seconds, assignments."""
+
+    def __init__(self, cfg: SimConfig):
+        T, J = cfg.n_trials, cfg.n_requests
+        self.cfg = cfg
+        self.rtts = np.zeros((T, J))
+        self.cpu_s = np.zeros(T)
+        self.mem_s = np.zeros(T)
+        self.chosen = np.zeros((T, J), dtype=np.int64)
+        self.n_hedged = 0
+
+    def add(self, j: int, response: np.ndarray, cpu: np.ndarray,
+            mem: np.ndarray, rep: np.ndarray):
+        self.rtts[:, j] = response
+        self.cpu_s += cpu
+        self.mem_s += mem
+        self.chosen[:, j] = rep
+
+    def summary(self, cluster: _Cluster) -> Dict[str, np.ndarray]:
+        p50, p95, p99 = np.percentile(self.rtts, [50, 95, 99], axis=1)
+        per_app = {}
+        for i, name in enumerate(self.cfg.apps):
+            mask = cluster.req_app == i
+            if mask.any():
+                per_app[name] = self.rtts[:, mask].mean(axis=1)
+        return {"mean_rtt": self.rtts.mean(axis=1),
+                "p50_rtt": p50, "p95_rtt": p95, "p99_rtt": p99,
+                "per_app": per_app,
+                "cpu_s": self.cpu_s, "mem_s": self.mem_s,
+                "chosen": self.chosen, "n_hedged": self.n_hedged}
+
+
+def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
+    """Simulate cfg.n_trials trials under one registered policy.
+
+    Returns the :class:`_Metrics` summary dict: per-trial mean RTT,
+    p50/p95/p99 RTT, per-app mean RTT, cpu/mem resource-seconds, the
+    assignment matrix, and the hedged-request count.
+    """
+    cluster = _build_cluster(cfg)
+    pol = make_policy(policy, seed=cfg.seed + 2,
+                      hedge_factor=cfg.hedge_factor)
+    hedging = isinstance(pol, PerfAware) and cfg.hedge_factor is not None
+
+    T, J = cfg.n_trials, cfg.n_requests
+    R = len(cluster.app_of)
+    trial = np.arange(T)
     busy_until = np.zeros((T, R))
-    rtt_sum = np.zeros(T)
-    rtt_n = np.zeros(T)
-    cpu_s = np.zeros(T)
-    mem_s = np.zeros(T)
-    chosen = np.zeros((T, cfg.n_requests), dtype=np.int64)
+    metrics = _Metrics(cfg)
 
-    trial_idx = np.arange(T)
-    for j in range(cfg.n_requests):
-        a = int(req_app[j])
-        now = req_t[j]
-        candidates = np.flatnonzero(app_of == a)     # replicas of this app
-        idle = busy_until[:, candidates] <= now       # (T, C)
-        # actual RTT per candidate: log-normal with interference (Eqs. 10-11)
-        nodes = node_of[:, candidates]                # (T, C)
-        # co-location load: how many busy replicas share the node now
-        same_node = nodes[:, :, None] == node_of[:, None, :]   # (T,C,R)
-        busy = (busy_until[:, None, :] > now)
-        inter = (same_node & busy) @ imat[a][app_of]  # (T, C)
-        rbar = mean_rtt[a]
-        s = rbar * (0.1 + inter)                     # RTT std (interference)
-        mu = np.log(rbar ** 2 / np.sqrt(s ** 2 + rbar ** 2))
-        sigma = np.sqrt(np.log(1 + s ** 2 / rbar ** 2))
-        x = np.exp(mu + sigma * z_rtt[:, j, None])    # (T, C)
-        actual = x * (1.0 + accel[trial_idx[:, None], nodes])  # Eq. 10
-        # predicted RTT: Eq. 12 with eps = (1 - p) * actual
-        eps = (1.0 - cfg.accuracy) * actual
-        predicted = actual + eps * z_pred[:, j, :][:, candidates]
+    # stale-prediction state: the predictor's occupancy snapshot
+    lag = cfg.prediction_lag_s
+    stale_busy = busy_until.copy() if lag > 0 else None
+    last_refresh = -np.inf
+    churn_pending = cfg.churn is not None
 
-        # queue wait if the replica is busy (all policies see the same
-        # queueing semantics; the oracle minimises wait + true RTT)
-        wait = np.maximum(busy_until[:, candidates] - now, 0.0)   # (T, C)
-        if policy == "oracle":
-            pick = np.argmin(wait + actual, axis=1)
-        elif policy == "perf_aware":
-            pick = np.argmin(wait + predicted, axis=1)
-        elif policy == "random":
-            r = req_rng.random((T, len(candidates)))
-            score = np.where(idle, r, np.inf)
-            pick = np.where(idle.any(1), np.argmin(score, axis=1),
-                            np.argmin(wait, axis=1))
-        elif policy == "round_robin":
-            offs = (np.arange(len(candidates))[None, :]
-                    + rr_state[:, None]) % len(candidates)
-            order = np.argsort(offs, axis=1)
-            idle_ord = np.take_along_axis(idle, order, axis=1)
-            first = np.argmax(idle_ord, axis=1)
-            rr_pick = np.take_along_axis(order, first[:, None], axis=1)[:, 0]
-            pick = np.where(idle.any(1), rr_pick, np.argmin(wait, axis=1))
-            rr_state = (pick + 1) % len(candidates)
+    for j in range(J):
+        a = int(cluster.req_app[j])
+        now = float(cluster.req_t[j])
+
+        if churn_pending and now >= cfg.churn[0]:
+            down = cluster.node_of == cluster.failed_node[:, None]  # (T, R)
+            t_up = cfg.churn[0] + cfg.churn[1]
+            busy_until = np.where(down, np.maximum(busy_until, t_up),
+                                  busy_until)
+            churn_pending = False
+
+        candidates = np.flatnonzero(cluster.app_of == a)
+        actual = cluster.rtt_draw(j, a, candidates, busy_until, now)
+
+        # predicted RTT: Eq. 12 with eps = (1 - p) * actual, computed on
+        # the (possibly stale) occupancy snapshot the predictor last saw
+        if lag > 0:
+            if now - last_refresh >= lag:
+                stale_busy = busy_until.copy()
+                last_refresh = now
+            pred_basis = cluster.rtt_draw(j, a, candidates, stale_busy, now)
         else:
-            raise ValueError(policy)
+            pred_basis = actual
+        eps = (1.0 - cfg.accuracy) * pred_basis
+        predicted = pred_basis + eps * cluster.z_pred[:, j, :][:, candidates]
 
-        rep = candidates[pick]                        # (T,)
-        rtt = np.take_along_axis(actual, pick[:, None], axis=1)[:, 0]
-        finish = np.maximum(now, busy_until[trial_idx, rep]) + rtt
-        wait_adj = finish - now
-        busy_until[trial_idx, rep] = finish
-        rtt_sum += wait_adj
-        rtt_n += 1
-        cpu_s += cpu_req[a] * rtt
-        mem_s += mem_req[a] * rtt
-        chosen[:, j] = rep
+        state = ClusterState(now=now, busy_until=busy_until[:, candidates],
+                             predicted=predicted, actual=actual)
+        if hedging:
+            scores = pol.score(state)     # reused by hedge_plan below
+            picks = np.argmin(scores, axis=1)
+            pol.update(state, picks)
+        else:
+            picks = pol.pick(state)
+        rep = candidates[picks]
+        rtt = actual[trial, picks]
+        finish = np.maximum(now, busy_until[trial, rep]) + rtt
+        cpu = cluster.cpu_req[a] * rtt
+        mem = cluster.mem_req[a] * rtt
 
-    return {"mean_rtt": rtt_sum / np.maximum(rtt_n, 1),
-            "cpu_s": cpu_s, "mem_s": mem_s, "chosen": chosen}
+        if hedging:
+            second, mask = pol.hedge_plan(state, picks, scores)
+            rep2 = candidates[second]
+            rtt2 = actual[trial, second]
+            finish2 = np.maximum(now, busy_until[trial, rep2]) + rtt2
+            response = np.where(mask, np.minimum(finish, finish2),
+                                finish) - now
+            busy_until[trial, rep] = finish
+            hm = np.flatnonzero(mask)
+            busy_until[hm, rep2[hm]] = finish2[hm]    # duplicate occupies
+            cpu = cpu + mask * cluster.cpu_req[a] * rtt2   # resource waste
+            mem = mem + mask * cluster.mem_req[a] * rtt2
+            metrics.n_hedged += int(mask.sum())
+        else:
+            response = finish - now
+            busy_until[trial, rep] = finish
+
+        metrics.add(j, response, cpu, mem, rep)
+
+    return metrics.summary(cluster)
 
 
 def scheduling_inefficiency(cfg: SimConfig, policy: str) -> Dict[str, float]:
@@ -155,9 +266,13 @@ def scheduling_inefficiency(cfg: SimConfig, policy: str) -> Dict[str, float]:
     res = run_sim(cfg, policy)
     ora = run_sim(cfg, "oracle")
     ineff = (res["mean_rtt"] - ora["mean_rtt"]) / ora["mean_rtt"] * 100.0
-    waste_cpu = (res["cpu_s"] - ora["cpu_s"]) / np.maximum(ora["cpu_s"], 1e-9) * 100.0
+    tail = (res["p99_rtt"] - ora["p99_rtt"]) \
+        / np.maximum(ora["p99_rtt"], 1e-9) * 100.0
+    waste_cpu = (res["cpu_s"] - ora["cpu_s"]) \
+        / np.maximum(ora["cpu_s"], 1e-9) * 100.0
     return {"inefficiency_pct": float(np.mean(ineff)),
             "inefficiency_std": float(np.std(ineff)),
+            "p99_inefficiency_pct": float(np.mean(tail)),
             "resource_waste_pct": float(np.mean(waste_cpu))}
 
 
@@ -165,33 +280,35 @@ def sweep_accuracy(base: SimConfig, accuracies=np.linspace(0, 1, 11)):
     """Fig. 11 subplot 1."""
     out = []
     for p in accuracies:
-        cfg = SimConfig(**{**base.__dict__, "accuracy": float(p)})
+        cfg = replace(base, accuracy=float(p))
         out.append((float(p),
                     scheduling_inefficiency(cfg, "perf_aware")))
     return out
 
 
 def sweep_replicas(base: SimConfig, counts=(1, 2, 3, 4, 6, 8, 10),
-                   policies=("perf_aware", "round_robin", "random")):
+                   policies=("perf_aware", "least_conn", "round_robin",
+                             "random")):
     """Fig. 11 subplots 2-3."""
     out = {}
     for pol in policies:
         rows = []
         for c in counts:
-            cfg = SimConfig(**{**base.__dict__, "n_replicas_per_app": int(c)})
+            cfg = replace(base, n_replicas_per_app=int(c))
             rows.append((int(c), scheduling_inefficiency(cfg, pol)))
         out[pol] = rows
     return out
 
 
 def sweep_heterogeneity(base: SimConfig, hs=(0.0, 0.15, 0.3, 0.5, 0.75, 1.0),
-                        policies=("perf_aware", "round_robin", "random")):
+                        policies=("perf_aware", "least_conn", "round_robin",
+                                  "random")):
     """Fig. 11 subplot 4."""
     out = {}
     for pol in policies:
         rows = []
         for h in hs:
-            cfg = SimConfig(**{**base.__dict__, "heterogeneity": float(h)})
+            cfg = replace(base, heterogeneity=float(h))
             rows.append((float(h), scheduling_inefficiency(cfg, pol)))
         out[pol] = rows
     return out

@@ -1,22 +1,28 @@
 """Morpheus-integrated request router (the paper's Fig. 1 load balancer).
 
 Routes each incoming request to one replica per the configured policy.
+The router implements NO policy logic of its own: it builds a 1-trial
+:class:`~repro.core.balancer.ClusterState` from its replicas and
+dispatches through the same ``POLICIES`` engine the §6 simulator and the
+benchmarks use (DESIGN.md §8), so the served policy and the simulated
+policy cannot diverge.
+
 For ``perf_aware`` the router asks every replica's predictor for an RTT
 estimate in ONE batched call (beyond-paper: the paper computes one
 prediction per request per replica; batching the replicas amortises state
-retrieval + inference).  Prediction-guided hedging doubles as straggler
-mitigation: if the best replica later exceeds its predicted RTT by
-``hedge_factor``, the request is re-queued on the next-best replica.
+retrieval + inference) and models each replica's queue wait as
+``pending waves x predicted wave RTT``.  Prediction-guided hedging
+doubles as straggler mitigation: when ``hedge_factor`` is set the policy
+may also queue the request on the runner-up replica (see
+``PerfAware.hedge_candidates``).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.balancer import POLICIES, PerfAware
+from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
 from repro.core.knowledge import KnowledgeBase
 from repro.serving.engine import Request, ServingEngine
 
@@ -28,12 +34,13 @@ class MorpheusRouter:
                  hedge_factor: Optional[float] = None, seed: int = 0):
         self.replicas = list(replicas)
         self.policy_name = policy
+        self.policy = make_policy(policy, seed=seed, hedge_factor=hedge_factor)
         self.kb = kb or KnowledgeBase()
         self.predictors = predictors or {}
         self.hedge_factor = hedge_factor
-        self._rr = 0
-        self.rng = np.random.default_rng(seed)
         self.routed: List[int] = []
+        self.hedged: List[int] = []
+        self._hedge_pairs: List[tuple] = []   # (primary, duplicate) requests
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
@@ -54,30 +61,52 @@ class MorpheusRouter:
     def _queue_proxy(self) -> np.ndarray:
         return np.array([r.pending() for r in self.replicas], float)
 
-    def route(self, req: Request) -> int:
-        n = len(self.replicas)
-        if self.policy_name == "round_robin":
-            i = self._rr % n
-            self._rr += 1
-        elif self.policy_name == "random":
-            i = int(self.rng.integers(n))
-        elif self.policy_name == "least_conn":
-            i = int(np.argmin(self._queue_proxy()))
-        elif self.policy_name == "perf_aware":
-            preds = self._predicted_rtts()
-            # queue wait estimate: pending waves x predicted wave RTT
-            waves = np.ceil(self._queue_proxy()
+    def cluster_state(self) -> ClusterState:
+        """The router's observable state as a 1-trial ClusterState.
+
+        Queue wait is estimated as pending waves x predicted wave RTT
+        when predictions are needed; reactive policies see zero wait
+        plus the raw queue depths (classic least-connections / RR)."""
+        queue = self._queue_proxy()
+        predicted = None
+        wait_est = np.zeros(len(self.replicas))
+        if isinstance(self.policy, PerfAware):
+            predicted = self._predicted_rtts()
+            waves = np.ceil(queue
                             / np.array([r.max_batch for r in self.replicas]))
-            i = int(np.argmin(preds * (1.0 + waves)))
-        else:
-            raise KeyError(self.policy_name)
+            wait_est = predicted * waves
+        return ClusterState(now=0.0, busy_until=wait_est[None, :],
+                            queue_depth=queue[None, :],
+                            predicted=None if predicted is None
+                            else predicted[None, :])
+
+    def route(self, req: Request) -> int:
+        state = self.cluster_state()
+        i = int(self.policy.pick(state)[0])
         self.replicas[i].submit(req)
         self.routed.append(i)
+        if self.hedge_factor is not None and \
+                isinstance(self.policy, PerfAware) and state.predicted is not None:
+            second, mask = self.policy.hedge_plan(state, np.array([i]))
+            if bool(mask[0]):
+                # submit a DUPLICATE object, not the same request: both
+                # engines mutate t_done/output on completion, and drain()
+                # reconciles the pair so the earlier completion wins
+                j = int(second[0])
+                dup = Request(rid=req.rid, tokens=req.tokens,
+                              max_new_tokens=req.max_new_tokens)
+                self.replicas[j].submit(dup)
+                self._hedge_pairs.append((req, dup))
+                self.hedged.append(j)
         return i
 
     # ------------------------------------------------------------------
     def drain(self) -> List[Request]:
-        """Serve every queued request to completion (round over replicas)."""
+        """Serve every queued request to completion (round over replicas).
+
+        Hedged duplicates are reconciled here: the primary request takes
+        the earlier of the two completions and the duplicate is dropped
+        from the finished list (each routed request appears once)."""
         finished: List[Request] = []
         progress = True
         while progress:
@@ -87,4 +116,12 @@ class MorpheusRouter:
                 if out:
                     finished.extend(out)
                     progress = True
+        dup_ids = {id(d) for _, d in self._hedge_pairs}
+        for primary, dup in self._hedge_pairs:
+            if dup.t_done is not None and (
+                    primary.t_done is None or dup.t_done < primary.t_done):
+                primary.t_done = dup.t_done
+                primary.output = dup.output
+        finished = [r for r in finished if id(r) not in dup_ids]
+        self._hedge_pairs.clear()
         return finished

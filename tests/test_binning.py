@@ -1,7 +1,10 @@
 """FD-rule dynamic balancing — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:                      # dependency-free fallback
+    from _hypothesis_shim import given, settings, strategies as hst
 
 from repro.core.binning import BalancedDataset, freedman_diaconis_bins
 

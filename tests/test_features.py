@@ -1,7 +1,10 @@
 """Feature extraction: batch vs rolling equivalence (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:                      # dependency-free fallback
+    from _hypothesis_shim import given, settings, strategies as hst
 
 from repro.core.features import (FEATURE_NAMES, RollingFeatures,
                                  drop_redundant, extract_features,

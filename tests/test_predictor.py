@@ -3,9 +3,24 @@ import numpy as np
 import pytest
 
 from repro.core.manager import PredictionManager
-from repro.core.predictor import RTTPredictor, confirm_enough_samples
+from repro.core.predictor import MinMax, RTTPredictor, confirm_enough_samples
 from repro.core.workload import DEFAULT_APPS, NodeWorkload
 from repro.monitoring.metrics import MetricsStore, SimClock
+
+
+def test_minmax_inverse_roundtrip_multifeature():
+    # regression: inverse_y used builtin max() which raises on the
+    # multi-feature ndarray hi - lo
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-3, 7, size=(50, 4))
+    sc = MinMax().fit(X)
+    Z = sc.transform(X)
+    assert Z.min() >= 0.0 and Z.max() <= 1.0 + 1e-12
+    np.testing.assert_allclose(sc.inverse_y(Z), X, rtol=1e-9, atol=1e-9)
+    # scalar target path (how the predictor uses it for y)
+    y = rng.uniform(1, 5, size=30)
+    sy = MinMax().fit(y)
+    np.testing.assert_allclose(sy.inverse_y(sy.transform(y)), y, rtol=1e-9)
 
 
 def test_confirm_check():
