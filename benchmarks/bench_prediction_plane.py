@@ -1,0 +1,104 @@
+"""Fleet prediction plane scaling: serial per-predictor loop vs ONE
+batched plane sweep (DESIGN.md §9), as the fleet grows 5 -> 500.
+
+The serial path pays one state gather + one jitted feature extraction +
+one jitted model dispatch *per predictor*; the plane pays one batched
+gather per store and one jitted dispatch per (family, window, k) bucket.
+Reported: predictions/sec for both paths, speedup, and the max relative
+drift between the two (the parity guard CI's smoke mode enforces).
+
+Run:  PYTHONPATH=src python benchmarks/bench_prediction_plane.py \
+          [--sizes 5,25,100,500] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.prediction_plane import PredictionPlane
+from repro.testing import make_store, make_trained_predictor
+
+FAMILIES = ("lr", "xgb", "fnn", "rnn")    # 4 buckets at any fleet size
+N_STORES = 5                              # predictors share per-node stores
+PARITY_TOL = 1e-4
+
+
+def _trained_predictor(i, store):
+    """Predictor with injected trained state (the collection/training
+    lifecycle is benchmarked elsewhere; this isolates the predict path)."""
+    return make_trained_predictor(
+        f"app{i}", store, FAMILIES[i % len(FAMILIES)], seed=1000 + i,
+        node=f"node-{i % N_STORES}", n_samples=48)
+
+
+def _time(fn, repeats: int = 5) -> float:
+    fn()                                     # warm-up (jit compile)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench_fleet(fleet, repeats: int = 5):
+    """(serial_s, batched_s, max relative serial/batched drift)."""
+    plane = PredictionPlane()
+    for p in fleet:
+        plane.register_predictor(p)
+
+    t_serial = _time(lambda: [p.predict() for p in fleet], repeats)
+    t_batched = _time(plane.predict_all, repeats)
+
+    serial = np.array([p.predict().rtt_pred for p in fleet])
+    recs = plane.predict_all()
+    batched = np.array([recs[(p.app, p.node)].rtt_pred for p in fleet])
+    drift = float(np.max(np.abs(serial - batched)
+                         / np.maximum(np.abs(serial), 1e-9)))
+    return t_serial, t_batched, drift
+
+
+def run(sizes=(5, 25, 100), repeats: int = 5):
+    rows = []
+    stores = [make_store(seed=s, n_metrics=12) for s in range(N_STORES)]
+    fleet = [_trained_predictor(i, stores[i % N_STORES])
+             for i in range(max(sizes))]
+    for n in sizes:
+        t_s, t_b, drift = bench_fleet(fleet[:n], repeats)
+        speedup = t_s / max(t_b, 1e-12)
+        rows.append((f"plane_serial[n={n}]", t_s / n * 1e6,
+                     f"preds_per_sec={n / t_s:.0f}"))
+        rows.append((f"plane_batched[n={n}]", t_b / n * 1e6,
+                     f"preds_per_sec={n / t_b:.0f};speedup_x={speedup:.1f};"
+                     f"parity_drift={drift:.2e}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="5,25,100,500",
+                    help="comma-separated fleet sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleets + hard parity/speedup gate (CI)")
+    args = ap.parse_args()
+    sizes = ((4, 8) if args.smoke else
+             tuple(int(s) for s in args.sizes.split(",")))
+    rows = run(sizes=sizes, repeats=3 if args.smoke else 5)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.smoke:
+        drifts = [float(d.split("parity_drift=")[1])
+                  for _, _, d in rows if "parity_drift=" in d]
+        assert drifts and max(drifts) < PARITY_TOL, \
+            f"serial/batched drift {max(drifts):.2e} exceeds {PARITY_TOL}"
+        speedups = [float(d.split("speedup_x=")[1].split(";")[0])
+                    for _, _, d in rows if "speedup_x=" in d]
+        assert min(speedups) > 1.0, \
+            f"batched plane slower than serial loop: {speedups}"
+        print(f"smoke OK: parity_drift<{PARITY_TOL}, "
+              f"speedups={speedups}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,8 @@ def main() -> None:
     from benchmarks import (bench_adaptation, bench_binning, bench_breakdown,
                             bench_correlations, bench_covariability,
                             bench_kernels, bench_load_balancing,
-                            bench_overhead, bench_selection,
-                            bench_state_scaling)
+                            bench_overhead, bench_prediction_plane,
+                            bench_selection, bench_state_scaling)
     from benchmarks import roofline
 
     benches = [
@@ -25,6 +25,7 @@ def main() -> None:
         ("fig8", bench_binning.run),
         ("fig9", bench_breakdown.run),
         ("fig10", bench_state_scaling.run),
+        ("plane", bench_prediction_plane.run),
         ("fig11", bench_load_balancing.run),
         ("table5", bench_covariability.run),
         ("kernels", bench_kernels.run),

@@ -44,6 +44,26 @@ def main():
               f"[state={rec.t_state*1e3:.1f} feat={rec.t_feature*1e3:.1f} "
               f"inf={rec.t_inference*1e3:.1f}]")
 
+    print("== fleet prediction plane: one batched sweep (DESIGN.md §9) ==")
+    spent0 = node.store.query_time_spent
+    disp0 = mgr.plane.dispatches
+    recs = mgr.plane.predict_all()
+    if recs:
+        serial_state = sum(
+            node.store.retrieval.delay(
+                len(mgr.predictors[key].selected.metric_idx),
+                mgr.predictors[key].selected.window_s) for key in recs)
+        print(f"  {len(recs)} predictors, "
+              f"{len(mgr.plane.buckets())} model bucket(s), "
+              f"{mgr.plane.dispatches - disp0} jitted dispatch(es) "
+              f"this sweep")
+        print(f"  modeled state retrieval: batched="
+              f"{(node.store.query_time_spent - spent0)*1e3:.0f}ms vs "
+              f"serial={serial_state*1e3:.0f}ms")
+        for (app, nname), rec in sorted(recs.items()):
+            print(f"  {app:12s} predicted RTT={rec.rtt_pred:.2f}s "
+                  f"({rec.basis} delay {rec.t_prediction*1e3:.1f}ms)")
+
 
 if __name__ == "__main__":
     main()

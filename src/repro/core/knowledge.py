@@ -41,3 +41,19 @@ class KnowledgeBase:
         with open(tmp, "w") as f:
             json.dump(data, f)
         os.replace(tmp, self.path)
+
+    def load(self) -> bool:
+        """Restore ``_latest`` and ``_history`` from the JSON file written
+        by :meth:`save`.  Returns False (leaving state untouched) when the
+        store has no path or the file does not exist."""
+        if not self.path or not os.path.exists(self.path):
+            return False
+        with open(self.path) as f:
+            data = json.load(f)
+        self._latest.clear()
+        self._history.clear()
+        for key, hist in data.items():
+            a, n = key.split("|", 1)
+            for t, rtt_pred in hist:
+                self.put(a, n, float(t), float(rtt_pred))
+        return True

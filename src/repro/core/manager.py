@@ -2,6 +2,12 @@
 (application, node) pair, re-enables paused ones, injects controlled noisy
 load at bootstrap so predictors see RTT variability (paper §4.4), and runs
 the 5-minute data-collection cycles.
+
+Trained predictors publish their state into one shared
+:class:`~repro.core.prediction_plane.PredictionPlane`; per-cycle
+predictions and the router's per-request sweep both go through the
+plane's batched path (DESIGN.md §9) rather than per-predictor serial
+``predict()`` calls.
 """
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.knowledge import KnowledgeBase
+from repro.core.prediction_plane import PredictionPlane
 from repro.core.predictor import COLLECTION_PERIOD_S, RTTPredictor
 from repro.core.selection import WINDOWS_S
 from repro.core.workload import NodeWorkload, Task
@@ -23,6 +30,7 @@ class PredictionManager:
         self.kb = kb or KnowledgeBase()
         self.predictors: Dict[Tuple[str, str], RTTPredictor] = {}
         self.paused: Dict[Tuple[str, str], bool] = {}
+        self.plane = PredictionPlane()
         self.c_max = c_max
         self.fast_state = fast_state
         self.seed = seed
@@ -33,6 +41,7 @@ class PredictionManager:
         key = (app, node.node)
         if key in self.predictors:
             self.paused[key] = False          # re-enable
+            self.plane.register_predictor(self.predictors[key])
             return self.predictors[key]
         pred = RTTPredictor(app, node.node, node.store, clock=node.clock,
                             c_max=self.c_max, seed=self.seed,
@@ -43,23 +52,31 @@ class PredictionManager:
 
     def pause(self, app: str, node: str):
         self.paused[(app, node)] = True
+        # a paused predictor must not be served by full-fleet plane sweeps
+        self.plane.unregister(app, node)
 
     # ------------------------------------------------------------------
     def router_predictors(self, app: str) -> Dict[str, RTTPredictor]:
         """Active predictors for one app, keyed by node name — the shape
-        ``MorpheusRouter`` consumes for its batched prediction sweep."""
-        return {node: p for (a, node), p in self.predictors.items()
-                if a == app and not self.paused.get((a, node))}
+        ``MorpheusRouter`` consumes.  Trained ones are (re)registered into
+        the shared plane on the way out, so a router built from this dict
+        can serve them all in one batched plane call."""
+        out = {}
+        for (a, node), p in self.predictors.items():
+            if a == app and not self.paused.get((a, node)):
+                self.plane.register_predictor(p)
+                out[node] = p
+        return out
 
     def make_router(self, replicas, app: str = "serve",
                     policy: str = "perf_aware", **kwargs):
-        """Build a MorpheusRouter wired to this manager's knowledge base
-        and predictors; ``policy`` is any name in the shared
-        ``repro.core.balancer.POLICIES`` registry."""
+        """Build a MorpheusRouter wired to this manager's knowledge base,
+        predictors, and prediction plane; ``policy`` is any name in the
+        shared ``repro.core.balancer.POLICIES`` registry."""
         from repro.serving.router import MorpheusRouter
         return MorpheusRouter(replicas, policy=policy, kb=self.kb,
                               predictors=self.router_predictors(app),
-                              **kwargs)
+                              plane=self.plane, **kwargs)
 
     # ------------------------------------------------------------------
     def attach(self, node: NodeWorkload):
@@ -91,10 +108,16 @@ class PredictionManager:
     # ------------------------------------------------------------------
     def run_cycles(self, node: NodeWorkload, n_cycles: int = 3,
                    cycle_s: float = COLLECTION_PERIOD_S, on_complete=None):
-        """Alternate workload simulation and collection/training cycles."""
+        """Alternate workload simulation and collection/training cycles.
+
+        After each cycle's trainings, every trained predictor on the node
+        publishes its artifact to the plane and the cycle's predictions
+        run as ONE batched plane call (state retrieval amortized across
+        the node's predictors, one jitted dispatch per model bucket)."""
         history = []
         for c in range(n_cycles):
             node.run(cycle_s, on_complete=on_complete)
+            cycle_keys = []
             for (app, nname), pred in self.predictors.items():
                 if nname != node.node or self.paused.get((app, nname)):
                     continue
@@ -103,7 +126,19 @@ class PredictionManager:
                     rmse = pred.train()
                     if rmse is not None:
                         history.append((node.clock.now(), app, rmse))
-                    rec = pred.predict()
-                    if rec is not None:
-                        self.kb.put(app, nname, rec.t, rec.rtt_pred)
+                    if self.plane.register_predictor(pred) or \
+                            (app, nname) in self.plane:
+                        cycle_keys.append((app, nname))
+                    elif pred.choice is not None:
+                        # model without a functional-apply export (e.g. a
+                        # test double): fall back to the serial path so
+                        # the knowledge base still gets its prediction
+                        rec = pred.predict()
+                        if rec is not None:
+                            self.kb.put(app, nname, rec.t, rec.rtt_pred)
+            if cycle_keys:
+                recs = self.plane.predict_all(cycle_keys)
+                for (app, nname), rec in recs.items():
+                    self.kb.put(app, nname, rec.t, rec.rtt_pred)
+                    self.predictors[(app, nname)].predictions.append(rec)
         return history

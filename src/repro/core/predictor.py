@@ -30,6 +30,10 @@ THETA_RETRAIN = 0.10          # Eq. 7 threshold
 COLLECTION_PERIOD_S = 300.0   # 5-minute data-collection cycle
 CONFIRM_R = 0.05              # median within r% ...
 CONFIRM_ALPHA = 0.95          # ... at alpha confidence
+# modeled feature-extraction cost per selected metric (the same linear
+# model Eq. 4's feature_delay budget term uses during (w*, r*, k*)
+# selection) — also the t_feature recorded under a simulated clock
+FEATURE_DELAY_PER_METRIC = 1e-4
 
 
 def confirm_enough_samples(rtts: np.ndarray, r: float = CONFIRM_R,
@@ -73,10 +77,53 @@ class PredictionRecord:
     t_state: float
     t_feature: float
     t_inference: float
+    basis: str = "modeled"    # "modeled" (SimClock) or "wall" (live serving)
+    # measured wall deltas of the actual implementation, kept separately
+    # so t_prediction never mixes time bases; under a simulated clock
+    # these quantify the real in-process cost (e.g. the zero-copy fast
+    # path in benchmarks/bench_breakdown.py) while t_* stay modeled
+    t_wall_state: float = 0.0
+    t_wall_feature: float = 0.0
+    t_wall_inference: float = 0.0
 
     @property
     def t_prediction(self):
         return self.t_state + self.t_feature + self.t_inference
+
+    @property
+    def t_wall_prediction(self):
+        return self.t_wall_state + self.t_wall_feature + self.t_wall_inference
+
+
+@dataclass
+class InferenceArtifact:
+    """A predictor's trained state, exported for fleet-batched inference.
+
+    Pure data (no store / lifecycle references): everything the
+    :class:`~repro.core.prediction_plane.PredictionPlane` needs to stack
+    this predictor with others of the same (family, window, k) bucket and
+    run one jitted feature-extraction + predict for the whole bucket.
+    """
+    app: str
+    node: str
+    family: str                      # zoo model name
+    sequential: bool
+    metric_names: Tuple[str, ...]    # resolved from metric_idx at export
+    window_s: float
+    params: object                   # pure-jax pytree (zoo.inference_params)
+    scaler_lo: Optional[np.ndarray]  # (k*F,) feature MinMax (non-sequential)
+    scaler_hi: Optional[np.ndarray]
+    seq_lo: Optional[np.ndarray]     # (k, 1) raw-window scale (sequential)
+    seq_hi: Optional[np.ndarray]
+    y_lo: float
+    y_hi: float
+    t_inference: float               # modeled per-inference cost (Eq. 6)
+    fast_state: bool
+    version: int                     # bumped by every (re)training
+
+    @property
+    def k(self) -> int:
+        return len(self.metric_names)
 
 
 class RTTPredictor:
@@ -105,6 +152,7 @@ class RTTPredictor:
         self._pending_windows: List[np.ndarray] = []
         self.predictions: List[PredictionRecord] = []
         self._corr_scores: Dict = {}
+        self.artifact_version = 0     # bumped by every (re)training
 
     # ------------------------------------------------------------------
     # data collection process
@@ -165,7 +213,7 @@ class RTTPredictor:
             corr,
             state_delay=lambda k, w: 0.0 if self.fast_state
             else retr.delay(k, w),
-            feature_delay=lambda k, w: 1e-4 * k,
+            feature_delay=lambda k, w: FEATURE_DELAY_PER_METRIC * k,
             mean_rtt=self._mean_rtt())
         self.correlations_valid = self.selected is not None
 
@@ -223,18 +271,34 @@ class RTTPredictor:
                 if self.selected is not None:
                     return self.train(force_full=True)
         self.rmse_history.append((self.clock.now(), new_rmse))
+        self.artifact_version += 1
         return new_rmse
 
     # ------------------------------------------------------------------
     # prediction process
+    def metric_names(self) -> List[str]:
+        """Selected metric names (metric_idx resolved against the store)."""
+        names = self.store.names
+        return [names[i] for i in self.selected.metric_idx
+                if i < len(names)]
+
     def predict(self) -> Optional[PredictionRecord]:
+        """One serial prediction: state retrieval -> features -> inference.
+
+        Timing uses ONE basis per record: under a simulated clock every
+        component is the *modeled* delay (state from the RetrievalModel,
+        feature from the Eq. 4 budget term, inference from the Eq. 6
+        measurement at selection time); under a wall clock every component
+        is the measured wall delta.  The seed mixed the two bases inside
+        one record, so t_prediction compared seconds of simulated time
+        against microseconds of wall time.
+        """
         if self.choice is None or self.selected is None:
             return None
         sel = self.selected
-        names = [self.store.names[i] for i in sel.metric_idx
-                 if i < len(self.store.names)]
+        names = self.metric_names()
         t0 = time.perf_counter()
-        window, t_state = self.store.query_window(
+        window, modeled_state = self.store.query_window(
             names, sel.window_s, fast=self.fast_state)
         t1 = time.perf_counter()
         model = self.choice.model
@@ -242,19 +306,47 @@ class RTTPredictor:
             lo = self._seq_lo[0]
             hi = self._seq_hi[0]
             X = (window - lo) / np.maximum(hi - lo, 1e-9)
-            t2 = time.perf_counter()
-            t_feature = t2 - t1
         else:
             feats = np.asarray(extract_features(window[None]))  # (1,k,F)
             X = self.scaler_X.transform(feats.reshape(1, -1))[0]
-            t2 = time.perf_counter()
-            t_feature = t2 - t1
+        t2 = time.perf_counter()
         y_n = float(np.asarray(model.predict(X)).reshape(-1)[0])
-        t_inf = time.perf_counter() - t2
+        t3 = time.perf_counter()
         rtt = y_n * max(self.y_hi - self.y_lo, 1e-9) + self.y_lo
-        rec = PredictionRecord(self.clock.now(), rtt,
-                               t_state if not self.fast_state
-                               else (t1 - t0),
-                               t_feature, t_inf)
+        if self.clock.simulated:
+            rec = PredictionRecord(
+                self.clock.now(), rtt, modeled_state,
+                FEATURE_DELAY_PER_METRIC * len(names),
+                self.choice.t_inference, basis="modeled")
+        else:  # pragma: no cover - live serving
+            rec = PredictionRecord(self.clock.now(), rtt, t1 - t0,
+                                   t2 - t1, t3 - t2, basis="wall")
+        rec.t_wall_state = t1 - t0
+        rec.t_wall_feature = t2 - t1
+        rec.t_wall_inference = t3 - t2
         self.predictions.append(rec)
         return rec
+
+    def export_artifact(self) -> Optional[InferenceArtifact]:
+        """Trained state as a stackable :class:`InferenceArtifact`, or
+        None while untrained (or when the model lacks a functional-apply
+        export, e.g. test doubles)."""
+        if self.choice is None or self.selected is None:
+            return None
+        model = self.choice.model
+        try:
+            params = model.inference_params()
+        except (AttributeError, NotImplementedError):
+            return None
+        seq = bool(model.sequential)
+        return InferenceArtifact(
+            app=self.app, node=self.node, family=model.name, sequential=seq,
+            metric_names=tuple(self.metric_names()),
+            window_s=self.selected.window_s, params=params,
+            scaler_lo=None if seq else np.asarray(self.scaler_X.lo),
+            scaler_hi=None if seq else np.asarray(self.scaler_X.hi),
+            seq_lo=None if not seq else np.asarray(self._seq_lo[0]),
+            seq_hi=None if not seq else np.asarray(self._seq_hi[0]),
+            y_lo=float(self.y_lo), y_hi=float(self.y_hi),
+            t_inference=float(self.choice.t_inference),
+            fast_state=self.fast_state, version=self.artifact_version)

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
+from repro.monitoring.metrics import PeriodicRefresh
 
 # SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
 # the paper's app set (upload / MotionCor2 / FFT mock / gCTF / ctffind4).
@@ -193,10 +194,11 @@ def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
     busy_until = np.zeros((T, R))
     metrics = _Metrics(cfg)
 
-    # stale-prediction state: the predictor's occupancy snapshot
+    # stale-prediction state: the predictor's occupancy snapshot refreshes
+    # on the plane's periodic-collection cadence (shared PeriodicRefresh),
+    # not per request
     lag = cfg.prediction_lag_s
-    stale_busy = busy_until.copy() if lag > 0 else None
-    last_refresh = -np.inf
+    snapshot = PeriodicRefresh(lag) if lag > 0 else None
     churn_pending = cfg.churn is not None
 
     for j in range(J):
@@ -215,10 +217,8 @@ def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
 
         # predicted RTT: Eq. 12 with eps = (1 - p) * actual, computed on
         # the (possibly stale) occupancy snapshot the predictor last saw
-        if lag > 0:
-            if now - last_refresh >= lag:
-                stale_busy = busy_until.copy()
-                last_refresh = now
+        if snapshot is not None:
+            stale_busy = snapshot.get(now, busy_until.copy)
             pred_basis = cluster.rtt_draw(j, a, candidates, stale_busy, now)
         else:
             pred_basis = actual

@@ -11,6 +11,10 @@ Every model implements:
   fit(X, y)        — full training
   partial_fit(X, y)— online / warm update (paper's re-training mode)
   predict(X)       — jitted inference (single sample or batch)
+  inference_params()— trained state as a pure-jax pytree, consumed with the
+                     family's functional ``single_apply``/``stacked_apply``
+                     (the fleet prediction plane vmaps one apply over many
+                     models' stacked params — DESIGN.md §9)
   name, sequential
 """
 from __future__ import annotations
@@ -41,8 +45,17 @@ class _Base:
     def predict(self, X):
         raise NotImplementedError
 
+    def inference_params(self):
+        """Trained state as a pure-jax pytree for the functional apply."""
+        raise NotImplementedError
+
 
 # ----------------------------------------------------------------------
+def _linear_apply(w, x):
+    """x: (d,) -> scalar; w: (d+1,) with trailing bias."""
+    return x @ w[:-1] + w[-1]
+
+
 class LinearRegression(_Base):
     name = "lr"
 
@@ -61,6 +74,9 @@ class LinearRegression(_Base):
     def predict(self, X):
         X = _as2d(X)
         return X @ self.w[:-1] + self.w[-1]
+
+    def inference_params(self):
+        return self.w
 
 
 class SVRLinear(_Base):
@@ -105,6 +121,9 @@ class SVRLinear(_Base):
     def predict(self, X):
         X = _as2d(X)
         return X @ self.w[:-1] + self.w[-1]
+
+    def inference_params(self):
+        return self.w
 
 
 # ----------------------------------------------------------------------
@@ -219,6 +238,20 @@ class GBT(_Base):
     def predict(self, X):
         return _gbt_predict(self._bin(_as2d(X)), self.base, self.trees)
 
+    def inference_params(self):
+        # edges stacked (d, n_bins-1): every edges[j] is already padded to
+        # n_bins-1 entries with +inf, so the stack is rectangular
+        return (self.base, self.trees, jnp.asarray(np.stack(self.edges)))
+
+
+def _gbt_apply(params, x):
+    """x: (d,) -> scalar.  ``edges < x`` counts match np.searchsorted
+    (side='left'): number of bin edges strictly below the value."""
+    base, trees, edges = params
+    xb = jnp.sum(edges < x[:, None], axis=1).astype(jnp.int32)
+    xb = jnp.clip(xb, 0, edges.shape[1])
+    return _gbt_predict(xb[None], base, trees)[0]
+
 
 class RandTrees(GBT):
     """Randomized-threshold averaged trees (Random-Forest stand-in): same
@@ -256,6 +289,14 @@ def _adam_update(params, grads, m, v, t, lr):
     return new_p, new_m, new_v
 
 
+def _mlp_forward(params, X):
+    h = X
+    for (w, b) in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return (h @ w + b)[:, 0]
+
+
 class FNN(_Base):
     name = "fnn"
 
@@ -264,11 +305,7 @@ class FNN(_Base):
         self.params = None
 
     def _fwd(self, params, X):
-        h = X
-        for (w, b) in params[:-1]:
-            h = jax.nn.relu(h @ w + b)
-        w, b = params[-1]
-        return (h @ w + b)[:, 0]
+        return _mlp_forward(params, X)
 
     def _train(self, params, X, y, epochs):
         def loss(p):
@@ -306,10 +343,17 @@ class FNN(_Base):
     def predict(self, X):
         return self._fwd(self.params, _as2d(X))
 
+    def inference_params(self):
+        return self.params
+
 
 # ----------------------------------------------------------------------
 class _Recurrent(_Base):
-    """Shared scaffolding for RNN/LSTM/GRU over (n, k_metrics, w) windows."""
+    """Shared scaffolding for RNN/LSTM/GRU over (n, k_metrics, w) windows.
+
+    ``_fwd``/``_cell``/``_h0`` are classmethods (they use only class
+    attributes), so the trained params pytree plus the class form a pure
+    functional apply the prediction plane can vmap over a fleet."""
     sequential = True
     hidden = 32
 
@@ -320,24 +364,27 @@ class _Recurrent(_Base):
     def _init(self, key, d_in):
         raise NotImplementedError
 
-    def _cell(self, params, h, x):
+    @classmethod
+    def _cell(cls, params, h, x):
         raise NotImplementedError
 
-    def _fwd(self, params, X):
+    @classmethod
+    def _fwd(cls, params, X):
         # X: (n, k, w) -> scan over w with input (n, k)
         cell_p, (wo, bo) = params
         Xt = jnp.moveaxis(X, -1, 0)                            # (w, n, k)
-        h0 = self._h0(X.shape[0])
+        h0 = cls._h0(X.shape[0])
 
         def step(h, x):
-            return self._cell(cell_p, h, x), None
+            return cls._cell(cell_p, h, x), None
 
         h, _ = jax.lax.scan(step, h0, Xt)
         hf = h[0] if isinstance(h, tuple) else h
         return (hf @ wo + bo)[:, 0]
 
-    def _h0(self, n):
-        return jnp.zeros((n, self.hidden))
+    @classmethod
+    def _h0(cls, n):
+        return jnp.zeros((n, cls.hidden))
 
     def fit(self, X, y):
         X = jnp.asarray(X, jnp.float32)
@@ -384,6 +431,9 @@ class _Recurrent(_Base):
             X = X[None]
         return self._fwd(self.params, X)
 
+    def inference_params(self):
+        return self.params
+
 
 class RNN(_Recurrent):
     name = "rnn"
@@ -397,7 +447,8 @@ class RNN(_Recurrent):
         out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
         return (cell, out)
 
-    def _cell(self, p, h, x):
+    @classmethod
+    def _cell(cls, p, h, x):
         wx, wh, b = p
         return jnp.tanh(x @ wx + h @ wh + b)
 
@@ -414,14 +465,15 @@ class GRU(_Recurrent):
         out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
         return (cell, out)
 
-    def _cell(self, p, h, x):
+    @classmethod
+    def _cell(cls, p, h, x):
         wx, wh, b = p
         zrg = x @ wx + h @ wh + b
         z, r, g = jnp.split(zrg, 3, axis=-1)
         z, r = jax.nn.sigmoid(z), jax.nn.sigmoid(r)
-        g = jnp.tanh(x @ wx[:, 2 * self.hidden:]
-                     + (r * h) @ wh[:, 2 * self.hidden:]
-                     + b[2 * self.hidden:])
+        g = jnp.tanh(x @ wx[:, 2 * cls.hidden:]
+                     + (r * h) @ wh[:, 2 * cls.hidden:]
+                     + b[2 * cls.hidden:])
         return (1 - z) * h + z * g
 
 
@@ -437,10 +489,12 @@ class LSTM(_Recurrent):
         out = (jax.random.normal(k3, (self.hidden, 1)) * s, jnp.zeros((1,)))
         return (cell, out)
 
-    def _h0(self, n):
-        return (jnp.zeros((n, self.hidden)), jnp.zeros((n, self.hidden)))
+    @classmethod
+    def _h0(cls, n):
+        return (jnp.zeros((n, cls.hidden)), jnp.zeros((n, cls.hidden)))
 
-    def _cell(self, p, hc, x):
+    @classmethod
+    def _cell(cls, p, hc, x):
         wx, wh, b = p
         h, c = hc
         ifgo = x @ wx + h @ wh + b
@@ -464,7 +518,8 @@ class CNN(_Recurrent):
                  jnp.zeros((c,))),
                 (jax.random.normal(k3, (c, 1)) * c ** -0.5, jnp.zeros((1,))))
 
-    def _fwd(self, params, X):
+    @classmethod
+    def _fwd(cls, params, X):
         (w1, b1, w2, b2), (wo, bo) = params
         h = jnp.moveaxis(X, 1, 2)                              # (n, w, k)
 
@@ -485,6 +540,32 @@ NONSEQ_MODELS = {"lr": LinearRegression, "svm": SVRLinear, "xgb": GBT,
                  "rf": RandTrees, "fnn": FNN}
 SEQ_MODELS = {"rnn": RNN, "lstm": LSTM, "gru": GRU, "cnn": CNN}
 ALL_MODELS = {**NONSEQ_MODELS, **SEQ_MODELS}
+
+
+# ----------------------------------------------------------------------
+# Functional inference: family -> pure apply over (inference_params, one
+# sample).  ``stacked_apply`` is the fleet form — params stacked along a
+# leading model axis (jax.tree.map(jnp.stack, ...)), one sample per model —
+# which the prediction plane jits once per bucket (DESIGN.md §9).
+@functools.lru_cache(maxsize=None)
+def single_apply(family: str):
+    """(params, x) -> scalar prediction; x is (d,) features for
+    non-sequential families, (k_metrics, w) windows for sequential ones."""
+    if family in ("lr", "svm"):
+        return _linear_apply
+    if family in ("xgb", "rf"):
+        return _gbt_apply
+    if family == "fnn":
+        return lambda p, x: _mlp_forward(p, x[None])[0]
+    cls = SEQ_MODELS[family]
+    return lambda p, x: cls._fwd(p, x[None])[0]
+
+
+@functools.lru_cache(maxsize=None)
+def stacked_apply(family: str):
+    """vmap of ``single_apply`` over a leading fleet axis on both params
+    and samples: (stacked_params, X (B, ...)) -> (B,) predictions."""
+    return jax.vmap(single_apply(family))
 
 
 def candidates_for(corr_method: str, n_samples: int):

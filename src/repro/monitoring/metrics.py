@@ -1,4 +1,4 @@
-"""Prometheus stand-in: per-node ring-buffer time-series store.
+"""Prometheus stand-in: columnar per-node ring-buffer time-series store.
 
 The paper scrapes metrics every 200 ms and finds state *retrieval* to be
 89.2% of the total prediction delay (its Fig. 9/10).  We keep the 200 ms
@@ -8,12 +8,20 @@ shape of Fig. 10: grows with #metrics and window length), so the paper's
 (``query_window(..., fast=True)``) bypasses the modeled HTTP/TSDB latency —
 that's the beyond-paper optimization of serving windows zero-copy from the
 in-process ring buffer (quantified in benchmarks/bench_breakdown.py).
+
+Storage is columnar: ONE ``(n_metrics, capacity)`` ring array shared by
+all series, written one column per scrape.  ``query_windows`` gathers an
+arbitrary batch of (name-set, window) requests in a single fancy-indexing
+pass (wraparound included) and accounts the whole batch as ONE modeled
+range query — the fixed HTTP round trip is paid once per batch, which is
+the state-retrieval amortization the fleet prediction plane
+(``core/prediction_plane.py``, DESIGN.md §9) builds on.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +45,29 @@ class SimClock:
             time.sleep(dt)
 
 
+class PeriodicRefresh:
+    """A value recomputed only every ``lag_s`` of its owner's clock.
+
+    Models the paper §4 periodic collection cadence: consumers between
+    refreshes see the last snapshot, not live state.  Shared by the
+    prediction plane's snapshot cache (DESIGN.md §9) and the simulator's
+    ``prediction_lag_s`` stale-occupancy scenario.
+    """
+
+    def __init__(self, lag_s: float):
+        self.lag_s = lag_s
+        self._t_last = -np.inf
+        self._value = None
+
+    def get(self, now: float, compute):
+        """Return the cached value, recomputing via ``compute()`` when the
+        snapshot is older than ``lag_s`` (always on first call)."""
+        if now - self._t_last >= self.lag_s:
+            self._value = compute()
+            self._t_last = now
+        return self._value
+
+
 @dataclass
 class RetrievalModel:
     """t_state(k, w) latency model, calibrated so that with a mean RTT of
@@ -50,37 +81,133 @@ class RetrievalModel:
         points = k * window_s / SCRAPE_INTERVAL
         return self.base + self.per_metric * k + self.per_point * points
 
+    def delay_batch(self, ks: Sequence[int],
+                    windows_s: Sequence[float]) -> np.ndarray:
+        """Per-request delays for a batch issued as ONE range query.
+
+        The fixed HTTP round trip (``base``) is paid once and spread evenly
+        over the batch; per-series and per-sample costs stay per request.
+        A batch of one is therefore exactly ``delay(k, w)``.
+        """
+        ks = np.asarray(ks, np.float64)
+        ws = np.asarray(windows_s, np.float64)
+        if ks.size == 0:
+            return np.zeros(0)
+        points = ks * ws / SCRAPE_INTERVAL
+        return (self.base / ks.size + self.per_metric * ks
+                + self.per_point * points)
+
 
 class MetricsStore:
-    """Ring buffers (one per metric) at 200 ms resolution."""
+    """Columnar ring buffer: one (n_metrics, capacity) array at 200 ms
+    resolution, rows in registration order, one column per scrape."""
 
     def __init__(self, capacity_s: float = 600.0, clock: Optional[SimClock] = None,
                  retrieval: Optional[RetrievalModel] = None):
         self.capacity = int(capacity_s / SCRAPE_INTERVAL)
         self.clock = clock or SimClock()
         self.retrieval = retrieval or RetrievalModel()
-        self._buf: Dict[str, np.ndarray] = {}
+        self._data = np.zeros((0, self.capacity), np.float32)
+        self._index: Dict[str, int] = {}        # name -> row
+        self._row_names: List[str] = []         # row -> name
         self._head = 0            # global write index (same for all metrics)
         self._t_head = 0.0
         self.query_time_spent = 0.0   # accumulated modeled retrieval delay
+        self._scrape_cache: Dict[Tuple[str, ...], np.ndarray] = {}
 
     def register(self, names: Sequence[str]):
-        for n in names:
-            if n not in self._buf:
-                self._buf[n] = np.zeros((self.capacity,), np.float32)
+        new = [n for n in names if n not in self._index]
+        if new:
+            for n in new:
+                self._index[n] = len(self._row_names)
+                self._row_names.append(n)
+            self._data = np.concatenate(
+                [self._data, np.zeros((len(new), self.capacity), np.float32)])
+            self._scrape_cache.clear()
 
     @property
     def names(self) -> List[str]:
-        return sorted(self._buf)
+        return sorted(self._index)
+
+    def _rows_for(self, names: Tuple[str, ...]) -> np.ndarray:
+        rows = self._scrape_cache.get(names)
+        if rows is None:
+            rows = np.array([self._index[n] for n in names], np.int64)
+            self._scrape_cache[names] = rows
+        return rows
 
     def scrape(self, values: Dict[str, float], t: Optional[float] = None):
-        """Record one 200 ms scrape of all metrics."""
+        """Record one 200 ms scrape of all metrics (one column write).
+
+        Metrics registered but absent from ``values`` carry their previous
+        sample forward (Prometheus staleness semantics)."""
         self.register(list(values))
         i = self._head % self.capacity
-        for n, buf in self._buf.items():
-            buf[i] = np.float32(values.get(n, buf[(i - 1) % self.capacity]))
+        col = self._data[:, (i - 1) % self.capacity].copy()
+        rows = self._rows_for(tuple(values))
+        col[rows] = np.fromiter(values.values(), np.float32, count=len(rows))
+        self._data[:, i] = col
         self._head += 1
         self._t_head = self.clock.now() if t is None else t
+
+    # ------------------------------------------------------------------
+    def _w_points(self, window_s: float) -> int:
+        return min(max(1, int(round(window_s / SCRAPE_INTERVAL))),
+                   self.capacity)
+
+    def query_windows(self, requests: Sequence[Tuple[Sequence[str], float]],
+                      fast: bool = False):
+        """Batched range query: many (names, window_s) requests at once.
+
+        Gathers every requested (row, column) sample in ONE fancy-indexing
+        pass over the columnar ring (wraparound included, pre-history
+        zero-padded) and accounts the modeled retrieval delay for the whole
+        batch as a single range query (``RetrievalModel.delay_batch``: the
+        fixed round trip amortized across the batch).
+
+        Returns ``(arrays, delays)``: one (k, w_points) float32 array and
+        one modeled-delay float per request.
+        """
+        flat_rows: List[np.ndarray] = []
+        flat_cols: List[np.ndarray] = []
+        shapes: List[Tuple[int, int, int]] = []   # (k, w_points, avail)
+        masks: List[np.ndarray] = []              # valid-row masks
+        for names, window_s in requests:
+            w_points = self._w_points(window_s)
+            avail = min(w_points, self._head)     # zero-pad pre-history
+            rows = np.array([self._index.get(n, -1) for n in names], np.int64)
+            masks.append(rows >= 0)
+            if avail > 0:
+                cols = np.arange(self._head - avail, self._head) \
+                    % self.capacity
+                flat_rows.append(
+                    np.repeat(np.where(rows >= 0, rows, 0), avail))
+                flat_cols.append(np.tile(cols, len(names)))
+            shapes.append((len(names), w_points, avail))
+        out: List[np.ndarray] = []
+        if flat_rows:
+            gathered = self._data[np.concatenate(flat_rows),
+                                  np.concatenate(flat_cols)]
+        else:
+            gathered = np.zeros(0, np.float32)
+        off = 0
+        for (k, w_points, avail), mask in zip(shapes, masks):
+            arr = np.zeros((k, w_points), np.float32)
+            if avail > 0:
+                block = gathered[off:off + k * avail].reshape(k, avail)
+                arr[:, w_points - avail:] = np.where(mask[:, None], block, 0.0)
+                off += k * avail
+            out.append(arr)
+        if fast:
+            delays = np.zeros(len(out))
+        else:
+            delays = self.retrieval.delay_batch(
+                [s[0] for s in shapes], [w for _, w in requests])
+        total = float(delays.sum())
+        self.query_time_spent += total
+        if total:
+            self.clock.advance(total)
+        return out, delays
 
     def query_window(self, names: Sequence[str], window_s: float,
                      end_t: Optional[float] = None, fast: bool = False):
@@ -89,18 +216,9 @@ class MetricsStore:
         fast=False models the Prometheus range-query latency (added to the
         sim clock and accounted in query_time_spent); fast=True is the
         zero-copy in-process path (beyond-paper).
-        Returns (array, modeled_delay_seconds).
+        Returns (array, modeled_delay_seconds).  A single query is a batch
+        of one through :meth:`query_windows` (identical modeled delay to
+        the pre-columnar per-name path).
         """
-        w_points = max(1, int(round(window_s / SCRAPE_INTERVAL)))
-        w_points = min(w_points, self.capacity)
-        out = np.zeros((len(names), w_points), np.float32)
-        avail = min(w_points, self._head)      # zero-pad pre-history
-        if avail > 0:
-            idx = (np.arange(self._head - avail, self._head)) % self.capacity
-            for j, n in enumerate(names):
-                if n in self._buf:
-                    out[j, w_points - avail:] = self._buf[n][idx]
-        delay = 0.0 if fast else self.retrieval.delay(len(names), window_s)
-        self.query_time_spent += delay
-        self.clock.advance(delay)
-        return out, delay
+        arrays, delays = self.query_windows([(names, window_s)], fast=fast)
+        return arrays[0], float(delays[0])

@@ -7,14 +7,15 @@ dispatches through the same ``POLICIES`` engine the §6 simulator and the
 benchmarks use (DESIGN.md §8), so the served policy and the simulated
 policy cannot diverge.
 
-For ``perf_aware`` the router asks every replica's predictor for an RTT
-estimate in ONE batched call (beyond-paper: the paper computes one
-prediction per request per replica; batching the replicas amortises state
-retrieval + inference) and models each replica's queue wait as
-``pending waves x predicted wave RTT``.  Prediction-guided hedging
-doubles as straggler mitigation: when ``hedge_factor`` is set the policy
-may also queue the request on the runner-up replica (see
-``PerfAware.hedge_candidates``).
+For ``perf_aware`` the router serves every replica's RTT estimate from
+the :class:`~repro.core.prediction_plane.PredictionPlane` in ONE
+``predict_all`` call (beyond-paper: the paper computes one prediction per
+request per replica; the plane batches state retrieval across replicas
+and runs one jitted inference per model bucket — DESIGN.md §9) and
+models each replica's queue wait as ``pending waves x predicted wave
+RTT``.  Prediction-guided hedging doubles as straggler mitigation: when
+``hedge_factor`` is set the policy may also queue the request on the
+runner-up replica (see ``PerfAware.hedge_candidates``).
 """
 from __future__ import annotations
 
@@ -24,6 +25,7 @@ import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
 from repro.core.knowledge import KnowledgeBase
+from repro.core.prediction_plane import PredictionPlane
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -31,12 +33,14 @@ class MorpheusRouter:
     def __init__(self, replicas: Sequence[ServingEngine], policy: str = "perf_aware",
                  kb: Optional[KnowledgeBase] = None,
                  predictors: Optional[dict] = None,
+                 plane: Optional[PredictionPlane] = None,
                  hedge_factor: Optional[float] = None, seed: int = 0):
         self.replicas = list(replicas)
         self.policy_name = policy
         self.policy = make_policy(policy, seed=seed, hedge_factor=hedge_factor)
         self.kb = kb or KnowledgeBase()
         self.predictors = predictors or {}
+        self.plane = plane or PredictionPlane()
         self.hedge_factor = hedge_factor
         self.routed: List[int] = []
         self.hedged: List[int] = []
@@ -44,11 +48,36 @@ class MorpheusRouter:
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
-        """One batched predictor sweep across replicas."""
-        preds = np.full(len(self.replicas), np.inf)
+        """One batched plane sweep across replicas.
+
+        Retrained predictors are re-exported first (version check, no-op
+        when unchanged), then the whole fleet is served by a single
+        ``PredictionPlane.predict_all`` — O(model buckets) jitted
+        dispatches, one batched state query per store — instead of the
+        seed's per-replica serial ``RTTPredictor.predict`` loop.
+        Replicas without a trained predictor fall back to the knowledge
+        base, then to a queue-depth proxy.
+        """
+        key_of = {}
         for i, rep in enumerate(self.replicas):
             p = self.predictors.get(rep.node)
+            if p is not None:
+                self.plane.register_predictor(p)
+                key_of[(p.app, p.node)] = i
+        recs = self.plane.predict_all(list(key_of)) if key_of else {}
+        preds = np.full(len(self.replicas), np.inf)
+        for key, rec in recs.items():
+            i = key_of[key]
+            self.kb.put("serve", self.replicas[i].node, rec.t, rec.rtt_pred)
+            self.predictors[self.replicas[i].node].predictions.append(rec)
+            preds[i] = rec.rtt_pred
+        for i, rep in enumerate(self.replicas):
+            if np.isfinite(preds[i]):
+                continue
+            p = self.predictors.get(rep.node)
             if p is not None and p.choice is not None:
+                # trained but not plane-exportable (e.g. a test double
+                # without inference_params): serial path still serves it
                 rec = p.predict()
                 if rec is not None:
                     self.kb.put("serve", rep.node, rec.t, rec.rtt_pred)

@@ -1,0 +1,70 @@
+"""Synthetic trained-predictor builders shared by the test suite and the
+prediction-plane benchmark (one definition of the injected trained-state
+shape, so parity tests and benchmarks exercise the same setup).
+
+``make_trained_predictor`` skips the slow 5-minute collection/training
+lifecycle and injects trained state directly: model trained on
+in-distribution windows so plane/serial parity is checked at realistic
+prediction magnitudes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import selection, zoo
+from repro.core.features import extract_features
+from repro.core.predictor import MinMax, RTTPredictor
+from repro.monitoring.metrics import SCRAPE_INTERVAL, MetricsStore, SimClock
+
+N_METRICS = 10
+WINDOW_S = 5.0
+K = 4
+# families trained by iterative optimization: a small epoch count keeps
+# synthetic fixtures fast without changing the inference path under test
+_ITERATIVE = ("svm", "fnn", "rnn", "lstm", "gru", "cnn")
+
+
+def make_store(seed=0, n_scrapes=400, capacity_s=120.0,
+               n_metrics=N_METRICS) -> MetricsStore:
+    """Store scraped with standard-normal metrics every 200 ms."""
+    rng = np.random.default_rng(seed)
+    clock = SimClock()
+    store = MetricsStore(capacity_s=capacity_s, clock=clock)
+    names = [f"m{i:02d}" for i in range(n_metrics)]
+    for _ in range(n_scrapes):
+        store.scrape({n: float(v) for n, v in
+                      zip(names, rng.standard_normal(n_metrics))})
+        clock.advance(SCRAPE_INTERVAL)
+    return store
+
+
+def make_trained_predictor(app, store, family, k=K, window_s=WINDOW_S,
+                           seed=0, node="node-0", fast_state=True,
+                           n_samples=64) -> RTTPredictor:
+    rng = np.random.default_rng(seed)
+    p = RTTPredictor(app, node, store, fast_state=fast_state)
+    idx = np.sort(rng.choice(len(store.names), size=k, replace=False))
+    p.selected = selection.SelectedConfig(window_s, "pearson", idx,
+                                          total_corr=1.0, t_state=0.0,
+                                          t_feature=0.0)
+    w_pts = int(round(window_s / SCRAPE_INTERVAL))
+    X_raw = rng.standard_normal((n_samples, k, w_pts)).astype(np.float32)
+    y = rng.uniform(1.0, 5.0, n_samples).astype(np.float32)
+    p._seq_lo = X_raw.min(axis=(0, 2), keepdims=True)
+    p._seq_hi = X_raw.max(axis=(0, 2), keepdims=True)
+    p.y_lo, p.y_hi = float(y.min()), float(y.max())
+    y_n = (y - p.y_lo) / max(p.y_hi - p.y_lo, 1e-9)
+    kwargs = {"epochs": 5} if family in _ITERATIVE else {}
+    model = zoo.ALL_MODELS[family](**kwargs)
+    feats = np.asarray(extract_features(X_raw)).reshape(n_samples, -1)
+    p.scaler_X = MinMax().fit(feats)
+    if model.sequential:
+        X_seq = (X_raw - p._seq_lo) / np.maximum(
+            p._seq_hi - p._seq_lo, 1e-9)
+        model.fit(X_seq, y_n)
+    else:
+        model.fit(p.scaler_X.transform(feats), y_n)
+    p.choice = selection.ModelChoice(family, model, rmse=0.1,
+                                     t_inference=1e-4)
+    p.artifact_version = 1
+    return p

@@ -1,0 +1,37 @@
+"""KnowledgeBase JSON persistence round-trip (save was write-only in the
+seed: no load path existed)."""
+import numpy as np
+
+from repro.core.knowledge import KnowledgeBase
+
+
+def test_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "kb.json")
+    kb = KnowledgeBase(path=path)
+    kb.put("upload", "worker-1", 10.0, 8.25)
+    kb.put("upload", "worker-1", 20.0, 7.5)
+    kb.put("gctf", "worker-2", 15.0, 3.125)
+    kb.save()
+
+    kb2 = KnowledgeBase(path=path)
+    assert kb2.load()
+    assert kb2.latest("upload", "worker-1") == 7.5
+    assert kb2.latest("gctf", "worker-2") == 3.125
+    assert kb2.history("upload", "worker-1") == [(10.0, 8.25), (20.0, 7.5)]
+    v, age = kb2.latest_with_age("upload", "worker-1", now=25.0)
+    assert v == 7.5 and age == 5.0
+    # second-generation round trip is stable
+    kb2.put("gctf", "worker-2", 30.0, 3.5)
+    kb2.save()
+    kb3 = KnowledgeBase(path=path)
+    assert kb3.load()
+    assert kb3.history("gctf", "worker-2") == [(15.0, 3.125), (30.0, 3.5)]
+
+
+def test_load_missing_file_or_no_path_is_noop():
+    kb = KnowledgeBase()
+    kb.put("a", "n", 0.0, 1.0)
+    assert not kb.load()                      # no path configured
+    assert kb.latest("a", "n") == 1.0         # state untouched
+    kb2 = KnowledgeBase(path="/nonexistent/kb.json")
+    assert not kb2.load()

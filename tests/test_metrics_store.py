@@ -1,0 +1,100 @@
+"""Columnar MetricsStore: ring wraparound, batched queries, delay model.
+
+The seed suite never exercised a wrapped ring buffer; these tests write
+past capacity and check sample *order* through the wrap point, for both
+the single-window and the batched `query_windows` paths.
+"""
+import numpy as np
+
+from repro.monitoring.metrics import (SCRAPE_INTERVAL, MetricsStore,
+                                      RetrievalModel, SimClock)
+
+
+def _filled_store(n_scrapes: int, capacity_s: float = 4.0):
+    """Store with capacity_s/0.2 slots, scraped n_scrapes times with
+    strictly increasing values (value == scrape index)."""
+    st = MetricsStore(capacity_s=capacity_s, clock=SimClock())
+    for i in range(n_scrapes):
+        st.scrape({"a": float(i), "b": float(1000 + i)}, t=i * SCRAPE_INTERVAL)
+    return st
+
+
+def test_query_window_spanning_wrap_point_is_time_ordered():
+    # capacity 20, 33 scrapes: the write head wrapped at 20, so a 3 s
+    # window (15 points) spans the physical wrap between buffer indices
+    # 19 and 0 — samples must come back in time order, not buffer order
+    st = _filled_store(n_scrapes=33, capacity_s=4.0)
+    assert st.capacity == 20 and st._head > st.capacity
+    arr, _ = st.query_window(["a", "b"], 3.0, fast=True)
+    np.testing.assert_array_equal(arr[0], np.arange(18, 33, dtype=np.float32))
+    np.testing.assert_array_equal(arr[1],
+                                  np.arange(1018, 1033, dtype=np.float32))
+
+
+def test_query_windows_batched_spanning_wrap_matches_serial():
+    st = _filled_store(n_scrapes=47, capacity_s=4.0)
+    requests = [(["a"], 3.0), (["b", "a"], 1.0), (["a", "b"], 4.0)]
+    batched, delays = st.query_windows(requests, fast=True)
+    for (names, w), got in zip(requests, batched):
+        serial, _ = st.query_window(names, w, fast=True)
+        np.testing.assert_array_equal(got, serial)
+    # full-capacity window after 47 scrapes: oldest surviving sample is 27
+    np.testing.assert_array_equal(batched[2][0],
+                                  np.arange(27, 47, dtype=np.float32))
+
+
+def test_pre_history_zero_padded_and_unknown_names_zero():
+    st = _filled_store(n_scrapes=3, capacity_s=4.0)
+    arr, _ = st.query_window(["a", "nope"], 2.0, fast=True)
+    assert arr.shape == (2, 10)
+    np.testing.assert_array_equal(arr[0, :7], np.zeros(7, np.float32))
+    np.testing.assert_array_equal(arr[0, 7:], [0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(arr[1], np.zeros(10, np.float32))
+
+
+def test_scrape_carries_missing_metrics_forward():
+    st = MetricsStore(capacity_s=2.0, clock=SimClock())
+    st.scrape({"a": 1.0, "b": 5.0})
+    st.scrape({"a": 2.0})               # b absent -> previous sample holds
+    arr, _ = st.query_window(["a", "b"], 0.4, fast=True)
+    np.testing.assert_array_equal(arr, [[1.0, 2.0], [5.0, 5.0]])
+
+
+def test_batch_of_one_delay_matches_single_query_model():
+    st = _filled_store(n_scrapes=10)
+    model = st.retrieval
+    _, d = st.query_window(["a", "b"], 3.0)
+    assert abs(d - model.delay(2, 3.0)) < 1e-12
+
+
+def test_batched_delay_amortizes_base_round_trip():
+    rm = RetrievalModel()
+    ks, ws = [4, 4, 4], [5.0, 5.0, 5.0]
+    per_req = rm.delay_batch(ks, ws)
+    serial_total = sum(rm.delay(k, w) for k, w in zip(ks, ws))
+    # the fixed HTTP round trip is paid once per batch instead of per
+    # request: total saving is exactly (n-1) * base
+    assert abs(serial_total - per_req.sum() - 2 * rm.base) < 1e-12
+    # and accounting matches on the store
+    st = _filled_store(n_scrapes=10)
+    st.query_time_spent = 0.0
+    st.query_windows([(["a", "b"], 2.0), (["a"], 1.0)])
+    expect = rm.delay_batch([2, 1], [2.0, 1.0]).sum()
+    assert abs(st.query_time_spent - expect) < 1e-12
+
+
+def test_clock_advances_by_modeled_delay_only_when_not_fast():
+    st = _filled_store(n_scrapes=10)
+    t0 = st.clock.now()
+    st.query_window(["a"], 2.0, fast=True)
+    assert st.clock.now() == t0
+    _, d = st.query_window(["a"], 2.0, fast=False)
+    assert abs(st.clock.now() - t0 - d) < 1e-12
+
+
+def test_late_registration_grows_columnar_array_with_zero_history():
+    st = MetricsStore(capacity_s=2.0, clock=SimClock())
+    st.scrape({"a": 1.0})
+    st.scrape({"a": 2.0, "c": 9.0})     # c registered mid-stream
+    arr, _ = st.query_window(["c"], 0.4, fast=True)
+    np.testing.assert_array_equal(arr, [[0.0, 9.0]])

@@ -1,0 +1,191 @@
+"""Fleet prediction plane: parity with the serial per-predictor path,
+bucketed dispatch, padding, subset queries, and timing bases.
+
+The parity test is the refactor's safety net (DESIGN.md §9): for every
+model family the selection layer can pick (``zoo.candidates_for``), the
+batched plane output must match ``RTTPredictor.predict`` to ~1e-5, so the
+batched rewrite cannot silently change predictions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import zoo
+from repro.core.prediction_plane import (PeriodicRefresh, PredictionPlane,
+                                         _next_pow2)
+from repro.core.predictor import FEATURE_DELAY_PER_METRIC
+from repro.testing import K, WINDOW_S, make_store, make_trained_predictor
+
+# every family the paper's Table 2 selection can actually pick
+CANDIDATE_FAMILIES = sorted({
+    fam for method in ("pearson", "spearman", "kendall", "distance", "mic")
+    for n in (500, 5_000, 50_000)
+    for fam in zoo.candidates_for(method, n)})
+
+
+@pytest.fixture(scope="module")
+def family_fleet():
+    store = make_store()
+    preds = {fam: make_trained_predictor(f"app_{fam}", store, fam, seed=i)
+             for i, fam in enumerate(zoo.ALL_MODELS)}
+    return store, preds
+
+
+# ----------------------------------------------------------------------
+def test_candidate_families_covered_by_fleet(family_fleet):
+    _, preds = family_fleet
+    assert set(CANDIDATE_FAMILIES) <= set(preds)
+
+
+def test_plane_matches_serial_predict_for_every_family(family_fleet):
+    store, preds = family_fleet
+    plane = PredictionPlane()
+    for p in preds.values():
+        assert plane.register_predictor(p)
+    batched = plane.predict_all()
+    assert len(batched) == len(preds)
+    for fam, p in preds.items():
+        rec_b = batched[(p.app, p.node)]
+        rec_s = p.predict()
+        assert rec_s.rtt_pred == pytest.approx(rec_b.rtt_pred,
+                                               rel=1e-5, abs=1e-5), fam
+        # consistent modeled timing on both paths under a SimClock
+        assert rec_b.basis == rec_s.basis == "modeled"
+        assert rec_b.t_feature == rec_s.t_feature \
+            == FEATURE_DELAY_PER_METRIC * K
+        assert rec_b.t_inference == rec_s.t_inference == 1e-4
+
+
+def test_one_dispatch_per_bucket_not_per_predictor(family_fleet):
+    store, _ = family_fleet
+    # 12 predictors, 3 families sharing (window, k) -> 3 jitted dispatches
+    plane = PredictionPlane()
+    fams = ["lr", "xgb", "rnn"]
+    preds = [make_trained_predictor(f"bulk{i}", store, fams[i % 3], seed=i)
+             for i in range(12)]
+    for p in preds:
+        plane.register_predictor(p)
+    assert len(plane.buckets()) == 3
+    recs = plane.predict_all()
+    assert plane.dispatches == 3
+    assert len(recs) == 12
+
+
+def test_padding_to_pow2_does_not_change_results(family_fleet):
+    store, _ = family_fleet
+    assert _next_pow2(5) == 8 and _next_pow2(1) == 1 and _next_pow2(8) == 8
+    # B=5 pads to 8: padded rows must not leak into real outputs
+    preds = [make_trained_predictor(f"pad{i}", store, "lr", seed=100 + i)
+             for i in range(5)]
+    plane = PredictionPlane()
+    for p in preds:
+        plane.register_predictor(p)
+    (bucket,) = plane.buckets()
+    assert bucket.pad == 3
+    recs = plane.predict_all()
+    for p in preds:
+        assert recs[(p.app, p.node)].rtt_pred == pytest.approx(
+            p.predict().rtt_pred, rel=1e-5, abs=1e-5)
+
+
+def test_subset_predict_and_reregistration(family_fleet):
+    store, _ = family_fleet
+    preds = [make_trained_predictor(f"sub{i}", store, "lr", seed=200 + i)
+             for i in range(4)]
+    plane = PredictionPlane()
+    for p in preds:
+        plane.register_predictor(p)
+    want = [(preds[1].app, preds[1].node), (preds[3].app, preds[3].node),
+            ("ghost", "nowhere")]
+    recs = plane.predict_all(want)
+    assert set(recs) == set(want[:2])
+    # unchanged version -> no re-export; bumped version -> re-export
+    assert not plane.register_predictor(preds[0])
+    preds[0].artifact_version += 1
+    assert plane.register_predictor(preds[0])
+
+
+def test_batched_state_retrieval_amortizes_modeled_delay(family_fleet):
+    store, _ = family_fleet
+    preds = [make_trained_predictor(f"slow{i}", store, "lr", seed=300 + i,
+                                    fast_state=False)
+             for i in range(4)]
+    plane = PredictionPlane()
+    for p in preds:
+        plane.register_predictor(p)
+    spent0 = store.query_time_spent
+    recs = plane.predict_all([(p.app, p.node) for p in preds])
+    batched_cost = store.query_time_spent - spent0
+    serial_cost = 4 * store.retrieval.delay(K, WINDOW_S)
+    # one range query for the fleet: 3 of the 4 base round trips saved
+    assert batched_cost == pytest.approx(serial_cost - 3 * store.retrieval.base)
+    per_req = store.retrieval.delay_batch([K] * 4, [WINDOW_S] * 4)
+    for rec, d in zip((recs[(p.app, p.node)] for p in preds), per_req):
+        assert rec.t_state == pytest.approx(float(d))
+        assert rec.basis == "modeled"
+
+
+def test_mixed_store_capacities_split_buckets():
+    # a store with capacity shorter than the window clips w_points, so
+    # same (family, window, k) across such stores must NOT share a
+    # bucket tensor (regression: broadcast error at predict_all)
+    big = make_store(seed=10)                           # 600 slots
+    small = make_store(seed=11, n_scrapes=30, capacity_s=4.0)   # 20 slots
+    p_big = make_trained_predictor("cap_big", big, "lr", seed=600)
+    p_small = make_trained_predictor("cap_small", small, "lr", seed=601)
+    plane = PredictionPlane()
+    plane.register_predictor(p_big)
+    plane.register_predictor(p_small)
+    assert len(plane.buckets()) == 2
+    recs = plane.predict_all()
+    assert recs[("cap_big", "node-0")].rtt_pred == pytest.approx(
+        p_big.predict().rtt_pred, rel=1e-5, abs=1e-5)
+    # the small store serves the window clipped to its capacity
+    assert np.isfinite(recs[("cap_small", "node-0")].rtt_pred)
+
+
+def test_wall_fields_accompany_modeled_records(family_fleet):
+    # the modeled record still carries measured wall deltas separately
+    # (bench_breakdown's fast-path quantification reads t_wall_*)
+    _, preds = family_fleet
+    rec = preds["lr"].predict()
+    assert rec.basis == "modeled"
+    assert rec.t_wall_prediction > 0.0
+    assert rec.t_state == 0.0                 # fast path: modeled state 0
+
+
+def test_manager_pause_unregisters_from_plane():
+    from repro.core.manager import PredictionManager
+    store = make_store(seed=20)
+    p = make_trained_predictor("appP", store, "lr", seed=700)
+    mgr = PredictionManager()
+    key = ("appP", "node-0")
+    mgr.predictors[key] = p
+    mgr.paused[key] = False
+    mgr.plane.register_predictor(p)
+    assert key in mgr.plane
+    mgr.pause("appP", "node-0")
+    assert key not in mgr.plane
+    assert mgr.plane.predict_all() == {}      # full sweep skips paused
+
+
+def test_periodic_refresh_caches_until_lag():
+    calls = []
+    pr = PeriodicRefresh(10.0)
+    assert pr.get(0.0, lambda: calls.append(1) or "a") == "a"
+    assert pr.get(5.0, lambda: calls.append(1) or "b") == "a"   # cached
+    assert pr.get(10.0, lambda: calls.append(1) or "c") == "c"  # refreshed
+    assert len(calls) == 2
+
+
+def test_plane_refresh_horizon_serves_snapshot(family_fleet):
+    store, _ = family_fleet
+    p = make_trained_predictor("fresh", store, "lr", seed=400)
+    plane = PredictionPlane(refresh_s=60.0)
+    plane.register_predictor(p)
+    r1 = plane.predict_all()
+    d0 = plane.dispatches
+    store.clock.advance(1.0)
+    assert plane.predict_all() is r1          # within horizon: cached
+    assert plane.dispatches == d0
+    store.clock.advance(60.0)
+    assert plane.predict_all() is not r1      # horizon passed: recomputed

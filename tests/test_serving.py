@@ -10,6 +10,8 @@ from repro.monitoring.metrics import SimClock
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.router import MorpheusRouter
 
+from repro.testing import make_store, make_trained_predictor
+
 
 @pytest.fixture(scope="module")
 def tiny_setup():
@@ -65,6 +67,48 @@ def test_router_perf_aware_avoids_slow_replica(tiny_setup):
     for r in _reqs(4, rng):
         router.route(r)
     assert router.routed.count(0) >= 3       # mostly the fast replica
+
+
+def test_router_predicted_rtts_is_one_plane_call(tiny_setup):
+    """The perf-aware sweep must be ONE batched plane dispatch feeding the
+    policy, not a per-replica serial predict loop (DESIGN.md §9)."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(3)]
+    store = make_store()
+    preds = {f"n{i}": make_trained_predictor("serve", store, "lr",
+                                             seed=500 + i, node=f"n{i}")
+             for i in range(3)}
+    router = MorpheusRouter(reps, policy="perf_aware", predictors=preds)
+    calls = []
+    orig = router.plane.predict_all
+
+    def counted(keys=None):
+        calls.append(keys)
+        return orig(keys)
+
+    router.plane.predict_all = counted
+    rtts = router._predicted_rtts()
+    assert len(calls) == 1 and len(calls[0]) == 3
+    assert np.isfinite(rtts).all()
+    # plane outputs match each predictor's serial path and land in the kb
+    for i in range(3):
+        serial = preds[f"n{i}"].predict().rtt_pred
+        assert rtts[i] == pytest.approx(serial, rel=1e-5, abs=1e-5)
+        assert router.kb.latest("serve", f"n{i}") == pytest.approx(rtts[i])
+
+
+def test_router_falls_back_without_trained_predictors(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(2)]
+    router = MorpheusRouter(reps, policy="perf_aware")
+    router.kb.put("serve", "n0", 0.0, 2.5)
+    rtts = router._predicted_rtts()
+    assert rtts[0] == 2.5                      # knowledge-base fallback
+    assert rtts[1] == 1.0 + reps[1].pending()  # queue-depth proxy
 
 
 def test_router_round_robin_spreads(tiny_setup):
