@@ -1,0 +1,152 @@
+"""Campaign runner: batched scenario x policy x seed grid vs looping
+serial ``run_sim`` (DESIGN.md §10).
+
+The serial path pays the per-request stepping loop (and the cluster
+build) once per grid cell; the batched path builds each scenario's
+per-seed clusters once and advances the whole seed axis in ONE lockstep
+pass per (scenario, policy) through the policy engine's (T, C) batch
+axis.  Reported: wall time for both paths over the full registered
+scenario matrix, the speedup, the max relative drift between batched and
+serial per-seed stats (the parity guard CI's smoke mode enforces), and
+the scenario x policy result table EXPERIMENTS.md embeds.
+
+Run:  PYTHONPATH=src python benchmarks/bench_campaign.py \
+          [--seeds 12] [--smoke] [--no-artifact]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.campaign import (DEFAULT_POLICIES, SUMMARY_STATS,
+                                 campaign_table, run_campaign,
+                                 run_campaign_serial)
+from repro.core.scenarios import scenario_names
+
+PARITY_TOL = 1e-5
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "artifacts", "campaign.json")
+
+
+def parity_drift(batched, serial) -> float:
+    """Max relative per-seed-stat drift between the two grids."""
+    worst = 0.0
+    for scen, cell in batched.items():
+        for pol, r in cell.items():
+            s = serial[scen][pol]
+            for k in SUMMARY_STATS:
+                d = np.max(np.abs(r.per_seed[k] - s.per_seed[k])
+                           / np.maximum(np.abs(s.per_seed[k]), 1e-9))
+                worst = max(worst, float(d))
+    return worst
+
+
+def bench(scenarios, policies, seeds, repeats: int = 1, **overrides):
+    """(results, serial_s, batched_s, drift) over the given grid."""
+    kw = dict(scenarios=scenarios, policies=policies, seeds=seeds,
+              **overrides)
+    run_campaign(**{**kw, "seeds": seeds[:2],
+                    "n_trials": 2, "n_requests": 10})   # warm-up
+    t_b, batched = _best_of(lambda: run_campaign(**kw), repeats)
+    t_s, serial = _best_of(lambda: run_campaign_serial(**kw), repeats)
+    return batched, t_s, t_b, parity_drift(batched, serial)
+
+
+def _best_of(fn, repeats: int):
+    """(best wall seconds, last result) — the grids are deterministic,
+    so the last result stands for every repeat."""
+    best, result = float("inf"), None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def _write_artifact(results, t_s, t_b, drift, seeds):
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {
+        "seeds": list(seeds), "serial_s": t_s, "batched_s": t_b,
+        "speedup_x": t_s / max(t_b, 1e-12), "parity_drift": drift,
+        "table": {
+            scen: {pol: {
+                "p50_rtt": r.stat("p50_rtt"),
+                "p95_rtt": r.stat("p95_rtt"),
+                "p99_rtt": r.stat("p99_rtt"),
+                "inefficiency_pct": r.inefficiency_pct,
+                "inefficiency_std": r.inefficiency_std,
+                "p99_inefficiency_pct": r.p99_inefficiency_pct,
+                "resource_waste_pct": r.resource_waste_pct,
+            } for pol, r in cell.items() if pol != "oracle"}
+            for scen, cell in results.items()},
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {os.path.abspath(ARTIFACT)}")
+
+
+def run(seeds=tuple(range(12)), repeats: int = 2):
+    """Harness contract (benchmarks/run.py): CSV rows for the full grid."""
+    results, t_s, t_b, drift = bench(scenario_names(), DEFAULT_POLICIES,
+                                     tuple(seeds), repeats=repeats)
+    n_runs = len(results) * len(next(iter(results.values()))) * len(seeds)
+    return [
+        ("campaign_serial", t_s / n_runs * 1e6,
+         f"grid_runs={n_runs};wall_s={t_s:.2f}"),
+        ("campaign_batched", t_b / n_runs * 1e6,
+         f"wall_s={t_b:.2f};speedup_x={t_s / max(t_b, 1e-12):.1f};"
+         f"parity_drift={drift:.2e}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=12,
+                    help="seeds per scenario (>=8 for the headline grid)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + hard parity/speedup gate (CI)")
+    ap.add_argument("--no-artifact", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        scenarios = ("baseline", "flash-crowd", "stale-predictions")
+        results, t_s, t_b, drift = bench(
+            scenarios, ("perf_aware", "least_conn", "random"),
+            tuple(range(12)), repeats=2, n_trials=6, n_requests=80)
+    else:
+        scenarios = scenario_names()
+        results, t_s, t_b, drift = bench(
+            scenarios, DEFAULT_POLICIES, tuple(range(args.seeds)),
+            repeats=args.repeats)
+
+    speedup = t_s / max(t_b, 1e-12)
+    n_cells = len(results) * (len(next(iter(results.values()))))
+    print(f"grid: {len(results)} scenarios x "
+          f"{len(next(iter(results.values())))} policies (incl. oracle) x "
+          f"{args.seeds if not args.smoke else 12} seeds")
+    print(f"serial  {t_s:7.2f}s   ({n_cells} independent run_sim loops)")
+    print(f"batched {t_b:7.2f}s   speedup {speedup:.1f}x   "
+          f"parity_drift {drift:.2e}")
+    print()
+    print(campaign_table(results))
+
+    if not args.smoke and not args.no_artifact:
+        _write_artifact(results, t_s, t_b, drift,
+                        tuple(range(args.seeds)))
+
+    assert drift <= PARITY_TOL, \
+        f"batched/serial drift {drift:.2e} exceeds {PARITY_TOL}"
+    floor = 3.0 if args.smoke else 5.0   # CI runners are noisy
+    assert speedup >= floor, \
+        f"batched campaign only {speedup:.1f}x serial (need >={floor}x)"
+    print(f"\nOK: parity<= {PARITY_TOL}, speedup {speedup:.1f}x "
+          f">= {floor}x")
+
+
+if __name__ == "__main__":
+    main()

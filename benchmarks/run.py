@@ -11,10 +11,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_adaptation, bench_binning, bench_breakdown,
-                            bench_correlations, bench_covariability,
-                            bench_kernels, bench_load_balancing,
-                            bench_overhead, bench_prediction_plane,
-                            bench_selection, bench_state_scaling)
+                            bench_campaign, bench_correlations,
+                            bench_covariability, bench_kernels,
+                            bench_load_balancing, bench_overhead,
+                            bench_prediction_plane, bench_selection,
+                            bench_state_scaling)
     from benchmarks import roofline
 
     benches = [
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig10", bench_state_scaling.run),
         ("plane", bench_prediction_plane.run),
         ("fig11", bench_load_balancing.run),
+        ("campaign", bench_campaign.run),
         ("table5", bench_covariability.run),
         ("kernels", bench_kernels.run),
     ]

@@ -1,16 +1,21 @@
 """Reproduce the paper's Fig. 11 (all four subplots) as text tables,
-plus the beyond-paper scenarios the unified policy engine supports.
+plus the beyond-paper scenario matrix the unified policy engine and the
+scenario engine support.
 
 Run:  PYTHONPATH=src python examples/lb_simulation.py [--trials 200]
+      PYTHONPATH=src python examples/lb_simulation.py --campaign
       PYTHONPATH=src python examples/lb_simulation.py --smoke
-The --smoke mode runs every registered policy (and the hedging / stale /
-churn scenarios) on a tiny config — CI uses it to catch policy/simulator
-drift on every PR.
+--campaign runs the registered scenario x policy x seed grid through the
+batched campaign runner and prints its table.  --smoke runs every
+registered policy (plus scenario variants and a mini-campaign) on tiny
+configs — CI uses it to catch policy/simulator drift on every PR.
 """
 import argparse
 from dataclasses import replace
 
 from repro.core.balancer import POLICIES
+from repro.core.campaign import campaign_table, run_campaign
+from repro.core.scenarios import SCENARIOS
 from repro.core.simulator import (SimConfig, run_sim, sweep_accuracy,
                                   sweep_heterogeneity, sweep_replicas)
 
@@ -35,7 +40,22 @@ def smoke() -> None:
         print(f"  {name:12s} mean={res['mean_rtt'].mean():6.2f}s "
               f"p99={res['p99_rtt'].mean():6.2f}s "
               f"hedged={res['n_hedged']}")
+    print(f"== scenario-engine smoke ({len(SCENARIOS)} scenarios, "
+          "batched campaign) ==")
+    results = run_campaign(seeds=range(4), n_trials=4, n_requests=40)
+    for scen, cell in results.items():
+        r = cell["perf_aware"]
+        print(f"  {scen:18s} p99={r.stat('p99_rtt'):7.2f}s "
+              f"ineff={r.inefficiency_pct:5.1f}%")
     print("smoke OK")
+
+
+def campaign() -> None:
+    """The registered scenario x policy x seed grid, batched."""
+    results = run_campaign()
+    print("== scenario x policy campaign "
+          f"({len(results)} scenarios x 12 seeds, batched) ==")
+    print(campaign_table(results))
 
 
 def main():
@@ -43,9 +63,14 @@ def main():
     ap.add_argument("--trials", type=int, default=200)
     ap.add_argument("--smoke", action="store_true",
                     help="fast every-policy sanity sweep (used by CI)")
+    ap.add_argument("--campaign", action="store_true",
+                    help="batched scenario x policy x seed campaign table")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+        return
+    if args.campaign:
+        campaign()
         return
     base = SimConfig(n_trials=args.trials, n_requests=300)
 

@@ -68,8 +68,12 @@ class ClusterState:
     def __post_init__(self):
         self.busy_until = np.atleast_2d(np.asarray(self.busy_until, float))
         if self.queue_depth is None:
-            self.queue_depth = np.zeros_like(self.busy_until)
-        self.queue_depth = np.atleast_2d(np.asarray(self.queue_depth, float))
+            # read-only zero view: skips a per-step (T, C) allocation on
+            # the simulator's hot path
+            self.queue_depth = np.broadcast_to(0.0, self.busy_until.shape)
+        else:
+            self.queue_depth = np.atleast_2d(
+                np.asarray(self.queue_depth, float))
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -160,15 +164,35 @@ class RoundRobin(Policy):
 
 
 class RandomChoice(Policy):
-    """Uniform over idle replicas; least-wait fallback when all busy."""
+    """Uniform over idle replicas; least-wait fallback when all busy.
+
+    ``seed_blocks`` — ``[(seed, n_trials), ...]`` — partitions the trial
+    axis into consecutive blocks, each drawing from its own generator.
+    The campaign runner uses this to score a state whose trial axis
+    stacks several per-seed clusters: block ``i`` draws exactly what a
+    serial per-seed run with ``seed_i`` would, so batched and serial
+    results match bit-for-bit (DESIGN.md §10).
+    """
     name = "random"
 
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0,
+                 seed_blocks: Optional[Sequence[Tuple[int, int]]] = None):
         super().__init__(seed)
         self.rng = np.random.default_rng(seed)
+        self._blocks = None if seed_blocks is None else \
+            [(np.random.default_rng(s), int(n)) for s, n in seed_blocks]
 
     def score(self, state):
-        draws = self.rng.random(state.shape)
+        T, C = state.shape
+        if self._blocks is not None:
+            if sum(n for _, n in self._blocks) != T:
+                raise ValueError(
+                    f"seed_blocks cover {sum(n for _, n in self._blocks)} "
+                    f"trials, state has {T}")
+            draws = np.concatenate(
+                [rng.random((n, C)) for rng, n in self._blocks], axis=0)
+        else:
+            draws = self.rng.random(state.shape)
         return np.where(state.idle(), draws, _BUSY_PENALTY + state.wait())
 
 

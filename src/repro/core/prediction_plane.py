@@ -115,12 +115,21 @@ class PredictionPlane:
     buckets are restacked only when the registry changed.
     """
 
-    def __init__(self, refresh_s: float = 0.0):
+    def __init__(self, refresh_s: float = 0.0, outages=()):
         self._entries: Dict[Tuple[str, str], _Entry] = {}
         self._buckets: Optional[List[_Bucket]] = None
-        self._refresh = PeriodicRefresh(refresh_s) if refresh_s > 0 else None
+        self._refresh = PeriodicRefresh(refresh_s, outages) \
+            if (refresh_s > 0 or outages) else None
         self.dispatches = 0       # jitted bucket calls issued (telemetry)
         self.batched_predictions = 0
+
+    def add_outage(self, start_s: float, end_s: float):
+        """Declare a metric-source blackout window: full-fleet calls inside
+        it serve the last snapshot instead of re-querying the store (the
+        §6 metric-outage scenario; tests/test_scenarios.py pins this)."""
+        if self._refresh is None:
+            self._refresh = PeriodicRefresh(0.0)
+        self._refresh.outages = self._refresh.outages + ((start_s, end_s),)
 
     # ------------------------------------------------------------------
     # registry

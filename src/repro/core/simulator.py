@@ -12,9 +12,10 @@ in the paper text — documented in DESIGN.md §7.
 All trials advance request-by-request in lockstep so every step is a
 vectorised numpy op over (n_trials, n_candidates) arrays.  The loop is
 split into three parts: cluster construction (:func:`_build_cluster`),
-a per-request policy step inside :func:`run_sim`, and metrics
-accumulation (:class:`_Metrics` — mean, p50/p95/p99 tails, per-app
-breakdown, resource-seconds).
+the per-request policy step (:class:`SimStepper` — reused by
+``repro.core.campaign`` over a stack of per-seed clusters, DESIGN.md
+§10), and metrics accumulation (:class:`_Metrics` — mean, p50/p95/p99
+tails, per-app breakdown, resource-seconds).
 
 Beyond the seed scenarios, the simulator supports:
   * every registered policy, including ``least_conn``;
@@ -25,7 +26,21 @@ Beyond the seed scenarios, the simulator supports:
     cycles are periodic, not per-request);
   * node failure / churn (``SimConfig.churn``): one random node per
     trial goes down at ``t_fail`` for ``downtime`` seconds — its
-    replicas stop accepting work and policies must route around it.
+    replicas stop accepting work and policies must route around it;
+  * non-Poisson arrivals (``arrival_process``: bursty on/off cycles,
+    diurnal rate modulation, flash crowds);
+  * discrete hardware tiers (``node_tiers``) on top of the continuous
+    heterogeneity draw, and a ``hotspot`` interference profile where one
+    app dominates co-location noise;
+  * predictor cold start (``cold_start_s``): until the knowledge base
+    has trained, predictions carry only the app-mean RTT — no occupancy
+    or node-speed signal;
+  * metric outages (``outage``): the predictor's occupancy snapshot is
+    frozen for the whole window, however stale it gets (the
+    ``PeriodicRefresh`` outage hook shared with the prediction plane).
+
+The declarative layer over these knobs lives in
+``repro.core.scenarios`` (ScenarioSpec -> SimConfig).
 """
 from __future__ import annotations
 
@@ -47,6 +62,8 @@ APPS = {
     "ctffind4": (3.0, 1.0, 1.0),
 }
 
+ARRIVAL_PROCESSES = ("poisson", "bursty", "diurnal", "flash_crowd")
+
 
 @dataclass
 class SimConfig:
@@ -64,6 +81,24 @@ class SimConfig:
     hedge_factor: Optional[float] = None    # PerfAware hedging threshold
     prediction_lag_s: float = 0.0           # stale-prediction refresh lag
     churn: Optional[Tuple[float, float]] = None  # (t_fail_s, downtime_s)
+    # -- scenario-engine knobs (DESIGN.md §10) --------------------------
+    #: separate RNG stream for the request arrivals.  When set, configs
+    #: differing only in ``seed`` share one arrival stream (paired
+    #: comparison across seeds) — which is also what lets the campaign
+    #: runner advance a stack of per-seed clusters in one lockstep pass.
+    stream_seed: Optional[int] = None
+    arrival_process: str = "poisson"
+    #: per-process shape, () selects defaults:
+    #:   bursty      (burst_factor, on_s, off_s)
+    #:   diurnal     (period_s, amplitude<1)
+    #:   flash_crowd (t_start_s, duration_s, factor)
+    arrival_params: Tuple[float, ...] = ()
+    #: discrete tier speed offsets cycled over nodes (e.g. (-0.4, 0, 1.0)
+    #: = fast/standard/slow thirds); heterogeneity noise adds on top
+    node_tiers: Optional[Tuple[float, ...]] = None
+    interference_profile: str = "uniform"   # or "hotspot"
+    cold_start_s: float = 0.0               # untrained-predictor window
+    outage: Optional[Tuple[float, float]] = None  # (t_start_s, duration_s)
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -74,15 +109,64 @@ def _interference_matrix(apps: Sequence[str], strength: float,
     return strength * (base + base.T) / 2.0
 
 
+def _rate_factor(cfg: SimConfig, t: float) -> float:
+    """Instantaneous arrival-rate multiplier at time t."""
+    kind, p = cfg.arrival_process, cfg.arrival_params
+    if kind == "bursty":
+        factor, on_s, off_s = p or (6.0, 10.0, 30.0)
+        return factor if (t % (on_s + off_s)) < on_s else 1.0
+    if kind == "diurnal":
+        period_s, amplitude = p or (240.0, 0.8)
+        return 1.0 + amplitude * np.sin(2.0 * np.pi * t / period_s)
+    if kind == "flash_crowd":
+        t_start, duration, factor = p or (60.0, 30.0, 8.0)
+        return factor if t_start <= t < t_start + duration else 1.0
+    raise ValueError(f"unknown arrival_process {kind!r}; "
+                     f"one of {ARRIVAL_PROCESSES}")
+
+
+def _arrival_times(cfg: SimConfig, rng) -> np.ndarray:
+    """Request arrival times.  Poisson keeps the seed's exact draw; the
+    modulated processes rescale unit-exponential gaps by the local rate
+    (time-rescaling construction of an inhomogeneous Poisson process)."""
+    if cfg.arrival_process == "poisson":
+        return np.cumsum(rng.exponential(1.0 / cfg.arrival_rate,
+                                         size=cfg.n_requests))
+    gaps = rng.exponential(1.0, size=cfg.n_requests)
+    out = np.empty(cfg.n_requests)
+    t = 0.0
+    for i, e in enumerate(gaps):
+        t += e / max(cfg.arrival_rate * _rate_factor(cfg, t), 1e-9)
+        out[i] = t
+    return out
+
+
+@dataclass
+class _AppPrep:
+    """Per-app tensors that do not change across steps, hoisted out of
+    the per-request loop (built once, reused J times per policy)."""
+    candidates: np.ndarray    # (C,) replica indices serving the app
+    cand_flat: np.ndarray     # (T*C,) flat (trial, node) index per candidate
+    weight: np.ndarray        # (T, R) interference weight per busy replica
+    speed: np.ndarray         # (T, C) 1 + accel of each candidate's node
+    z_pred: np.ndarray        # (T, J, C) prediction noise, pre-gathered
+    log_rbar: float           # log of the app's mean RTT
+
+
 @dataclass
 class _Cluster:
-    """Static per-run arrays: topology, request stream, pre-drawn noise."""
+    """Static per-run arrays: topology, request stream, pre-drawn noise.
+
+    ``imat`` is (A, A) for a single-seed cluster; the campaign's stacked
+    clusters carry a per-trial (T, A, A) matrix because each seed drew
+    its own interference mix.
+    """
     cfg: SimConfig
     app_of: np.ndarray        # (R,) app index per replica
     mean_rtt: np.ndarray      # (A,)
     cpu_req: np.ndarray       # (A,)
     mem_req: np.ndarray       # (A,)
-    imat: np.ndarray          # (A, A) interference matrix
+    imat: np.ndarray          # (A, A) or (T, A, A) interference matrix
     node_of: np.ndarray       # (T, R) node per replica per trial
     accel: np.ndarray         # (T, N) node acceleration factors
     req_app: np.ndarray       # (J,) app index per request
@@ -91,21 +175,78 @@ class _Cluster:
     z_pred: np.ndarray        # (T, J, R) prediction noise
     failed_node: Optional[np.ndarray] = None   # (T,) churn target
 
-    def rtt_draw(self, j: int, a: int, candidates: np.ndarray,
-                 busy_until: np.ndarray, now: float) -> np.ndarray:
+    def __post_init__(self):
+        self._prep: Dict[int, _AppPrep] = {}
+        # flat (trial * n_nodes + node) index of every replica, for the
+        # bincount node-bucket accumulation in rtt_draw
+        T = len(self.node_of)
+        N = self.cfg.n_nodes
+        self._tn = T * N
+        self._trial = np.arange(T)
+        self._flat_nodes = (self._trial[:, None] * N
+                            + self.node_of).ravel()
+
+    def app_prep(self, a: int) -> _AppPrep:
+        prep = self._prep.get(a)
+        if prep is None:
+            cand = np.flatnonzero(self.app_of == a)
+            nodes = self.node_of[:, cand]                       # (T, C)
+            T = len(self.node_of)
+            if self.imat.ndim == 3:
+                weight = self.imat[:, a, :][:, self.app_of]     # (T, R)
+            else:
+                weight = np.broadcast_to(self.imat[a][self.app_of],
+                                         self.node_of.shape)
+            trial = np.arange(T)
+            prep = _AppPrep(
+                candidates=cand,
+                cand_flat=(trial[:, None] * self.cfg.n_nodes
+                           + nodes).ravel(),
+                weight=weight,
+                speed=1.0 + self.accel[trial[:, None], nodes],
+                z_pred=np.ascontiguousarray(self.z_pred[:, :, cand]),
+                log_rbar=float(np.log(self.mean_rtt[a])))
+            self._prep[a] = prep
+        return prep
+
+    def rtt_draw(self, j: int, a: int, busy_until: np.ndarray,
+                 now: float) -> np.ndarray:
         """True RTT per candidate under the given occupancy snapshot
         (log-normal with co-location interference, Eqs. 10-11)."""
-        nodes = self.node_of[:, candidates]                     # (T, C)
-        same_node = nodes[:, :, None] == self.node_of[:, None, :]  # (T,C,R)
-        busy = busy_until[:, None, :] > now
-        inter = (same_node & busy) @ self.imat[a][self.app_of]  # (T, C)
-        rbar = self.mean_rtt[a]
-        s = rbar * (0.1 + inter)                  # RTT std (interference)
-        mu = np.log(rbar ** 2 / np.sqrt(s ** 2 + rbar ** 2))
-        sigma = np.sqrt(np.log(1 + s ** 2 / rbar ** 2))
-        x = np.exp(mu + sigma * self.z_rtt[:, j, None])          # (T, C)
-        trial = np.arange(len(x))
-        return x * (1.0 + self.accel[trial[:, None], nodes])     # Eq. 10
+        p = self.app_prep(a)
+        busy = busy_until > now                                  # (T, R)
+        # interference on a candidate = sum of weights of busy replicas
+        # sharing its node.  Bucket busy weights per (trial, node) with
+        # one bincount — O(T*R) instead of the O(T*C*R) mask product —
+        # then gather each candidate's bucket.
+        g = np.bincount(self._flat_nodes, weights=(busy * p.weight).ravel(),
+                        minlength=self._tn)
+        inter = g[p.cand_flat].reshape(p.speed.shape)            # (T, C)
+        # log-normal moment matching with s = rbar * (0.1 + inter):
+        # mu = log(rbar) - u/2, sigma = sqrt(u), u = log(1 + (s/rbar)^2)
+        v = 0.1 + inter
+        u = np.log1p(v * v)
+        sigma_z = np.sqrt(u) * self.z_rtt[:, j, None]
+        x = np.exp(p.log_rbar - 0.5 * u + sigma_z)               # (T, C)
+        return x * p.speed                                       # Eq. 10
+
+    def rtt_draw_at(self, j: int, a: int, busy_until: np.ndarray,
+                    now: float, picks: np.ndarray) -> np.ndarray:
+        """The column of :meth:`rtt_draw` each trial actually picked,
+        without materialising the other candidates.  Every op is
+        elementwise in the candidate axis, so values are bit-identical
+        to ``rtt_draw(...)[trial, picks]`` — the fast path for policies
+        that never read the full RTT/prediction matrix."""
+        p = self.app_prep(a)
+        busy = busy_until > now
+        g = np.bincount(self._flat_nodes, weights=(busy * p.weight).ravel(),
+                        minlength=self._tn)
+        T = len(self.node_of)
+        flat = p.cand_flat.reshape(T, -1)[self._trial, picks]
+        v = 0.1 + g[flat]                                        # (T,)
+        u = np.log1p(v * v)
+        x = np.exp(p.log_rbar - 0.5 * u + np.sqrt(u) * self.z_rtt[:, j])
+        return x * p.speed[self._trial, picks]
 
 
 def _build_cluster(cfg: SimConfig) -> _Cluster:
@@ -116,17 +257,39 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
     A = len(cfg.apps)
     R = A * cfg.n_replicas_per_app
     imat = _interference_matrix(cfg.apps, cfg.interference_strength, rng)
+    if cfg.interference_profile == "hotspot":
+        # one heavy interferer (the paper's MotionCor2-style app): its
+        # row AND column amplified, so co-locating with it — or running
+        # it next to anything busy — dominates the noise
+        h = min(1, A - 1)
+        imat = imat.copy()
+        imat[h, :] *= 3.0
+        imat[:, h] *= 3.0
+    elif cfg.interference_profile != "uniform":
+        raise ValueError(
+            f"unknown interference_profile {cfg.interference_profile!r}")
     # per-trial random placement (isolate policy effect, as in the paper)
     node_of = rng.integers(0, cfg.n_nodes, size=(T, R))
     accel = np.clip(rng.normal(0.0, cfg.heterogeneity, size=(T, cfg.n_nodes)),
                     -0.8, 2.0)
-    # request stream: same per policy for paired comparison
-    req_rng = np.random.default_rng(cfg.seed + 1)
-    req_app = req_rng.integers(0, A, size=cfg.n_requests)
-    req_t = np.cumsum(req_rng.exponential(1.0 / cfg.arrival_rate,
-                                          size=cfg.n_requests))
-    z_rtt = req_rng.standard_normal((T, cfg.n_requests))
-    z_pred = req_rng.standard_normal((T, cfg.n_requests, R))
+    if cfg.node_tiers is not None:
+        tiers = np.asarray(cfg.node_tiers, float)
+        tier_of = np.arange(cfg.n_nodes) % len(tiers)
+        accel = np.clip(tiers[tier_of][None, :] + accel, -0.8, 4.0)
+    # request stream: same per policy for paired comparison.  With
+    # stream_seed set, arrivals come from their own generator so configs
+    # differing only in `seed` share one stream (campaign lockstep);
+    # (salt, seed) tuples keep the streams independent of the topology
+    # and noise generators even when the integer seeds collide.
+    if cfg.stream_seed is None:
+        stream_rng = noise_rng = np.random.default_rng(cfg.seed + 1)
+    else:
+        stream_rng = np.random.default_rng((17, cfg.stream_seed))
+        noise_rng = np.random.default_rng((29, cfg.seed))
+    req_app = stream_rng.integers(0, A, size=cfg.n_requests)
+    req_t = _arrival_times(cfg, stream_rng)
+    z_rtt = noise_rng.standard_normal((T, cfg.n_requests))
+    z_pred = noise_rng.standard_normal((T, cfg.n_requests, R))
     failed_node = None
     if cfg.churn is not None:
         failed_node = np.random.default_rng(cfg.seed + 3).integers(
@@ -154,6 +317,7 @@ class _Metrics:
         self.mem_s = np.zeros(T)
         self.chosen = np.zeros((T, J), dtype=np.int64)
         self.n_hedged = 0
+        self.hedged = np.zeros(T, dtype=np.int64)   # per-trial hedge count
 
     def add(self, j: int, response: np.ndarray, cpu: np.ndarray,
             mem: np.ndarray, rep: np.ndarray):
@@ -173,7 +337,128 @@ class _Metrics:
                 "p50_rtt": p50, "p95_rtt": p95, "p99_rtt": p99,
                 "per_app": per_app,
                 "cpu_s": self.cpu_s, "mem_s": self.mem_s,
-                "chosen": self.chosen, "n_hedged": self.n_hedged}
+                "chosen": self.chosen, "n_hedged": self.n_hedged,
+                "hedged_per_trial": self.hedged}
+
+
+class SimStepper:
+    """Advance all trials one request at a time — the reusable core of
+    :func:`run_sim`.
+
+    The stepper owns the mutable state (occupancy, metrics, the stale /
+    outage snapshot, the churn latch); the cluster stays read-only, so
+    one cluster can be re-stepped under many policies.  Because every
+    step is already a vectorised op over the (T, C) trial axis — the
+    same batch axis the policy engine's ``score(state)`` takes — the
+    campaign runner batches a whole seed grid simply by handing in a
+    cluster whose trial axis stacks per-seed clusters (DESIGN.md §10).
+    """
+
+    def __init__(self, cluster: _Cluster, policy):
+        cfg = cluster.cfg
+        self.cluster = cluster
+        self.cfg = cfg
+        self.pol = policy
+        self.hedging = isinstance(policy, PerfAware) \
+            and cfg.hedge_factor is not None
+        # reactive policies never read predicted/actual: skip building
+        # the full per-candidate RTT matrix and draw only the pick
+        self.reactive = not self.hedging and not policy.requires
+        T = cfg.n_trials
+        self.trial = np.arange(T)
+        self.busy_until = np.zeros((T, len(cluster.app_of)))
+        self.metrics = _Metrics(cfg)
+        # stale-prediction state: the predictor's occupancy snapshot
+        # refreshes on the plane's periodic-collection cadence (shared
+        # PeriodicRefresh), not per request; an outage freezes it for
+        # the whole window regardless of the cadence
+        outages = ()
+        if cfg.outage is not None:
+            t0, duration = cfg.outage
+            outages = ((t0, t0 + duration),)
+        self.snapshot = PeriodicRefresh(cfg.prediction_lag_s, outages) \
+            if (cfg.prediction_lag_s > 0 or outages) else None
+        self.churn_pending = cfg.churn is not None
+
+    def step(self, j: int):
+        cluster, cfg = self.cluster, self.cfg
+        busy_until, trial = self.busy_until, self.trial
+        a = int(cluster.req_app[j])
+        now = float(cluster.req_t[j])
+
+        if self.churn_pending and now >= cfg.churn[0]:
+            down = cluster.node_of == cluster.failed_node[:, None]  # (T, R)
+            t_up = cfg.churn[0] + cfg.churn[1]
+            self.busy_until = busy_until = np.where(
+                down, np.maximum(busy_until, t_up), busy_until)
+            self.churn_pending = False
+
+        prep = cluster.app_prep(a)
+        candidates = prep.candidates
+
+        if self.reactive:
+            state = ClusterState(now=now,
+                                 busy_until=busy_until[:, candidates])
+            picks = self.pol.pick(state)
+            rep = candidates[picks]
+            rtt = cluster.rtt_draw_at(j, a, busy_until, now, picks)
+        else:
+            actual = cluster.rtt_draw(j, a, busy_until, now)
+            # predicted RTT: Eq. 12 with eps = (1 - p) * actual, computed
+            # on the (possibly stale) occupancy snapshot the predictor
+            # last saw.  Before cold_start_s no predictor has trained
+            # yet: the basis is the bare app-mean RTT (no occupancy /
+            # node-speed signal).
+            if now < cfg.cold_start_s:
+                pred_basis = np.broadcast_to(
+                    cluster.mean_rtt[a], actual.shape).copy()
+            elif self.snapshot is not None:
+                stale_busy = self.snapshot.get(now, busy_until.copy)
+                pred_basis = cluster.rtt_draw(j, a, stale_busy, now)
+            else:
+                pred_basis = actual
+            eps = (1.0 - cfg.accuracy) * pred_basis
+            predicted = pred_basis + eps * prep.z_pred[:, j, :]
+
+            state = ClusterState(now=now,
+                                 busy_until=busy_until[:, candidates],
+                                 predicted=predicted, actual=actual)
+            if self.hedging:
+                scores = self.pol.score(state)  # reused by hedge_plan
+                picks = np.argmin(scores, axis=1)
+                self.pol.update(state, picks)
+            else:
+                picks = self.pol.pick(state)
+            rep = candidates[picks]
+            rtt = actual[trial, picks]
+        finish = np.maximum(now, busy_until[trial, rep]) + rtt
+        cpu = cluster.cpu_req[a] * rtt
+        mem = cluster.mem_req[a] * rtt
+
+        if self.hedging:
+            second, mask = self.pol.hedge_plan(state, picks, scores)
+            rep2 = candidates[second]
+            rtt2 = actual[trial, second]
+            finish2 = np.maximum(now, busy_until[trial, rep2]) + rtt2
+            response = np.where(mask, np.minimum(finish, finish2),
+                                finish) - now
+            busy_until[trial, rep] = finish
+            hm = np.flatnonzero(mask)
+            busy_until[hm, rep2[hm]] = finish2[hm]    # duplicate occupies
+            cpu = cpu + mask * cluster.cpu_req[a] * rtt2   # resource waste
+            mem = mem + mask * cluster.mem_req[a] * rtt2
+            self.metrics.n_hedged += int(mask.sum())
+            self.metrics.hedged += mask
+        else:
+            response = finish - now
+            busy_until[trial, rep] = finish
+
+        self.metrics.add(j, response, cpu, mem, rep)
+
+    def run(self) -> Dict[str, np.ndarray]:
+        for j in range(self.cfg.n_requests):
+            self.step(j)
+        return self.metrics.summary(self.cluster)
 
 
 def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
@@ -186,79 +471,7 @@ def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
     cluster = _build_cluster(cfg)
     pol = make_policy(policy, seed=cfg.seed + 2,
                       hedge_factor=cfg.hedge_factor)
-    hedging = isinstance(pol, PerfAware) and cfg.hedge_factor is not None
-
-    T, J = cfg.n_trials, cfg.n_requests
-    R = len(cluster.app_of)
-    trial = np.arange(T)
-    busy_until = np.zeros((T, R))
-    metrics = _Metrics(cfg)
-
-    # stale-prediction state: the predictor's occupancy snapshot refreshes
-    # on the plane's periodic-collection cadence (shared PeriodicRefresh),
-    # not per request
-    lag = cfg.prediction_lag_s
-    snapshot = PeriodicRefresh(lag) if lag > 0 else None
-    churn_pending = cfg.churn is not None
-
-    for j in range(J):
-        a = int(cluster.req_app[j])
-        now = float(cluster.req_t[j])
-
-        if churn_pending and now >= cfg.churn[0]:
-            down = cluster.node_of == cluster.failed_node[:, None]  # (T, R)
-            t_up = cfg.churn[0] + cfg.churn[1]
-            busy_until = np.where(down, np.maximum(busy_until, t_up),
-                                  busy_until)
-            churn_pending = False
-
-        candidates = np.flatnonzero(cluster.app_of == a)
-        actual = cluster.rtt_draw(j, a, candidates, busy_until, now)
-
-        # predicted RTT: Eq. 12 with eps = (1 - p) * actual, computed on
-        # the (possibly stale) occupancy snapshot the predictor last saw
-        if snapshot is not None:
-            stale_busy = snapshot.get(now, busy_until.copy)
-            pred_basis = cluster.rtt_draw(j, a, candidates, stale_busy, now)
-        else:
-            pred_basis = actual
-        eps = (1.0 - cfg.accuracy) * pred_basis
-        predicted = pred_basis + eps * cluster.z_pred[:, j, :][:, candidates]
-
-        state = ClusterState(now=now, busy_until=busy_until[:, candidates],
-                             predicted=predicted, actual=actual)
-        if hedging:
-            scores = pol.score(state)     # reused by hedge_plan below
-            picks = np.argmin(scores, axis=1)
-            pol.update(state, picks)
-        else:
-            picks = pol.pick(state)
-        rep = candidates[picks]
-        rtt = actual[trial, picks]
-        finish = np.maximum(now, busy_until[trial, rep]) + rtt
-        cpu = cluster.cpu_req[a] * rtt
-        mem = cluster.mem_req[a] * rtt
-
-        if hedging:
-            second, mask = pol.hedge_plan(state, picks, scores)
-            rep2 = candidates[second]
-            rtt2 = actual[trial, second]
-            finish2 = np.maximum(now, busy_until[trial, rep2]) + rtt2
-            response = np.where(mask, np.minimum(finish, finish2),
-                                finish) - now
-            busy_until[trial, rep] = finish
-            hm = np.flatnonzero(mask)
-            busy_until[hm, rep2[hm]] = finish2[hm]    # duplicate occupies
-            cpu = cpu + mask * cluster.cpu_req[a] * rtt2   # resource waste
-            mem = mem + mask * cluster.mem_req[a] * rtt2
-            metrics.n_hedged += int(mask.sum())
-        else:
-            response = finish - now
-            busy_until[trial, rep] = finish
-
-        metrics.add(j, response, cpu, mem, rep)
-
-    return metrics.summary(cluster)
+    return SimStepper(cluster, pol).run()
 
 
 def scheduling_inefficiency(cfg: SimConfig, policy: str) -> Dict[str, float]:

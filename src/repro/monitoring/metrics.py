@@ -54,14 +54,25 @@ class PeriodicRefresh:
     ``prediction_lag_s`` stale-occupancy scenario.
     """
 
-    def __init__(self, lag_s: float):
+    def __init__(self, lag_s: float, outages=()):
         self.lag_s = lag_s
+        #: (start_s, end_s) windows where the metric source is unreachable:
+        #: consumers keep the last snapshot however stale it gets
+        #: (§6 metric-outage scenario / a TSDB blackout in live serving)
+        self.outages = tuple(outages)
         self._t_last = -np.inf
         self._value = None
 
+    def in_outage(self, now: float) -> bool:
+        return any(a <= now < b for a, b in self.outages)
+
     def get(self, now: float, compute):
         """Return the cached value, recomputing via ``compute()`` when the
-        snapshot is older than ``lag_s`` (always on first call)."""
+        snapshot is older than ``lag_s`` (always on first call).  During an
+        outage window the snapshot is frozen — except when there is no
+        snapshot yet, since a consumer needs *something* to bootstrap."""
+        if self.in_outage(now) and self._value is not None:
+            return self._value
         if now - self._t_last >= self.lag_s:
             self._value = compute()
             self._t_last = now

@@ -37,7 +37,7 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, params_stacked,
         # params_local: stage's params (leading dim 1); xs: all microbatches
         params_local = jax.tree.map(lambda p: p[0], params_local)
         idx = jax.lax.axis_index(axis_name)
-        S_ = jax.lax.axis_size(axis_name)
+        S_ = S   # static mesh size (jax.lax.axis_size is not in older jax)
         buf = jnp.zeros_like(xs[0])              # current activation
         outs = jnp.zeros_like(xs)
 

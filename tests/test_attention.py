@@ -41,6 +41,7 @@ def test_decode_attention_matches_naive():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow   # full absorbed-vs-expanded MLA compile (CI full job)
 def test_mla_absorbed_decode_matches_expanded():
     """The absorbed-matrix decode must equal expanded attention on the
     same latent cache."""

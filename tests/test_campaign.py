@@ -1,0 +1,105 @@
+"""Batched campaign runner (DESIGN.md §10): batched-vs-serial parity for
+every registered scenario, determinism, and the stacking preconditions.
+"""
+import numpy as np
+import pytest
+
+from repro.core.balancer import ClusterState, make_policy
+from repro.core.campaign import (DEFAULT_POLICIES, SUMMARY_STATS,
+                                 campaign_table, run_campaign,
+                                 run_campaign_serial, run_scenario,
+                                 stack_clusters)
+from repro.core.scenarios import get_scenario, scenario_names
+from repro.core.simulator import SimConfig, _build_cluster
+
+SMALL = dict(seeds=(0, 1, 2, 3), n_trials=4, n_requests=50)
+STATS = SUMMARY_STATS + ("hedged",)
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_batched_matches_serial_per_scenario(name):
+    """The acceptance gate: batched-campaign vs serial-run_sim parity
+    within 1e-5 for every registered scenario, every policy, every
+    seed (in practice the paths are bit-identical)."""
+    batched = run_scenario(name, **SMALL)
+    serial = run_campaign_serial([name], **SMALL)[name]
+    for pol in batched:
+        for k in STATS:
+            np.testing.assert_allclose(
+                batched[pol].per_seed[k], serial[pol].per_seed[k],
+                rtol=1e-5, atol=1e-7, err_msg=f"{name}/{pol}/{k}")
+        assert batched[pol].n_hedged == serial[pol].n_hedged
+    for pol in DEFAULT_POLICIES:
+        np.testing.assert_allclose(
+            batched[pol].inefficiency_pct, serial[pol].inefficiency_pct,
+            rtol=1e-5, atol=1e-7)
+
+
+def test_hedged_policy_parity():
+    """Hedging is stateful across the busy matrix — make sure the
+    stacked pass still matches per-seed serial runs."""
+    spec = get_scenario("baseline")
+    name = "perf_aware"
+    b = run_scenario(spec, policies=(name,), hedge_factor=0.7,
+                     arrival_rate=4.0, **SMALL)
+    s = run_campaign_serial([spec], policies=(name,), hedge_factor=0.7,
+                            arrival_rate=4.0, **SMALL)[spec.name]
+    assert b[name].n_hedged == s[name].n_hedged
+    assert b[name].n_hedged > 0
+    np.testing.assert_array_equal(b[name].per_seed["hedged"],
+                                  s[name].per_seed["hedged"])
+    assert b[name].per_seed["hedged"].sum() == b[name].n_hedged
+    np.testing.assert_allclose(b[name].per_seed["mean_rtt"],
+                               s[name].per_seed["mean_rtt"], rtol=1e-5)
+
+
+def test_campaign_is_deterministic():
+    r1 = run_campaign(["baseline", "churn"], **SMALL)
+    r2 = run_campaign(["baseline", "churn"], **SMALL)
+    for scen in r1:
+        for pol in r1[scen]:
+            for k in STATS:
+                np.testing.assert_array_equal(
+                    r1[scen][pol].per_seed[k], r2[scen][pol].per_seed[k])
+
+
+def test_stacking_requires_a_shared_stream():
+    cfgs = [SimConfig(seed=s, n_trials=2, n_requests=20) for s in (0, 1)]
+    with pytest.raises(ValueError, match="arrival stream"):
+        stack_clusters([_build_cluster(c) for c in cfgs])
+
+
+def test_stacking_rejects_heterogeneous_knobs():
+    spec = get_scenario("baseline")
+    a = spec.compile(seed=0, n_trials=2, n_requests=20)
+    b = spec.compile(seed=1, n_trials=2, n_requests=20, accuracy=0.3)
+    with pytest.raises(ValueError, match="except seed"):
+        stack_clusters([_build_cluster(a), _build_cluster(b)])
+
+
+def test_random_seed_blocks_guard():
+    pol = make_policy("random", seed_blocks=[(0, 2), (1, 2)])
+    state = ClusterState(now=0.0, busy_until=np.zeros((3, 2)))
+    with pytest.raises(ValueError, match="seed_blocks"):
+        pol.score(state)
+
+
+def test_policy_result_surface():
+    cell = run_scenario("baseline", seeds=(0, 1), n_trials=3,
+                        n_requests=30)
+    r = cell["perf_aware"]
+    assert r.scenario == "baseline" and r.seeds == (0, 1)
+    assert r.per_seed["p99_rtt"].shape == (2,)
+    assert r.inefficiency_pct is not None
+    assert cell["oracle"].inefficiency_pct is None
+    table = campaign_table({"baseline": cell})
+    assert "perf_aware" in table and "oracle" not in table
+    md = campaign_table({"baseline": cell}, markdown=True)
+    assert md.startswith("| scenario |")
+
+
+def test_include_oracle_false_skips_inefficiency():
+    cell = run_scenario("baseline", include_oracle=False, seeds=(0, 1),
+                        n_trials=2, n_requests=20)
+    assert "oracle" not in cell
+    assert cell["perf_aware"].inefficiency_pct is None

@@ -11,6 +11,8 @@ import pytest
 from repro.configs.base import available_archs, get_config
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow   # all-architecture compile smokes (CI full-suite job)
+
 ARCHS = available_archs()
 
 

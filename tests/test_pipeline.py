@@ -3,6 +3,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow   # subprocess XLA pipeline compile (CI full-suite job)
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 

@@ -1,0 +1,93 @@
+"""Property-based policy-engine invariants (hypothesis / shim).
+
+Three guarantees every registered policy must keep however the cluster
+state is shaped:
+  * ``choose`` always returns an index into the candidate list;
+  * elementwise policies score permutation-equivariantly over servers
+    (a relabeling of replicas relabels the scores, nothing more);
+  * ``perf_aware`` converges to ``oracle`` as prediction accuracy -> 1
+    (at p=1 the Eq. 12 noise term vanishes, so picks coincide).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as hst
+
+from repro.core.balancer import (ClusterState, POLICIES, Replica,
+                                 make_policy)
+from repro.core.simulator import SimConfig, run_sim, scheduling_inefficiency
+
+#: policies whose score is elementwise in the candidate axis (the RR
+#: cursor measures rotation distance and RandomChoice draws fresh noise,
+#: so neither is permutation-equivariant by design)
+ELEMENTWISE = ("least_conn", "perf_aware", "oracle")
+
+
+def _replicas(rng, C, now):
+    return [Replica(idx=i, app="a", node=f"n{i}",
+                    busy_until=now + float(rng.uniform(-6.0, 6.0)),
+                    queue_depth=float(rng.integers(0, 4)))
+            for i in range(C)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(min_value=1, max_value=12),
+       hst.integers(min_value=0, max_value=10_000),
+       hst.floats(min_value=0.0, max_value=100.0))
+def test_choose_returns_in_candidate_index(C, seed, now):
+    rng = np.random.default_rng(seed)
+    replicas = _replicas(rng, C, now)
+    pred = rng.uniform(0.5, 20.0, C)
+    actual = rng.uniform(0.5, 20.0, C)
+    for name in sorted(POLICIES):
+        pol = make_policy(name, seed=seed)
+        pick = pol.choose(replicas, now, predicted=pred, actual=actual)
+        assert pick is not None and 0 <= pick < C, (name, pick)
+    # and the empty candidate list is refused, not crashed on
+    assert make_policy("perf_aware").choose([], now) is None
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(min_value=2, max_value=10),
+       hst.integers(min_value=3, max_value=16),
+       hst.integers(min_value=0, max_value=10_000))
+def test_score_permutation_equivariant(T, C, seed):
+    rng = np.random.default_rng(seed)
+    now = float(rng.uniform(0.0, 50.0))
+    busy = now + rng.uniform(-5.0, 5.0, (T, C))
+    queue = rng.integers(0, 5, (T, C)).astype(float)
+    pred = rng.uniform(0.5, 20.0, (T, C))
+    actual = rng.uniform(0.5, 20.0, (T, C))
+    perm = rng.permutation(C)
+    state = ClusterState(now=now, busy_until=busy, queue_depth=queue,
+                         predicted=pred, actual=actual)
+    permuted = ClusterState(now=now, busy_until=busy[:, perm],
+                            queue_depth=queue[:, perm],
+                            predicted=pred[:, perm],
+                            actual=actual[:, perm])
+    for name in ELEMENTWISE:
+        pol = make_policy(name, seed=seed)
+        np.testing.assert_array_equal(pol.score(state)[:, perm],
+                                      pol.score(permuted), err_msg=name)
+
+
+def test_perf_aware_converges_to_oracle_as_accuracy_to_one():
+    base = SimConfig(n_trials=12, n_requests=100, seed=3)
+    # at p=1 predicted == actual: identical assignments, zero inefficiency
+    perfect = run_sim(SimConfig(**{**base.__dict__, "accuracy": 1.0}),
+                      "perf_aware")
+    oracle = run_sim(SimConfig(**{**base.__dict__, "accuracy": 1.0}),
+                     "oracle")
+    np.testing.assert_array_equal(perfect["chosen"], oracle["chosen"])
+    np.testing.assert_allclose(perfect["mean_rtt"], oracle["mean_rtt"],
+                               rtol=1e-12)
+    # and inefficiency shrinks monotonically-enough along the accuracy
+    # sweep (deterministic seeds: these are fixed numbers, not flakes)
+    ineffs = [scheduling_inefficiency(
+        SimConfig(**{**base.__dict__, "accuracy": p}),
+        "perf_aware")["inefficiency_pct"] for p in (0.0, 0.5, 1.0)]
+    assert ineffs[2] <= 1e-9, ineffs
+    assert ineffs[2] <= ineffs[1] <= ineffs[0], ineffs

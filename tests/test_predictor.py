@@ -41,6 +41,7 @@ def trained_node():
     return node, mgr, history
 
 
+@pytest.mark.slow   # predictor training lifecycle (CI full-suite job)
 def test_predictors_train(trained_node):
     node, mgr, history = trained_node
     trained = [p for p in mgr.predictors.values() if p.choice is not None]
@@ -51,6 +52,7 @@ def test_predictors_train(trained_node):
         assert p.choice.rmse < 0.5           # normalized RMSE
 
 
+@pytest.mark.slow   # predictor training lifecycle (CI full-suite job)
 def test_predictions_within_range(trained_node):
     node, mgr, _ = trained_node
     for p in mgr.predictors.values():
@@ -62,6 +64,7 @@ def test_predictions_within_range(trained_node):
         assert 0.2 * lo <= rec.rtt_pred <= 3 * hi
 
 
+@pytest.mark.slow   # predictor training lifecycle (CI full-suite job)
 def test_prediction_delay_breakdown(trained_node):
     node, mgr, _ = trained_node
     p = next(p for p in mgr.predictors.values() if p.choice is not None)
@@ -72,6 +75,7 @@ def test_prediction_delay_breakdown(trained_node):
     assert rec.t_inference < rec.t_state
 
 
+@pytest.mark.slow   # predictor training lifecycle (CI full-suite job)
 def test_rmse_regression_triggers_full_training(trained_node):
     node, mgr, _ = trained_node
     p = next(p for p in mgr.predictors.values() if p.choice is not None)
@@ -92,6 +96,7 @@ def test_rmse_regression_triggers_full_training(trained_node):
     assert p.full_trainings > full0
 
 
+@pytest.mark.slow   # predictor training lifecycle (CI full-suite job)
 def test_fast_state_is_faster():
     clock = SimClock()
     node = NodeWorkload("worker-2", instances_per_app=1, seed=5, clock=clock,

@@ -1,0 +1,174 @@
+"""Scenario engine (DESIGN.md §10): registry shape, compile semantics,
+determinism, and the behaviour each scenario knob is supposed to inject.
+"""
+from dataclasses import FrozenInstanceError
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import run_scenario
+from repro.core.scenarios import (SCENARIOS, ScenarioSpec, get_scenario,
+                                  scenario_names)
+from repro.core.simulator import (SimConfig, _build_cluster, run_sim)
+from repro.monitoring.metrics import PeriodicRefresh
+
+REQUIRED = ("baseline", "colocation-surge", "hetero-tiers", "diurnal",
+            "flash-crowd", "churn", "stale-predictions", "cold-start",
+            "metric-outage", "mixed-app-fleet")
+
+
+# ---------------------------------------------------------------------------
+# registry + compile
+# ---------------------------------------------------------------------------
+def test_registry_has_the_standing_matrix():
+    assert len(SCENARIOS) >= 10
+    for name in REQUIRED:
+        assert name in SCENARIOS, name
+
+
+def test_every_scenario_compiles_and_runs():
+    for name in scenario_names():
+        cfg = get_scenario(name).compile(seed=1, n_trials=2, n_requests=15)
+        assert isinstance(cfg, SimConfig)
+        res = run_sim(cfg, "perf_aware")
+        assert np.isfinite(res["mean_rtt"]).all(), name
+
+
+def test_compile_is_seed_parametrised_but_stream_shared():
+    spec = get_scenario("baseline")
+    c1, c2 = spec.compile(seed=1), spec.compile(seed=2)
+    assert c1.seed != c2.seed
+    assert c1.stream_seed == c2.stream_seed == spec.stream_seed
+    a, b = _build_cluster(c1), _build_cluster(c2)
+    # shared arrival stream, independent topology/noise
+    np.testing.assert_array_equal(a.req_t, b.req_t)
+    np.testing.assert_array_equal(a.req_app, b.req_app)
+    assert not np.array_equal(a.node_of, b.node_of)
+    assert not np.array_equal(a.z_rtt, b.z_rtt)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", arrival_process="fractal")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", apps=("upload", "nonesuch"))
+    with pytest.raises(KeyError):
+        get_scenario("nonesuch")
+    with pytest.raises(FrozenInstanceError):
+        get_scenario("baseline").accuracy = 0.0
+
+
+def test_same_spec_and_seed_is_bit_identical():
+    kw = dict(seeds=(0, 1, 2), n_trials=3, n_requests=40)
+    r1 = run_scenario("mixed-app-fleet", **kw)
+    r2 = run_scenario("mixed-app-fleet", **kw)
+    for pol in r1:
+        for k, v in r1[pol].per_seed.items():
+            np.testing.assert_array_equal(v, r2[pol].per_seed[k],
+                                          err_msg=f"{pol}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# knob semantics
+# ---------------------------------------------------------------------------
+def test_flash_crowd_compresses_arrivals_into_the_spike():
+    spec = get_scenario("flash-crowd")
+    t0, dur, factor = spec.arrival_params
+    cfg = spec.compile(seed=0, n_trials=1)
+    req_t = _build_cluster(cfg).req_t
+    gaps = np.diff(req_t)
+    inside = gaps[(req_t[1:] >= t0) & (req_t[1:] < t0 + dur)]
+    outside = gaps[req_t[1:] < t0]
+    assert len(inside) > 10
+    # gaps shrink by ~the spike factor inside the window
+    ratio = np.median(outside) / np.median(inside)
+    assert ratio > factor / 2, (ratio, factor)
+
+
+def test_diurnal_rate_oscillates():
+    cfg = get_scenario("diurnal").compile(seed=0, n_trials=1,
+                                          n_requests=1200)
+    req_t = _build_cluster(cfg).req_t
+    period = get_scenario("diurnal").arrival_params[0]
+    phase = (req_t % period) / period
+    # peaks in the first half-period (sin > 0), troughs in the second
+    assert (phase < 0.5).mean() > 0.6
+
+
+def test_node_tiers_show_up_in_acceleration():
+    cfg = get_scenario("hetero-tiers").compile(seed=0, n_trials=50)
+    accel = _build_cluster(cfg).accel           # (T, N)
+    tiers = np.asarray(get_scenario("hetero-tiers").node_tiers)
+    tier_of = np.arange(cfg.n_nodes) % len(tiers)
+    for t in range(len(tiers)):
+        got = accel[:, tier_of == t].mean()
+        assert abs(got - tiers[t]) < 0.15, (t, got, tiers[t])
+
+
+def test_hotspot_interference_amplifies_one_app():
+    base = get_scenario("baseline").compile(seed=0)
+    hot = SimConfig(**{**base.__dict__,
+                       "interference_profile": "hotspot"})
+    ib, ih = _build_cluster(base).imat, _build_cluster(hot).imat
+    np.testing.assert_allclose(ih[1, 0], ib[1, 0] * 3.0)
+    np.testing.assert_allclose(ih[1, 1], ib[1, 1] * 9.0)   # row AND col
+    np.testing.assert_allclose(ih[2, 3], ib[2, 3])          # others kept
+
+
+def test_cold_start_predictions_carry_no_signal():
+    """During cold start perf_aware cannot distinguish replicas beyond
+    queue wait -> its advantage over least_conn vanishes there."""
+    spec = get_scenario("cold-start")
+    cold = spec.compile(seed=0, n_trials=30)
+    warm = SimConfig(**{**cold.__dict__, "cold_start_s": 0.0})
+    res_c = run_sim(cold, "perf_aware")
+    res_w = run_sim(warm, "perf_aware")
+    # identical everything except the cold window -> cold run is slower
+    assert res_c["mean_rtt"].mean() > res_w["mean_rtt"].mean()
+
+
+def test_outage_freezes_the_snapshot():
+    r = PeriodicRefresh(lag_s=5.0, outages=((20.0, 40.0),))
+    calls = []
+    assert r.get(0.0, lambda: calls.append(0) or "a") == "a"
+    assert r.get(10.0, lambda: calls.append(1) or "b") == "b"
+    # inside the outage: stale beyond lag, still frozen
+    assert r.get(25.0, lambda: calls.append(2) or "c") == "b"
+    assert r.get(39.9, lambda: calls.append(3) or "d") == "b"
+    # after the outage the cadence resumes
+    assert r.get(40.0, lambda: calls.append(4) or "e") == "e"
+    assert calls == [0, 1, 4]
+    # bootstrap: an outage before any snapshot still computes once
+    r2 = PeriodicRefresh(0.0, outages=((0.0, 10.0),))
+    assert r2.get(5.0, lambda: "first") == "first"
+
+
+def test_outage_scenario_differs_from_plain_staleness():
+    spec = get_scenario("metric-outage")
+    out = spec.compile(seed=0, n_trials=20)
+    plain = SimConfig(**{**out.__dict__, "outage": None})
+    ro, rp = run_sim(out, "perf_aware"), run_sim(plain, "perf_aware")
+    assert not np.array_equal(ro["chosen"], rp["chosen"])
+
+
+def test_prediction_plane_outage_hook():
+    """PredictionPlane.add_outage: full-fleet calls inside the window
+    serve the cached snapshot instead of re-querying the store."""
+    from repro.core.prediction_plane import PredictionPlane
+    from repro.testing import make_store, make_trained_predictor
+
+    store = make_store(seed=0, n_metrics=6)
+    pred = make_trained_predictor("app0", store, "lr", seed=7,
+                                  node="n0", n_samples=32)
+    plane = PredictionPlane()
+    plane.add_outage(store.clock.now() + 5.0, store.clock.now() + 50.0)
+    assert plane.register_predictor(pred)
+    first = plane.predict_all()
+    gathers = plane.dispatches
+    store.clock.advance(10.0)              # inside the outage window
+    again = plane.predict_all()
+    assert plane.dispatches == gathers     # no new jitted dispatch
+    assert again is first
+    store.clock.advance(60.0)              # past the outage
+    fresh = plane.predict_all()
+    assert fresh is not first

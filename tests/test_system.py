@@ -13,6 +13,8 @@ from repro.data.pipeline import SyntheticLMData
 from repro.models import model as M
 from repro.training.train_step import make_train_state, make_train_step
 
+pytestmark = pytest.mark.slow   # end-to-end training loops (CI full-suite job)
+
 
 def test_tiny_lm_training_loss_decreases(tmp_path):
     cfg = get_config("deepseek-67b", smoke=True).resolve(tp=1)
