@@ -1,0 +1,198 @@
+"""Online adaptation plane: drift recovery, frozen vs retrained
+(DESIGN.md §11).
+
+For every registered drift scenario the closed-loop simulator runs
+three variants over the same stacked multi-seed cluster grid:
+
+* **frozen**   — predictors train ONCE at the end of the warmup window
+  and never again (``retrain_every_s=0``): the pre-drift model meets the
+  post-drift regime head-on.
+* **online**   — the scenario's registered retrain cadence: the fleet
+  keeps (re)training on the RTTs the simulation observes.
+* **oracle**   — perfect RTT knowledge, the ideal-router bound.
+
+The headline metric is the post-drift **recovery fraction**
+
+    recovery = (frozen - online) / (frozen - oracle)
+
+over mean RTT in the post-``t_drift`` window: how much of the
+inefficiency a frozen predictor leaves on the table does online
+retraining win back?  The acceptance gate is >= 0.5 on every drift
+scenario.  Recovery is measured with the viability fallback DISABLED in
+every variant so it isolates retraining; for scenarios that register a
+``fallback_threshold`` (``drift-fallback``) a fifth variant runs the
+frozen fleet WITH the rule armed and reports the **fallback gain** —
+how much post-drift RTT the least-conn safety net hands a fleet that
+never retrains (gated > 0).
+
+Also reported: pre/post-drift means, the fleet's final rolling accuracy
+(frozen vs online — the viability signal the fallback rule consumes),
+and retrain/version counts.  Writes experiments/artifacts/online.json
+(rendered into EXPERIMENTS.md by experiments/generate_experiments.py).
+
+Run:  PYTHONPATH=src python benchmarks/bench_online.py \
+          [--seeds 12] [--smoke] [--no-artifact]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.balancer import make_policy
+from repro.core.campaign import stack_clusters
+from repro.core.scenarios import get_scenario, scenario_names
+from repro.core.simulator import SimStepper, _build_cluster
+
+RECOVERY_FLOOR = 0.5
+DRIFT_SCENARIOS = ("tier-drift", "app-drift", "colocation-drift",
+                   "drift-fallback")
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "artifacts", "online.json")
+
+
+def run_cell(spec, policy: str, seeds, **overrides):
+    """One (scenario, policy) cell over the stacked seed grid; returns
+    the stepper's summary dict (incl. raw per-request RTTs + fleet
+    telemetry)."""
+    cfgs = [spec.compile(seed=s, **overrides) for s in seeds]
+    stacked = stack_clusters([_build_cluster(c) for c in cfgs])
+    pol = make_policy(policy, seed=cfgs[0].seed + 2,
+                      hedge_factor=cfgs[0].hedge_factor,
+                      seed_blocks=[(c.seed + 2, c.n_trials) for c in cfgs])
+    return SimStepper(stacked, pol).run()
+
+
+def _window_means(summary, t_drift: float):
+    pre = summary["req_t"] < t_drift
+    return (float(summary["rtts"][:, pre].mean()),
+            float(summary["rtts"][:, ~pre].mean()))
+
+
+def drift_recovery(scenario, seeds, **overrides):
+    """Frozen / online / oracle for one drift scenario; returns the
+    per-variant pre/post means, the recovery fraction, and telemetry."""
+    spec = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    assert spec.t_drift is not None, f"{spec.name} is not a drift scenario"
+    # the recovery metric isolates retraining: viability fallback off
+    no_fb = dict(overrides, fallback_threshold=0.0)
+    frozen = run_cell(spec, "perf_aware", seeds,
+                      **dict(no_fb, retrain_every_s=0.0))
+    online = run_cell(spec, "perf_aware", seeds, **no_fb)
+    oracle = run_cell(spec, "oracle", seeds, **no_fb)
+    lc = run_cell(spec, "least_conn", seeds, **no_fb)
+    t_drift = spec.t_drift
+    out = {}
+    for name, s in (("frozen", frozen), ("online", online),
+                    ("oracle", oracle), ("least_conn", lc)):
+        pre, post = _window_means(s, t_drift)
+        out[name] = {"pre_rtt": pre, "post_rtt": post}
+    gap = out["frozen"]["post_rtt"] - out["oracle"]["post_rtt"]
+    out["recovery"] = (out["frozen"]["post_rtt"]
+                       - out["online"]["post_rtt"]) / max(gap, 1e-9)
+    if spec.fallback_threshold > 0:
+        # the safety net's value to a fleet that never retrains
+        frozen_fb = run_cell(spec, "perf_aware", seeds,
+                             **dict(overrides, retrain_every_s=0.0))
+        _, post_fb = _window_means(frozen_fb, t_drift)
+        out["fallback"] = {
+            "post_rtt": post_fb,
+            "gain": out["frozen"]["post_rtt"] - post_fb,
+            "fallback_threshold": spec.fallback_threshold,
+        }
+    out["accuracy_frozen"] = float(
+        frozen["online"]["accuracy"].mean())
+    out["accuracy_online"] = float(
+        online["online"]["accuracy"].mean())
+    out["retrains_online"] = len(online["online"]["retrain_times"])
+    out["versions_online"] = [int(v) for v in online["online"]["versions"]]
+    out["trained_frac_frozen"] = frozen["online"]["trained_frac"]
+    return out
+
+
+def bench(scenarios, seeds, **overrides):
+    t0 = time.perf_counter()
+    results = {name: drift_recovery(name, seeds, **overrides)
+               for name in scenarios}
+    return results, time.perf_counter() - t0
+
+
+def table(results) -> str:
+    rows = [("scenario", "frozen", "online", "oracle", "least_conn",
+             "recovery", "acc frz", "acc onl", "fb gain")]
+    for name, r in results.items():
+        fb = r.get("fallback")
+        rows.append((name, f"{r['frozen']['post_rtt']:.2f}",
+                     f"{r['online']['post_rtt']:.2f}",
+                     f"{r['oracle']['post_rtt']:.2f}",
+                     f"{r['least_conn']['post_rtt']:.2f}",
+                     f"{r['recovery']:.2f}",
+                     f"{r['accuracy_frozen']:.2f}",
+                     f"{r['accuracy_online']:.2f}",
+                     "-" if fb is None else f"{fb['gain']:.2f}"))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return "\n".join("  ".join(c.ljust(w) for c, w in zip(r, widths))
+                     for r in rows)
+
+
+def _write_artifact(results, seeds, wall_s):
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {"seeds": list(seeds), "wall_s": wall_s,
+               "recovery_floor": RECOVERY_FLOOR, "table": results}
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {os.path.abspath(ARTIFACT)}")
+
+
+def run(seeds=tuple(range(12))):
+    """Harness contract (benchmarks/run.py): CSV rows per scenario."""
+    results, wall = bench(DRIFT_SCENARIOS, tuple(seeds))
+    return [(f"online_recovery_{name}", r["recovery"],
+             f"frozen={r['frozen']['post_rtt']:.2f}s;"
+             f"online={r['online']['post_rtt']:.2f}s;"
+             f"oracle={r['oracle']['post_rtt']:.2f}s")
+            for name, r in results.items()]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + hard recovery gate (CI)")
+    ap.add_argument("--no-artifact", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        seeds, overrides = tuple(range(8)), dict(n_trials=6)
+    else:
+        seeds, overrides = tuple(range(args.seeds)), {}
+    results, wall = bench(DRIFT_SCENARIOS, seeds, **overrides)
+
+    print(f"drift grid: {len(results)} scenarios x "
+          f"{{frozen, online, oracle, least_conn}} x {len(seeds)} seeds "
+          f"({wall:.1f}s, one stacked lockstep pass per cell)")
+    print(table(results))
+
+    if not args.smoke and not args.no_artifact:
+        _write_artifact(results, seeds, wall)
+
+    worst = min(results.values(), key=lambda r: r["recovery"])
+    assert worst["recovery"] >= RECOVERY_FLOOR, \
+        f"online retraining recovers only {worst['recovery']:.2f} " \
+        f"of the frozen->oracle gap (need >= {RECOVERY_FLOOR})"
+    for name, r in results.items():
+        assert r["accuracy_online"] > r["accuracy_frozen"], \
+            f"{name}: retraining did not improve rolling accuracy"
+        if "fallback" in r:
+            assert r["fallback"]["gain"] > 0, \
+                f"{name}: the viability fallback did not help a " \
+                f"frozen fleet (gain {r['fallback']['gain']:.3f}s)"
+    print(f"\nOK: recovery >= {RECOVERY_FLOOR} on every drift scenario "
+          f"(min {worst['recovery']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -231,6 +231,57 @@ def campaign_section():
     return out
 
 
+def online_section():
+    """§Online — drift recovery, frozen vs retrained (DESIGN.md §11),
+    rendered from the bench_online artifact."""
+    art = os.path.join(os.path.dirname(__file__), "artifacts",
+                       "online.json")
+    out = ["\n## §Online — drift recovery "
+           "(closed-loop retraining vs frozen predictors)\n"]
+    if not os.path.exists(art):
+        out.append("*(missing artifact — run "
+                   "`PYTHONPATH=src python benchmarks/bench_online.py` "
+                   "to populate)*\n")
+        return out
+    data = json.load(open(art))
+    n_seeds = len(data["seeds"])
+    out.append(
+        f"Every registered drift scenario x {{frozen, online, oracle, "
+        f"least_conn}} x {n_seeds} seeds through the closed-loop "
+        f"simulator (`repro.core.online`): predictors train on the RTTs "
+        f"the simulation observes, the regime shifts at `t_drift`, and "
+        f"**recovery = (frozen - online) / (frozen - oracle)** over the "
+        f"post-drift window measures how much of the inefficiency a "
+        f"frozen fleet leaves on the table periodic retraining wins "
+        f"back (gate: >= {data['recovery_floor']:.0%} everywhere).  "
+        f"`acc` is the fleet's final rolling accuracy — the viability "
+        f"signal the least-conn fallback rule consumes.\n")
+    out.append("| scenario | frozen s | online s | oracle s | "
+               "least_conn s | recovery | acc frozen | acc online | "
+               "fallback gain s |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for name, r in data["table"].items():
+        fb = r.get("fallback")
+        out.append(
+            f"| {name} | {r['frozen']['post_rtt']:.2f} | "
+            f"{r['online']['post_rtt']:.2f} | "
+            f"{r['oracle']['post_rtt']:.2f} | "
+            f"{r['least_conn']['post_rtt']:.2f} | "
+            f"**{r['recovery']:.2f}** | {r['accuracy_frozen']:.2f} | "
+            f"{r['accuracy_online']:.2f} | "
+            + ("-" if fb is None else f"{fb['gain']:.2f}") + " |")
+    recs = [r["recovery"] for r in data["table"].values()]
+    out.append(
+        f"\nReading the table: online retraining recovers "
+        f"{min(recs):.0%}-{max(recs):.0%} of the post-drift "
+        f"frozen->oracle gap, and rolling accuracy recovers to ~0.8 "
+        f"while a frozen fleet stays at ~0.3 — the closed-loop answer "
+        f"to the paper's §7 adaptability requirement.  The fallback "
+        f"column is what the viability rule alone (no retraining) "
+        f"saves a frozen fleet.\n")
+    return out
+
+
 def dryrun_sections(art):
     """§Dry-run + §Roofline from the dry-run artifact (or a
     regeneration note when it is absent)."""
@@ -293,6 +344,7 @@ iterations that got there and where each remaining second sits.
 def main():
     out = [HEADER]
     out.extend(campaign_section())
+    out.extend(online_section())
     out.extend(dryrun_sections(roofline.ARTIFACT))
     out.append(PERF_LOG)
     path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")

@@ -20,7 +20,11 @@ Batched and serial execution are numerically interchangeable: stacking
 concatenates exactly the arrays the serial runs would use, stateful
 policies (the RR cursor) keep per-trial state, and ``RandomChoice`` is
 handed per-seed generator blocks (``seed_blocks``) so each block draws
-what its serial run would.  ``tests/test_campaign.py`` pins parity for
+what its serial run would.  The closed-loop scenarios ride the same
+axis: the :class:`~repro.core.online.OnlineFleet` keeps all state
+per-trial and retrains with batched per-trial ridge solves, so one
+lockstep pass retrains the whole stacked seed grid exactly as the
+per-seed serial runs would (drift scenarios included).  ``tests/test_campaign.py`` pins parity for
 every registered scenario; ``benchmarks/bench_campaign.py`` measures the
 speedup (>=5x on the >=8-seed grid).
 """
@@ -75,17 +79,28 @@ def stack_clusters(clusters: Sequence[_Cluster]) -> _Cluster:
         return np.concatenate([getattr(c, attr) for c in clusters], axis=0)
 
     # each seed drew its own interference mix -> per-trial (T, A, A)
-    imat = np.concatenate(
-        [np.broadcast_to(c.imat, (t,) + c.imat.shape)
-         for c, t in zip(clusters, trials)], axis=0)
+    def cat_imat(attr):
+        return np.concatenate(
+            [np.broadcast_to(getattr(c, attr), (t,) + getattr(c, attr).shape)
+             for c, t in zip(clusters, trials)], axis=0)
+
+    imat = cat_imat("imat")
     failed = None if c0.failed_node is None else cat("failed_node")
+    # post-drift regime arrays stack exactly like their pre-drift
+    # counterparts (per-seed redraws -> per-trial matrices); the shared
+    # mean_rtt_post is config-derived, so the cfg equality above already
+    # guarantees it matches across seeds
+    imat_post = None if c0.imat_post is None else cat_imat("imat_post")
+    accel_post = None if c0.accel_post is None else cat("accel_post")
     return _Cluster(
         cfg=replace(c0.cfg, n_trials=sum(trials)),
         app_of=c0.app_of, mean_rtt=c0.mean_rtt,
         cpu_req=c0.cpu_req, mem_req=c0.mem_req,
         imat=imat, node_of=cat("node_of"), accel=cat("accel"),
         req_app=c0.req_app, req_t=c0.req_t,
-        z_rtt=cat("z_rtt"), z_pred=cat("z_pred"), failed_node=failed)
+        z_rtt=cat("z_rtt"), z_pred=cat("z_pred"), failed_node=failed,
+        imat_post=imat_post, accel_post=accel_post,
+        mean_rtt_post=c0.mean_rtt_post)
 
 
 @dataclass

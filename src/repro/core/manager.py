@@ -78,6 +78,20 @@ class PredictionManager:
                               predictors=self.router_predictors(app),
                               plane=self.plane, **kwargs)
 
+    def online_adapter(self, retrain_every_s: float = COLLECTION_PERIOD_S,
+                       **kwargs):
+        """An :class:`~repro.core.online.OnlineAdapter` over this
+        manager's active predictors and shared plane: feed it observed
+        task RTTs and call ``maybe_retrain`` to hot-swap bumped
+        artifacts on the cadence (DESIGN.md §11)."""
+        from repro.core.online import OnlineAdapter
+        adapter = OnlineAdapter(self.plane, retrain_every_s=retrain_every_s,
+                                **kwargs)
+        for key, pred in self.predictors.items():
+            if not self.paused.get(key):
+                adapter.track(pred)
+        return adapter
+
     # ------------------------------------------------------------------
     def attach(self, node: NodeWorkload):
         """Wire task completions on a node into its predictors."""

@@ -1,0 +1,339 @@
+"""Online adaptation plane (DESIGN.md §11): closed-loop predictor
+(re)training under workload drift.
+
+The paper's feasibility argument (§1, §7) needs predictors that *remain
+adaptable* — co-location mixes shift, hardware gets reshuffled, app
+profiles drift.  The static Eq. 12 accuracy knob can never degrade or
+recover, so this module closes the loop three ways:
+
+* :class:`OnlineFleet` — the simulator side.  One lightweight online
+  ridge predictor per (trial, app), trained in LINEAR RTT space on the
+  RTTs the simulation itself observes (conditional-mean fitting — see
+  the class docstring for why log space would be wrong here), with
+  features built from the same (stale, outage-frozen) occupancy
+  snapshot the prediction plane would see: a one-hot of the candidate's
+  node (learns node speed) plus the per-app busy counts on that node
+  (learns the co-location residual).  Every operation is vectorised over the trial
+  axis — the same (T, C) batch axis the policy engine scores — so the
+  campaign runner's stacked seed grid retrains the whole fleet in one
+  lockstep pass, and batched/serial campaign parity holds per trial.
+* :class:`RollingAccuracy` — the shared viability tracker.  Rolling
+  relative accuracy over the last ``window`` completed requests,
+  element-wise over a fleet axis ((T,) trials in the simulator,
+  replicas in the live router).  When accuracy drops below the
+  viability threshold the perf-aware policy falls back to
+  ``least_conn`` (the paper's Fig. 11 message: below ~60-70% accuracy
+  a reactive policy is the better router).
+* :class:`OnlineAdapter` — the serving side.  Feeds observed task RTTs
+  into real :class:`~repro.core.predictor.RTTPredictor` lifecycles,
+  retrains on a cadence, and hot-swaps the bumped
+  :class:`~repro.core.predictor.InferenceArtifact` versions into the
+  shared :class:`~repro.core.prediction_plane.PredictionPlane` (the
+  ``artifact_version`` plumbing: a re-registration restacks only the
+  affected bucket).
+
+Observations only count once their request has *completed* (per-trial
+``finish <= now`` masks), so neither training nor the accuracy tracker
+is clairvoyant about in-flight work.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["RollingAccuracy", "OnlineFleet", "OnlineAdapter"]
+
+
+class RollingAccuracy:
+    """Rolling relative accuracy over the last ``window`` observations.
+
+    Tracks ``err = min(|pred - actual| / actual, 1)`` in a per-element
+    ring over an ``(n,)`` fleet axis; ``accuracy() = 1 - mean(err)``
+    over each element's filled ring.  Elements with fewer than
+    ``min_count`` lifetime observations report accuracy 1.0 and are
+    always viable — no evidence of non-viability yet.
+    """
+
+    def __init__(self, window: int = 40, n: int = 1, min_count: int = 8):
+        self.window = max(int(window), 1)
+        self.n = int(n)
+        self.min_count = int(min_count)
+        self._err = np.zeros((self.window, self.n))
+        self._pos = np.zeros(self.n, np.int64)
+        self.count = np.zeros(self.n, np.int64)
+
+    def update(self, rel_err: np.ndarray, mask: Optional[np.ndarray] = None):
+        """Fold one (n,) batch of relative errors; ``mask`` selects which
+        elements actually observed this round."""
+        rel_err = np.minimum(np.abs(np.asarray(rel_err, float)), 1.0)
+        idx = np.arange(self.n) if mask is None else np.flatnonzero(mask)
+        if idx.size == 0:
+            return
+        self._err[self._pos[idx], idx] = rel_err[idx]
+        self._pos[idx] = (self._pos[idx] + 1) % self.window
+        self.count[idx] += 1
+
+    def accuracy(self) -> np.ndarray:
+        """(n,) rolling accuracy in [0, 1]; 1.0 where nothing observed."""
+        filled = np.minimum(self.count, self.window)
+        valid = np.arange(self.window)[:, None] < filled[None, :]
+        err_sum = np.where(valid, self._err, 0.0).sum(axis=0)
+        acc = 1.0 - err_sum / np.maximum(filled, 1)
+        return np.where(filled > 0, acc, 1.0)
+
+    def viable(self, threshold: float) -> np.ndarray:
+        """(n,) bool: above threshold OR not enough evidence yet."""
+        return (self.count < self.min_count) | (self.accuracy() >= threshold)
+
+
+class OnlineFleet:
+    """Batched per-(trial, app) online predictors for the simulator.
+
+    Model: ``rtt ~ [onehot(node) | busy-count-per-app-on-node] @ w`` fit
+    by ridge regression over a rolling window of completed requests.
+    The one-hot learns each node's expected service time (app mean x
+    node speed — the things the drift knobs move), the busy counts the
+    co-location residual.  Fitting the CONDITIONAL MEAN in linear space
+    is deliberate: the simulator's interference model is mean-preserving
+    (log-normal moment matching, paper Table 5 treats co-location as a
+    CoV increase), so the risk-neutral routing signal is E[rtt], and a
+    least-squares fit estimates exactly that — a log-space fit would
+    chase the interference-driven median shift, which carries no
+    expected-latency information.  A frozen fleet degrades after
+    ``t_drift``; a periodically-retrained one recovers.
+
+    All state is per-trial (leading T axis) and every update is one
+    vectorised pass, so a stacked multi-seed cluster (``core.campaign``)
+    retrains bit-identically to per-seed serial runs.
+    """
+
+    def __init__(self, node_of: np.ndarray, app_of: np.ndarray,
+                 n_nodes: int, n_apps: int, prior_rtt: Sequence[float], *,
+                 warmup_s: float, retrain_every_s: float = 0.0,
+                 window: int = 400, lam: float = 1e-3, min_obs: int = 8,
+                 accuracy_window: int = 40):
+        self.node_of = np.asarray(node_of)          # (T, R)
+        self.app_of = np.asarray(app_of)            # (R,)
+        self.T = len(self.node_of)
+        self.N, self.A = int(n_nodes), int(n_apps)
+        self.D = self.N + self.A
+        self.prior = np.asarray(prior_rtt, float)   # (A,) cold-start prior
+        self.lam = float(lam)
+        self.window = int(window)
+        self.min_obs = int(min_obs)
+        self.retrain_every_s = float(retrain_every_s)
+        self._next_train = float(warmup_s)
+        self.W = np.zeros((self.T, self.A, self.D))
+        self.trained = np.zeros((self.T, self.A), bool)
+        #: per-app artifact version, bumped by every retrain that ran
+        self.versions = np.zeros(self.A, np.int64)
+        self.retrain_times: List[float] = []
+        self.trackers = [RollingAccuracy(accuracy_window, n=self.T)
+                         for _ in range(self.A)]
+        # (T, R) flat (trial, node, app) bucket index for the busy-count
+        # bincount; one-hot node features cached per app
+        trial = np.arange(self.T)
+        self._trial = trial
+        self._flat_an = (trial[:, None] * (self.N * self.A)
+                         + self.node_of * self.A + self.app_of[None, :])
+        self._eye_n = np.eye(self.N)
+        self._cand: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        # rolling observation buffer: (app, X (T, D), rtt (T,),
+        # finish (T,)) per step, plus not-yet-completed accuracy entries
+        self._obs: List[Tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
+        self._pending: List[list] = []
+
+    # ------------------------------------------------------------------
+    # features + prediction
+    def features(self, a: int, candidates: np.ndarray,
+                 busy_until: np.ndarray, now: float) -> np.ndarray:
+        """(T, C, D) feature tensor for app ``a``'s candidates under the
+        given (possibly stale) occupancy snapshot."""
+        busy = (busy_until > now).astype(float)                # (T, R)
+        counts = np.bincount(
+            self._flat_an.ravel(), weights=busy.ravel(),
+            minlength=self.T * self.N * self.A
+        ).reshape(self.T, self.N, self.A)
+        cached = self._cand.get(a)
+        if cached is None:
+            nodes = self.node_of[:, candidates]                # (T, C)
+            cached = (nodes, self._eye_n[nodes])               # + (T, C, N)
+            self._cand[a] = cached
+        nodes, onehot = cached
+        return np.concatenate(
+            [onehot, counts[self._trial[:, None], nodes]], axis=-1)
+
+    def predict(self, a: int, X: np.ndarray) -> np.ndarray:
+        """(T, C) predicted RTT; untrained (trial, app) rows serve the
+        app-mean prior (the knowledge-base bootstrap value)."""
+        y = np.maximum(np.einsum("tcd,td->tc", X, self.W[:, a]), 1e-3)
+        return np.where(self.trained[:, a, None], y, self.prior[a])
+
+    # ------------------------------------------------------------------
+    # observation + accuracy
+    def observe(self, a: int, X_pick: np.ndarray, rtt: np.ndarray,
+                finish: np.ndarray, predicted: np.ndarray):
+        """Record one routed request per trial: the picked candidate's
+        features, its true RTT, its completion time (training and the
+        tracker only consume it once ``finish <= now``), and what the
+        fleet predicted for it."""
+        rtt = np.asarray(rtt, float)
+        X_pick = np.asarray(X_pick, float)
+        finish = np.asarray(finish, float)
+        self._obs.append((int(a), X_pick, rtt, finish))
+        if len(self._obs) > self.window:
+            del self._obs[: len(self._obs) - self.window]
+        err = np.abs(np.asarray(predicted, float) - rtt) \
+            / np.maximum(rtt, 1e-9)
+        # [app, finish, err, done-mask, earliest outstanding finish]
+        self._pending.append([int(a), finish, err,
+                              np.zeros(self.T, bool), float(finish.min())])
+
+    def fold_pending(self, now: float):
+        """Move completed observations into the accuracy trackers
+        (per-trial: a request may have finished in some trials only).
+        The cached earliest-outstanding-finish makes the common
+        nothing-completed-yet case one float compare per entry."""
+        keep = []
+        for ent in self._pending:
+            a, fin, err, done, t_min = ent
+            if t_min > now:
+                keep.append(ent)
+                continue
+            m = (~done) & (fin <= now)
+            if m.any():
+                self.trackers[a].update(err, m)
+                done |= m
+            if not done.all():
+                ent[4] = float(fin[~done].min())
+                keep.append(ent)
+        self._pending = keep
+
+    def accuracy(self, a: int) -> np.ndarray:
+        return self.trackers[a].accuracy()
+
+    def viable(self, a: int, threshold: float) -> np.ndarray:
+        return self.trackers[a].viable(threshold)
+
+    # ------------------------------------------------------------------
+    # (re)training
+    def maybe_retrain(self, now: float) -> bool:
+        """Retrain when the cadence is due.  The first training fires at
+        ``warmup_s``; ``retrain_every_s == 0`` means train once and stay
+        frozen (the bench_online baseline)."""
+        if now < self._next_train:
+            return False
+        if self.retrain_every_s > 0:
+            while self._next_train <= now:
+                self._next_train += self.retrain_every_s
+        else:
+            self._next_train = np.inf
+        self.retrain(now)
+        return True
+
+    def retrain(self, now: float):
+        """One ridge solve per (trial, app) over the completed slice of
+        the rolling window — batched over the trial axis."""
+        obs = self._obs
+        eye = self.lam * np.eye(self.D)
+        for a in range(self.A):
+            rows = [o for o in obs if o[0] == a]
+            if not rows:
+                continue
+            X = np.stack([o[1] for o in rows], axis=1)      # (T, n, D)
+            y = np.stack([o[2] for o in rows], axis=1)      # (T, n)
+            fin = np.stack([o[3] for o in rows], axis=1)    # (T, n)
+            m = (fin <= now).astype(float)                  # completed only
+            n_eff = m.sum(axis=1)                           # (T,)
+            Xm_t = (X * m[:, :, None]).transpose(0, 2, 1)   # (T, D, n)
+            G = Xm_t @ X + eye
+            b = Xm_t @ y[:, :, None]                        # (T, D, 1)
+            Wa = np.linalg.solve(G, b)[..., 0]
+            ok = n_eff >= self.min_obs
+            if ok.any():
+                self.W[:, a] = np.where(ok[:, None], Wa, self.W[:, a])
+                self.trained[:, a] |= ok
+            self.versions[a] += 1
+        self.retrain_times.append(float(now))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """Telemetry the simulator surfaces in its summary dict."""
+        return {
+            "versions": self.versions.copy(),
+            "retrain_times": list(self.retrain_times),
+            "trained_frac": float(self.trained.mean()),
+            "accuracy": np.stack([t.accuracy() for t in self.trackers]),
+        }
+
+
+class OnlineAdapter:
+    """Serving-side retrain loop: observed RTTs -> RTTPredictor
+    lifecycles -> versioned artifact hot-swap into the PredictionPlane.
+
+    ``observe`` feeds a completed task into its predictor's dataset (and
+    the rolling accuracy tracker when the routed prediction is known);
+    ``maybe_retrain`` runs each predictor's collection/training cycle on
+    the cadence and re-registers bumped artifacts — the plane's version
+    check makes the swap a bucket restack, not a rebuild.  The router
+    shares the same :class:`RollingAccuracy` logic for its fallback rule.
+    """
+
+    def __init__(self, plane, retrain_every_s: float = 60.0,
+                 accuracy_window: int = 40, min_count: int = 8):
+        self.plane = plane
+        self.retrain_every_s = float(retrain_every_s)
+        self.accuracy_window = int(accuracy_window)
+        self.min_count = int(min_count)
+        self.predictors: Dict[Tuple[str, str], object] = {}
+        self.trackers: Dict[Tuple[str, str], RollingAccuracy] = {}
+        #: hot-swap log: (t, (app, node), new artifact version)
+        self.swaps: List[Tuple[float, Tuple[str, str], int]] = []
+        self._next_train: Optional[float] = None
+
+    def track(self, pred) -> None:
+        key = (pred.app, pred.node)
+        self.predictors[key] = pred
+        self.trackers.setdefault(
+            key, RollingAccuracy(self.accuracy_window, n=1,
+                                 min_count=self.min_count))
+
+    def observe(self, app: str, node: str, rtt: float, windows,
+                predicted: Optional[float] = None) -> None:
+        pred = self.predictors.get((app, node))
+        if pred is None:
+            return
+        pred.observe_task(rtt, windows)
+        if predicted is not None and rtt > 0:
+            self.trackers[(app, node)].update(
+                np.array([abs(predicted - rtt) / rtt]))
+
+    def accuracy(self, app: str, node: str) -> float:
+        tr = self.trackers.get((app, node))
+        return 1.0 if tr is None else float(tr.accuracy()[0])
+
+    def viable(self, app: str, node: str, threshold: float) -> bool:
+        tr = self.trackers.get((app, node))
+        return True if tr is None else bool(tr.viable(threshold)[0])
+
+    def maybe_retrain(self, now: float) -> List[Tuple[str, str]]:
+        """Run due collection/training cycles; returns the keys whose
+        artifacts were hot-swapped into the plane this call."""
+        if self._next_train is None:
+            self._next_train = now + self.retrain_every_s
+            return []
+        if now < self._next_train:
+            return []
+        while self._next_train <= now:
+            self._next_train += self.retrain_every_s
+        swapped = []
+        for key, pred in self.predictors.items():
+            if not pred.collection_cycle():
+                continue
+            if pred.train() is None:
+                continue
+            if self.plane.register_predictor(pred):
+                self.swaps.append((now, key, pred.artifact_version))
+                swapped.append(key)
+        return swapped

@@ -120,6 +120,9 @@ class PredictionPlane:
         self._buckets: Optional[List[_Bucket]] = None
         self._refresh = PeriodicRefresh(refresh_s, outages) \
             if (refresh_s > 0 or outages) else None
+        #: last record computed per key, by any call — what outage
+        #: windows freeze for subset callers
+        self._last: Dict[Tuple[str, str], PredictionRecord] = {}
         self.dispatches = 0       # jitted bucket calls issued (telemetry)
         self.batched_predictions = 0
 
@@ -158,6 +161,7 @@ class PredictionPlane:
     def unregister(self, app: str, node: str):
         if self._entries.pop((app, node), None) is not None:
             self._buckets = None
+        self._last.pop((app, node), None)
 
     def keys(self) -> List[Tuple[str, str]]:
         return list(self._entries)
@@ -240,13 +244,31 @@ class PredictionPlane:
         """Predict for every registered (app, node) — or the given subset —
         in O(buckets) jitted dispatches.
 
-        With ``refresh_s`` set, a full-fleet call within the refresh
-        horizon returns the cached snapshot (periodic collection, not
-        per-request — the paper §4 cadence).
+        With ``refresh_s`` set, calls within the refresh horizon serve
+        the cached snapshot (periodic collection, not per-request — the
+        paper §4 cadence); subset calls are served from the same
+        full-fleet snapshot, recomputed when stale.  Outage windows
+        freeze SUBSET calls too: each key's last computed record is
+        served instead of re-querying the store — so a router's keyed
+        sweep can no longer bypass an ``add_outage`` window by passing
+        a key list.  Outside outages, an outage-only plane (lag 0)
+        keeps the cheap keyed path: subset calls compute just the
+        requested keys.  Keys never computed before an outage began
+        bootstrap once inside it (a consumer needs *something*), then
+        stay frozen.
         """
-        if keys is None and self._refresh is not None and self._entries:
-            clock = next(iter(self._entries.values())).store.clock
-            return self._refresh.get(clock.now(), self._predict_now)
+        if self._refresh is None or not self._entries:
+            return self._predict_now(keys)
+        now = next(iter(self._entries.values())).store.clock.now()
+        if keys is None:
+            return self._refresh.get(now, lambda: self._predict_now(None))
+        if self._refresh.in_outage(now):
+            cached = {k: self._last[k] for k in keys if k in self._last}
+            return cached if cached else self._predict_now(keys)
+        if self._refresh.lag_s > 0:
+            snapshot = self._refresh.get(
+                now, lambda: self._predict_now(None))
+            return {k: snapshot[k] for k in keys if k in snapshot}
         return self._predict_now(keys)
 
     def _predict_now(self, keys=None):
@@ -298,4 +320,5 @@ class PredictionPlane:
                 rec.t_wall_feature = wall
                 records[key] = rec
                 self.batched_predictions += 1
+        self._last.update(records)
         return records

@@ -58,6 +58,18 @@ class ScenarioSpec:
     cold_start_s: float = 0.0
     outage: Optional[Tuple[float, float]] = None
     hedge_factor: Optional[float] = None
+    # closed-loop online prediction (core/online.py, DESIGN.md §11)
+    closed_loop: bool = False
+    online_warmup_s: float = 20.0
+    retrain_every_s: float = 0.0
+    online_window: int = 400
+    fallback_threshold: float = 0.0
+    accuracy_window: int = 40
+    # mid-run workload drift
+    t_drift: Optional[float] = None
+    drift_interference: Optional[float] = None
+    drift_rtt_factor: Optional[Tuple[float, ...]] = None
+    drift_tier_shuffle: bool = False
 
     def __post_init__(self):
         if self.arrival_process not in ARRIVAL_PROCESSES:
@@ -66,6 +78,19 @@ class ScenarioSpec:
         unknown = [a for a in self.apps if a not in APPS]
         if unknown:
             raise ValueError(f"{self.name}: unknown apps {unknown}")
+        drifts = (self.drift_interference is not None
+                  or self.drift_rtt_factor is not None
+                  or self.drift_tier_shuffle)
+        if self.t_drift is None and drifts:
+            raise ValueError(f"{self.name}: drift knobs set without t_drift")
+        if self.t_drift is not None and not drifts:
+            raise ValueError(f"{self.name}: t_drift set but no drift knob")
+        if self.drift_rtt_factor is not None \
+                and len(self.drift_rtt_factor) not in (1, len(self.apps)):
+            raise ValueError(
+                f"{self.name}: drift_rtt_factor needs 1 or "
+                f"{len(self.apps)} entries, got "
+                f"{len(self.drift_rtt_factor)}")
 
     @property
     def stream_seed(self) -> int:
@@ -170,6 +195,59 @@ register(ScenarioSpec(
     description="The metric source blacks out from t=30s for 40s; the "
                 "occupancy snapshot freezes however stale it gets.",
     prediction_lag_s=5.0, outage=(30.0, 40.0)))
+
+# ----------------------------------------------------------------------
+# closed-loop drift scenarios (DESIGN.md §11).  All run the online
+# adaptation plane: predictions come from per-(trial, app) predictors
+# trained on observed RTTs; at t_drift the regime shifts and a frozen
+# fleet degrades while periodic retraining recovers
+# (benchmarks/bench_online.py quantifies the recovery fraction).
+#
+# Design note: drift scenarios keep interference LOW and always include
+# a structural (node-speed) component.  The simulator's interference
+# model is mean-preserving (Table 5 treats co-location as a CoV
+# increase), so a pure interference-matrix shift carries no
+# expected-latency signal, and a pure per-app mean shift rescales every
+# candidate of an app equally — neither can break a trained predictor's
+# within-app ranking on its own (DESIGN.md §11 documents the analysis).
+_DRIFT_APPS = ("motioncor2", "fft_mock", "gctf", "ctffind4")
+_DRIFT = dict(apps=_DRIFT_APPS, n_requests=560, arrival_rate=1.0,
+              heterogeneity=0.05, node_tiers=(-0.6, 0.0, 1.8),
+              closed_loop=True, online_warmup_s=40.0,
+              retrain_every_s=12.0, online_window=120, t_drift=80.0)
+
+register(ScenarioSpec(
+    name="tier-drift",
+    description="Hardware reshuffle under a trained fleet: at t=80s node "
+                "speeds are permuted (a live migration / refresh epoch) — "
+                "frozen predictors now prefer the previously-fast nodes.",
+    interference_strength=0.2, drift_tier_shuffle=True, **_DRIFT))
+
+register(ScenarioSpec(
+    name="app-drift",
+    description="A release changes app profiles (per-app mean-RTT "
+                "factors) while the scheduler rebalances placements "
+                "(tier reshuffle): both the scale and the structure a "
+                "trained predictor learned are stale after t=80s.",
+    interference_strength=0.3, drift_tier_shuffle=True,
+    drift_rtt_factor=(1.8, 0.6, 1.5, 0.7), **_DRIFT))
+
+register(ScenarioSpec(
+    name="colocation-drift",
+    description="Tenancy epoch change: the interference matrix is "
+                "redrawn, node speeds reshuffle, and app means shift — "
+                "every signal the fleet learned moves at once.",
+    **{**_DRIFT, "arrival_rate": 0.9}, interference_strength=0.4,
+    drift_interference=0.6, drift_tier_shuffle=True,
+    drift_rtt_factor=(1.4, 0.8, 1.2, 0.9)))
+
+register(ScenarioSpec(
+    name="drift-fallback",
+    description="tier-drift with the viability rule armed: trials whose "
+                "rolling prediction accuracy drops below 0.55 fall back "
+                "to least_conn until retraining restores the predictor.",
+    interference_strength=0.2, drift_tier_shuffle=True,
+    fallback_threshold=0.55, **_DRIFT))
 
 register(ScenarioSpec(
     name="mixed-app-fleet",

@@ -37,7 +37,20 @@ Beyond the seed scenarios, the simulator supports:
     or node-speed signal;
   * metric outages (``outage``): the predictor's occupancy snapshot is
     frozen for the whole window, however stale it gets (the
-    ``PeriodicRefresh`` outage hook shared with the prediction plane).
+    ``PeriodicRefresh`` outage hook shared with the prediction plane);
+  * closed-loop prediction (``closed_loop``, DESIGN.md §11): instead of
+    the synthetic Eq. 12 accuracy draw, ``predicted`` comes from an
+    :class:`~repro.core.online.OnlineFleet` of per-(trial, app)
+    predictors trained on the RTTs the simulation itself observes,
+    scoring the same (stale, outage-frozen) occupancy snapshot —
+    prediction quality can now degrade under drift and recover with
+    retraining, and ``fallback_threshold`` routes trials whose rolling
+    accuracy drops below the viability floor via least-connections;
+  * mid-run workload drift (``t_drift`` + ``drift_interference`` /
+    ``drift_rtt_factor`` / ``drift_tier_shuffle``): at ``t_drift`` the
+    interference matrix is redrawn, per-app mean RTTs are rescaled,
+    and/or node speeds are reshuffled — the regime shifts the paper's
+    §7 adaptability argument is about.
 
 The declarative layer over these knobs lives in
 ``repro.core.scenarios`` (ScenarioSpec -> SimConfig).
@@ -50,6 +63,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
+from repro.core.online import OnlineFleet
 from repro.monitoring.metrics import PeriodicRefresh
 
 # SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
@@ -99,6 +113,20 @@ class SimConfig:
     interference_profile: str = "uniform"   # or "hotspot"
     cold_start_s: float = 0.0               # untrained-predictor window
     outage: Optional[Tuple[float, float]] = None  # (t_start_s, duration_s)
+    # -- closed-loop online prediction (core/online.py, DESIGN.md §11) --
+    #: ``predicted`` comes from per-(trial, app) online predictors
+    #: trained on observed RTTs instead of the synthetic Eq. 12 draw
+    closed_loop: bool = False
+    online_warmup_s: float = 20.0     # observe-only window before 1st train
+    retrain_every_s: float = 0.0      # 0 -> train once at warmup, frozen
+    online_window: int = 400          # rolling observation window (requests)
+    fallback_threshold: float = 0.0   # accuracy floor; 0 disables fallback
+    accuracy_window: int = 40         # rolling accuracy tracker length
+    # -- mid-run workload drift (DESIGN.md §11) -------------------------
+    t_drift: Optional[float] = None               # drift onset (s)
+    drift_interference: Optional[float] = None    # redraw imat, new strength
+    drift_rtt_factor: Optional[Tuple[float, ...]] = None  # per-app factors
+    drift_tier_shuffle: bool = False              # permute node speeds
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -107,6 +135,20 @@ def _interference_matrix(apps: Sequence[str], strength: float,
     n = len(apps)
     base = rng.uniform(0.05, 0.35, size=(n, n))
     return strength * (base + base.T) / 2.0
+
+
+def _apply_interference_profile(imat: np.ndarray, profile: str,
+                                n_apps: int) -> np.ndarray:
+    """Shape the raw interference draw: ``hotspot`` amplifies one heavy
+    interferer's row AND column (the paper's MotionCor2-style app)."""
+    if profile == "hotspot":
+        h = min(1, n_apps - 1)
+        imat = imat.copy()
+        imat[h, :] *= 3.0
+        imat[:, h] *= 3.0
+    elif profile != "uniform":
+        raise ValueError(f"unknown interference_profile {profile!r}")
+    return imat
 
 
 def _rate_factor(cfg: SimConfig, t: float) -> float:
@@ -159,7 +201,9 @@ class _Cluster:
 
     ``imat`` is (A, A) for a single-seed cluster; the campaign's stacked
     clusters carry a per-trial (T, A, A) matrix because each seed drew
-    its own interference mix.
+    its own interference mix.  The ``*_post`` arrays are the post-drift
+    regime (active once ``now >= cfg.t_drift``): a None field keeps its
+    pre-drift counterpart.
     """
     cfg: SimConfig
     app_of: np.ndarray        # (R,) app index per replica
@@ -174,9 +218,12 @@ class _Cluster:
     z_rtt: np.ndarray         # (T, J) RTT noise
     z_pred: np.ndarray        # (T, J, R) prediction noise
     failed_node: Optional[np.ndarray] = None   # (T,) churn target
+    imat_post: Optional[np.ndarray] = None     # post-drift interference
+    accel_post: Optional[np.ndarray] = None    # post-drift node speeds
+    mean_rtt_post: Optional[np.ndarray] = None  # post-drift app means
 
     def __post_init__(self):
-        self._prep: Dict[int, _AppPrep] = {}
+        self._prep: Dict[Tuple[int, bool], _AppPrep] = {}
         # flat (trial * n_nodes + node) index of every replica, for the
         # bincount node-bucket accumulation in rtt_draw
         T = len(self.node_of)
@@ -186,16 +233,26 @@ class _Cluster:
         self._flat_nodes = (self._trial[:, None] * N
                             + self.node_of).ravel()
 
-    def app_prep(self, a: int) -> _AppPrep:
-        prep = self._prep.get(a)
+    def in_drift(self, now: float) -> bool:
+        return self.cfg.t_drift is not None and now >= self.cfg.t_drift
+
+    def app_prep(self, a: int, post: bool = False) -> _AppPrep:
+        key = (a, bool(post))
+        prep = self._prep.get(key)
         if prep is None:
+            imat = self.imat_post if post and self.imat_post is not None \
+                else self.imat
+            accel = self.accel_post if post and self.accel_post is not None \
+                else self.accel
+            mean_rtt = self.mean_rtt_post \
+                if post and self.mean_rtt_post is not None else self.mean_rtt
             cand = np.flatnonzero(self.app_of == a)
             nodes = self.node_of[:, cand]                       # (T, C)
             T = len(self.node_of)
-            if self.imat.ndim == 3:
-                weight = self.imat[:, a, :][:, self.app_of]     # (T, R)
+            if imat.ndim == 3:
+                weight = imat[:, a, :][:, self.app_of]          # (T, R)
             else:
-                weight = np.broadcast_to(self.imat[a][self.app_of],
+                weight = np.broadcast_to(imat[a][self.app_of],
                                          self.node_of.shape)
             trial = np.arange(T)
             prep = _AppPrep(
@@ -203,17 +260,17 @@ class _Cluster:
                 cand_flat=(trial[:, None] * self.cfg.n_nodes
                            + nodes).ravel(),
                 weight=weight,
-                speed=1.0 + self.accel[trial[:, None], nodes],
+                speed=1.0 + accel[trial[:, None], nodes],
                 z_pred=np.ascontiguousarray(self.z_pred[:, :, cand]),
-                log_rbar=float(np.log(self.mean_rtt[a])))
-            self._prep[a] = prep
+                log_rbar=float(np.log(mean_rtt[a])))
+            self._prep[key] = prep
         return prep
 
     def rtt_draw(self, j: int, a: int, busy_until: np.ndarray,
                  now: float) -> np.ndarray:
         """True RTT per candidate under the given occupancy snapshot
         (log-normal with co-location interference, Eqs. 10-11)."""
-        p = self.app_prep(a)
+        p = self.app_prep(a, self.in_drift(now))
         busy = busy_until > now                                  # (T, R)
         # interference on a candidate = sum of weights of busy replicas
         # sharing its node.  Bucket busy weights per (trial, node) with
@@ -237,7 +294,7 @@ class _Cluster:
         elementwise in the candidate axis, so values are bit-identical
         to ``rtt_draw(...)[trial, picks]`` — the fast path for policies
         that never read the full RTT/prediction matrix."""
-        p = self.app_prep(a)
+        p = self.app_prep(a, self.in_drift(now))
         busy = busy_until > now
         g = np.bincount(self._flat_nodes, weights=(busy * p.weight).ravel(),
                         minlength=self._tn)
@@ -256,18 +313,9 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
     T = cfg.n_trials
     A = len(cfg.apps)
     R = A * cfg.n_replicas_per_app
-    imat = _interference_matrix(cfg.apps, cfg.interference_strength, rng)
-    if cfg.interference_profile == "hotspot":
-        # one heavy interferer (the paper's MotionCor2-style app): its
-        # row AND column amplified, so co-locating with it — or running
-        # it next to anything busy — dominates the noise
-        h = min(1, A - 1)
-        imat = imat.copy()
-        imat[h, :] *= 3.0
-        imat[:, h] *= 3.0
-    elif cfg.interference_profile != "uniform":
-        raise ValueError(
-            f"unknown interference_profile {cfg.interference_profile!r}")
+    imat = _apply_interference_profile(
+        _interference_matrix(cfg.apps, cfg.interference_strength, rng),
+        cfg.interference_profile, A)
     # per-trial random placement (isolate policy effect, as in the paper)
     node_of = rng.integers(0, cfg.n_nodes, size=(T, R))
     accel = np.clip(rng.normal(0.0, cfg.heterogeneity, size=(T, cfg.n_nodes)),
@@ -294,15 +342,35 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
     if cfg.churn is not None:
         failed_node = np.random.default_rng(cfg.seed + 3).integers(
             0, cfg.n_nodes, size=T)
+    mean_rtt = np.array([APPS[a][0] for a in cfg.apps])
+    # post-drift regime: redrawn interference mix, reshuffled node
+    # speeds, rescaled app means — all from drift-salted generators so
+    # the pre-drift draws (and every non-drift config) stay untouched
+    imat_post = accel_post = mean_rtt_post = None
+    if cfg.t_drift is not None:
+        drift_rng = np.random.default_rng((31, cfg.seed))
+        if cfg.drift_interference is not None:
+            imat_post = _apply_interference_profile(
+                _interference_matrix(cfg.apps, cfg.drift_interference,
+                                     drift_rng),
+                cfg.interference_profile, A)
+        if cfg.drift_tier_shuffle:
+            perm = np.argsort(drift_rng.random((T, cfg.n_nodes)), axis=1)
+            accel_post = np.take_along_axis(accel, perm, axis=1)
+        if cfg.drift_rtt_factor is not None:
+            factor = np.broadcast_to(
+                np.asarray(cfg.drift_rtt_factor, float), (A,))
+            mean_rtt_post = mean_rtt * factor
     return _Cluster(
         cfg=cfg,
         app_of=np.repeat(np.arange(A), cfg.n_replicas_per_app),
-        mean_rtt=np.array([APPS[a][0] for a in cfg.apps]),
+        mean_rtt=mean_rtt,
         cpu_req=np.array([APPS[a][1] for a in cfg.apps]),
         mem_req=np.array([APPS[a][2] for a in cfg.apps]),
         imat=imat, node_of=node_of, accel=accel,
         req_app=req_app, req_t=req_t, z_rtt=z_rtt, z_pred=z_pred,
-        failed_node=failed_node)
+        failed_node=failed_node, imat_post=imat_post,
+        accel_post=accel_post, mean_rtt_post=mean_rtt_post)
 
 
 class _Metrics:
@@ -338,7 +406,10 @@ class _Metrics:
                 "per_app": per_app,
                 "cpu_s": self.cpu_s, "mem_s": self.mem_s,
                 "chosen": self.chosen, "n_hedged": self.n_hedged,
-                "hedged_per_trial": self.hedged}
+                "hedged_per_trial": self.hedged,
+                # raw per-request views (windowed analyses, e.g. the
+                # post-drift recovery metric in benchmarks/bench_online)
+                "rtts": self.rtts, "req_t": cluster.req_t}
 
 
 class SimStepper:
@@ -364,10 +435,24 @@ class SimStepper:
         # reactive policies never read predicted/actual: skip building
         # the full per-candidate RTT matrix and draw only the pick
         self.reactive = not self.hedging and not policy.requires
+        # only prediction-consuming policies pay for the predicted
+        # matrix (the oracle reads state.actual, never state.predicted)
+        self.needs_pred = self.hedging or "predicted" in policy.requires
         T = cfg.n_trials
         self.trial = np.arange(T)
         self.busy_until = np.zeros((T, len(cluster.app_of)))
         self.metrics = _Metrics(cfg)
+        # closed-loop mode: per-(trial, app) online predictors trained
+        # on the RTTs this run observes (DESIGN.md §11)
+        self.fleet = None
+        if cfg.closed_loop and self.needs_pred:
+            self.fleet = OnlineFleet(
+                cluster.node_of, cluster.app_of, cfg.n_nodes,
+                len(cfg.apps), cluster.mean_rtt,
+                warmup_s=cfg.online_warmup_s,
+                retrain_every_s=cfg.retrain_every_s,
+                window=cfg.online_window,
+                accuracy_window=cfg.accuracy_window)
         # stale-prediction state: the predictor's occupancy snapshot
         # refreshes on the plane's periodic-collection cadence (shared
         # PeriodicRefresh), not per request; an outage freezes it for
@@ -404,21 +489,42 @@ class SimStepper:
             rtt = cluster.rtt_draw_at(j, a, busy_until, now, picks)
         else:
             actual = cluster.rtt_draw(j, a, busy_until, now)
-            # predicted RTT: Eq. 12 with eps = (1 - p) * actual, computed
-            # on the (possibly stale) occupancy snapshot the predictor
-            # last saw.  Before cold_start_s no predictor has trained
-            # yet: the basis is the bare app-mean RTT (no occupancy /
-            # node-speed signal).
-            if now < cfg.cold_start_s:
-                pred_basis = np.broadcast_to(
-                    cluster.mean_rtt[a], actual.shape).copy()
-            elif self.snapshot is not None:
-                stale_busy = self.snapshot.get(now, busy_until.copy)
-                pred_basis = cluster.rtt_draw(j, a, stale_busy, now)
-            else:
-                pred_basis = actual
-            eps = (1.0 - cfg.accuracy) * pred_basis
-            predicted = pred_basis + eps * prep.z_pred[:, j, :]
+            predicted = fleet_X = fleet_pred = None
+            if self.fleet is not None:
+                # closed loop: the fleet folds completed observations,
+                # retrains on its cadence, and scores the same (stale,
+                # outage-frozen) occupancy snapshot the Eq. 12 path
+                # would have used (DESIGN.md §11)
+                self.fleet.fold_pending(now)
+                self.fleet.maybe_retrain(now)
+                stale_busy = busy_until
+                if self.snapshot is not None:
+                    stale_busy = self.snapshot.get(now, busy_until.copy)
+                fleet_X = self.fleet.features(a, candidates, stale_busy,
+                                              now)
+                fleet_pred = self.fleet.predict(a, fleet_X)
+                predicted = fleet_pred
+                if cfg.fallback_threshold > 0:
+                    # non-viable trials fall back to least_conn: zeroing
+                    # the prediction leaves score = queue wait exactly
+                    ok = self.fleet.viable(a, cfg.fallback_threshold)
+                    predicted = np.where(ok[:, None], fleet_pred, 0.0)
+            elif self.needs_pred:
+                # predicted RTT: Eq. 12 with eps = (1 - p) * actual,
+                # computed on the (possibly stale) occupancy snapshot the
+                # predictor last saw.  Before cold_start_s no predictor
+                # has trained yet: the basis is the bare app-mean RTT
+                # (no occupancy / node-speed signal).
+                if now < cfg.cold_start_s:
+                    pred_basis = np.broadcast_to(
+                        cluster.mean_rtt[a], actual.shape).copy()
+                elif self.snapshot is not None:
+                    stale_busy = self.snapshot.get(now, busy_until.copy)
+                    pred_basis = cluster.rtt_draw(j, a, stale_busy, now)
+                else:
+                    pred_basis = actual
+                eps = (1.0 - cfg.accuracy) * pred_basis
+                predicted = pred_basis + eps * prep.z_pred[:, j, :]
 
             state = ClusterState(now=now,
                                  busy_until=busy_until[:, candidates],
@@ -432,6 +538,11 @@ class SimStepper:
             rep = candidates[picks]
             rtt = actual[trial, picks]
         finish = np.maximum(now, busy_until[trial, rep]) + rtt
+        if self.fleet is not None:
+            # the routed request is the training signal: picked
+            # candidate's features, its true RTT, and when it completes
+            self.fleet.observe(a, fleet_X[trial, picks], rtt, finish,
+                               fleet_pred[trial, picks])
         cpu = cluster.cpu_req[a] * rtt
         mem = cluster.mem_req[a] * rtt
 
@@ -458,7 +569,11 @@ class SimStepper:
     def run(self) -> Dict[str, np.ndarray]:
         for j in range(self.cfg.n_requests):
             self.step(j)
-        return self.metrics.summary(self.cluster)
+        summary = self.metrics.summary(self.cluster)
+        if self.fleet is not None:
+            self.fleet.fold_pending(np.inf)   # everything has completed
+            summary["online"] = self.fleet.stats()
+        return summary
 
 
 def run_sim(cfg: SimConfig, policy: str = "perf_aware"):

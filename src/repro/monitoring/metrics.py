@@ -166,35 +166,55 @@ class MetricsStore:
         return min(max(1, int(round(window_s / SCRAPE_INTERVAL))),
                    self.capacity)
 
-    def query_windows(self, requests: Sequence[Tuple[Sequence[str], float]],
-                      fast: bool = False):
-        """Batched range query: many (names, window_s) requests at once.
+    def query_windows(self, requests: Sequence[Tuple], fast: bool = False):
+        """Batched range query: many ``(names, window_s[, end_t])``
+        requests at once.
 
         Gathers every requested (row, column) sample in ONE fancy-indexing
         pass over the columnar ring (wraparound included, pre-history
         zero-padded) and accounts the modeled retrieval delay for the whole
         batch as a single range query (``RetrievalModel.delay_batch``: the
-        fixed round trip amortized across the batch).
+        fixed round trip amortized across the batch).  The per-sample cost
+        is charged on the CLIPPED point count — a window longer than the
+        ring's capacity can only ever return ``capacity`` samples, so the
+        model must not bill for samples the gather never serves.
+
+        An optional third element ``end_t`` ends the window at that
+        historical timestamp instead of the write head (the retraining
+        path gathers the pre-submission window of a long-completed task).
+        Samples already overwritten by the ring are zero-padded, exactly
+        like pre-history; ``end_t`` beyond the head clips to the head.
 
         Returns ``(arrays, delays)``: one (k, w_points) float32 array and
         one modeled-delay float per request.
         """
         flat_rows: List[np.ndarray] = []
         flat_cols: List[np.ndarray] = []
-        shapes: List[Tuple[int, int, int]] = []   # (k, w_points, avail)
-        masks: List[np.ndarray] = []              # valid-row masks
-        for names, window_s in requests:
+        shapes: List[Tuple[int, int, int, int]] = []  # (k, w_pts, avail, off)
+        masks: List[np.ndarray] = []                  # valid-row masks
+        for req in requests:
+            names, window_s = req[0], req[1]
+            end_t = req[2] if len(req) > 2 else None
             w_points = self._w_points(window_s)
-            avail = min(w_points, self._head)     # zero-pad pre-history
+            if end_t is None:
+                end = self._head
+            else:
+                shift = int(round((self._t_head - end_t) / SCRAPE_INTERVAL))
+                end = self._head - max(shift, 0)
+            start = end - w_points
+            # samples before the ring's oldest survivor (or before any
+            # history at all) are zero-padded
+            lo = max(start, self._head - self.capacity, 0)
+            hi = max(end, lo)
+            avail = hi - lo
             rows = np.array([self._index.get(n, -1) for n in names], np.int64)
             masks.append(rows >= 0)
             if avail > 0:
-                cols = np.arange(self._head - avail, self._head) \
-                    % self.capacity
+                cols = np.arange(lo, hi) % self.capacity
                 flat_rows.append(
                     np.repeat(np.where(rows >= 0, rows, 0), avail))
                 flat_cols.append(np.tile(cols, len(names)))
-            shapes.append((len(names), w_points, avail))
+            shapes.append((len(names), w_points, avail, lo - start))
         out: List[np.ndarray] = []
         if flat_rows:
             gathered = self._data[np.concatenate(flat_rows),
@@ -202,18 +222,21 @@ class MetricsStore:
         else:
             gathered = np.zeros(0, np.float32)
         off = 0
-        for (k, w_points, avail), mask in zip(shapes, masks):
+        for (k, w_points, avail, pos), mask in zip(shapes, masks):
             arr = np.zeros((k, w_points), np.float32)
             if avail > 0:
                 block = gathered[off:off + k * avail].reshape(k, avail)
-                arr[:, w_points - avail:] = np.where(mask[:, None], block, 0.0)
+                arr[:, pos:pos + avail] = np.where(mask[:, None], block, 0.0)
                 off += k * avail
             out.append(arr)
         if fast:
             delays = np.zeros(len(out))
         else:
+            # clipped point counts: w_points (not the raw window) is what
+            # the gather actually returns per series
             delays = self.retrieval.delay_batch(
-                [s[0] for s in shapes], [w for _, w in requests])
+                [s[0] for s in shapes],
+                [s[1] * SCRAPE_INTERVAL for s in shapes])
         total = float(delays.sum())
         self.query_time_spent += total
         if total:
@@ -222,7 +245,8 @@ class MetricsStore:
 
     def query_window(self, names: Sequence[str], window_s: float,
                      end_t: Optional[float] = None, fast: bool = False):
-        """Return (k, w_points) array for the window ending at end_t.
+        """Return (k, w_points) array for the window ending at end_t
+        (default: the write head).
 
         fast=False models the Prometheus range-query latency (added to the
         sim clock and accounted in query_time_spent); fast=True is the
@@ -231,5 +255,6 @@ class MetricsStore:
         of one through :meth:`query_windows` (identical modeled delay to
         the pre-columnar per-name path).
         """
-        arrays, delays = self.query_windows([(names, window_s)], fast=fast)
+        arrays, delays = self.query_windows([(names, window_s, end_t)],
+                                            fast=fast)
         return arrays[0], float(delays[0])

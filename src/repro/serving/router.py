@@ -16,15 +16,24 @@ models each replica's queue wait as ``pending waves x predicted wave
 RTT``.  Prediction-guided hedging doubles as straggler mitigation: when
 ``hedge_factor`` is set the policy may also queue the request on the
 runner-up replica (see ``PerfAware.hedge_candidates``).
+
+The router shares the online adaptation plane's viability rule
+(DESIGN.md §11): every routed prediction is reconciled against the
+request's measured RTT at ``drain`` time through the same
+:class:`~repro.core.online.RollingAccuracy` tracker the closed-loop
+simulator uses, and when the fleet's rolling accuracy drops below
+``fallback_threshold`` the router serves requests via ``least_conn``
+until retraining (e.g. an ``OnlineAdapter`` hot-swap) restores it.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
 from repro.core.knowledge import KnowledgeBase
+from repro.core.online import RollingAccuracy
 from repro.core.prediction_plane import PredictionPlane
 from repro.serving.engine import Request, ServingEngine
 
@@ -34,7 +43,9 @@ class MorpheusRouter:
                  kb: Optional[KnowledgeBase] = None,
                  predictors: Optional[dict] = None,
                  plane: Optional[PredictionPlane] = None,
-                 hedge_factor: Optional[float] = None, seed: int = 0):
+                 hedge_factor: Optional[float] = None, seed: int = 0,
+                 fallback_threshold: float = 0.0,
+                 accuracy_window: int = 40):
         self.replicas = list(replicas)
         self.policy_name = policy
         self.policy = make_policy(policy, seed=seed, hedge_factor=hedge_factor)
@@ -45,6 +56,14 @@ class MorpheusRouter:
         self.routed: List[int] = []
         self.hedged: List[int] = []
         self._hedge_pairs: List[tuple] = []   # (primary, duplicate) requests
+        # per-replica rolling prediction accuracy (the same tracker the
+        # closed-loop simulator's OnlineFleet uses) + the fallback policy
+        # served while predictions are non-viable
+        self.fallback_threshold = float(fallback_threshold)
+        self.accuracy = RollingAccuracy(accuracy_window, n=len(self.replicas))
+        self.fallbacks = 0                    # requests routed via fallback
+        self._fallback_policy = make_policy("least_conn", seed=seed)
+        self._inflight: List[Tuple[Request, int, float]] = []
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
@@ -90,7 +109,20 @@ class MorpheusRouter:
     def _queue_proxy(self) -> np.ndarray:
         return np.array([r.pending() for r in self.replicas], float)
 
-    def cluster_state(self) -> ClusterState:
+    def predictions_viable(self) -> bool:
+        """The fallback rule (DESIGN.md §11): serve perf_aware only while
+        the mean rolling accuracy of the replicas with enough evidence
+        stays at or above ``fallback_threshold``."""
+        if self.fallback_threshold <= 0:
+            return True
+        tracked = self.accuracy.count >= self.accuracy.min_count
+        if not tracked.any():
+            return True            # no evidence of non-viability yet
+        return float(self.accuracy.accuracy()[tracked].mean()) \
+            >= self.fallback_threshold
+
+    def cluster_state(self, needs_pred: Optional[bool] = None
+                      ) -> ClusterState:
         """The router's observable state as a 1-trial ClusterState.
 
         Queue wait is estimated as pending waves x predicted wave RTT
@@ -99,7 +131,9 @@ class MorpheusRouter:
         queue = self._queue_proxy()
         predicted = None
         wait_est = np.zeros(len(self.replicas))
-        if isinstance(self.policy, PerfAware):
+        if needs_pred is None:
+            needs_pred = isinstance(self.policy, PerfAware)
+        if needs_pred:
             predicted = self._predicted_rtts()
             waves = np.ceil(queue
                             / np.array([r.max_batch for r in self.replicas]))
@@ -110,12 +144,32 @@ class MorpheusRouter:
                             else predicted[None, :])
 
     def route(self, req: Request) -> int:
-        state = self.cluster_state()
-        i = int(self.policy.pick(state)[0])
+        use_pred = isinstance(self.policy, PerfAware)
+        fell_back = use_pred and not self.predictions_viable()
+        # predictions are still computed and reconciled while fallen
+        # back — otherwise the tracker would never see a retrained
+        # fleet recover and the fallback would be permanent
+        state = self.cluster_state(needs_pred=use_pred)
+        if fell_back:
+            self.fallbacks += 1
+            reactive = ClusterState(
+                now=0.0, busy_until=np.zeros((1, len(self.replicas))),
+                queue_depth=self._queue_proxy()[None, :])
+            i = int(self._fallback_policy.pick(reactive)[0])
+        else:
+            i = int(self.policy.pick(state)[0])
         self.replicas[i].submit(req)
         self.routed.append(i)
-        if self.hedge_factor is not None and \
-                isinstance(self.policy, PerfAware) and state.predicted is not None:
+        if use_pred and state.predicted is not None \
+                and np.isfinite(state.predicted[0, i]):
+            # predicted COMPLETION (queue-wait estimate + service RTT):
+            # drain() reconciles it against the measured enqueue->done
+            # latency, which includes the queue wait too
+            self._inflight.append(
+                (req, i,
+                 float(state.predicted[0, i] + state.busy_until[0, i])))
+        if self.hedge_factor is not None and use_pred and not fell_back \
+                and state.predicted is not None:
             second, mask = self.policy.hedge_plan(state, np.array([i]))
             if bool(mask[0]):
                 # submit a DUPLICATE object, not the same request: both
@@ -135,7 +189,11 @@ class MorpheusRouter:
 
         Hedged duplicates are reconciled here: the primary request takes
         the earlier of the two completions and the duplicate is dropped
-        from the finished list (each routed request appears once)."""
+        from the finished list (each routed request appears once).
+        Completed requests also settle the rolling accuracy tracker:
+        each routed prediction is compared against the measured RTT, so
+        the fallback rule sees prediction quality as it actually
+        happened."""
         finished: List[Request] = []
         progress = True
         while progress:
@@ -153,4 +211,16 @@ class MorpheusRouter:
                 primary.output = dup.output
         finished = [r for r in finished if id(r) not in dup_ids]
         self._hedge_pairs.clear()
+        still_inflight = []
+        for req, i, pred in self._inflight:
+            rtt = req.rtt
+            if rtt is None:
+                still_inflight.append((req, i, pred))
+                continue
+            err = np.zeros(len(self.replicas))
+            mask = np.zeros(len(self.replicas), bool)
+            err[i] = abs(pred - rtt) / max(rtt, 1e-9)
+            mask[i] = True
+            self.accuracy.update(err, mask)
+        self._inflight = still_inflight
         return finished

@@ -35,6 +35,26 @@ def test_batched_matches_serial_per_scenario(name):
             rtol=1e-5, atol=1e-7)
 
 
+@pytest.mark.parametrize("name", ("tier-drift", "app-drift",
+                                  "colocation-drift", "drift-fallback"))
+def test_drift_crossing_batched_matches_serial(name):
+    """The registry-wide parity test above runs the drift scenarios too,
+    but its shrunken horizon ends before t_drift.  This one compresses
+    the timeline so warmup, several retrains, AND the drift transition
+    all happen inside the run — the online fleet's batched per-trial
+    ridge retraining must still match per-seed serial runs exactly."""
+    kw = dict(seeds=(0, 1, 2), n_trials=3, n_requests=80,
+              arrival_rate=2.0, online_warmup_s=8.0, retrain_every_s=6.0,
+              t_drift=20.0)
+    batched = run_scenario(name, **kw)
+    serial = run_campaign_serial([name], **kw)[name]
+    for pol in batched:
+        for k in STATS:
+            np.testing.assert_allclose(
+                batched[pol].per_seed[k], serial[pol].per_seed[k],
+                rtol=1e-5, atol=1e-7, err_msg=f"{name}/{pol}/{k}")
+
+
 def test_hedged_policy_parity():
     """Hedging is stateful across the busy matrix — make sure the
     stacked pass still matches per-seed serial runs."""

@@ -98,3 +98,74 @@ def test_late_registration_grows_columnar_array_with_zero_history():
     st.scrape({"a": 2.0, "c": 9.0})     # c registered mid-stream
     arr, _ = st.query_window(["c"], 0.4, fast=True)
     np.testing.assert_array_equal(arr, [[0.0, 9.0]])
+
+
+# ---------------------------------------------------------------------------
+# historical-end gathers (end_t): the parameter query_window documented
+# but silently ignored before the online-adaptation PR — retraining
+# gathers the pre-submission window of long-completed tasks
+# ---------------------------------------------------------------------------
+def test_query_window_honors_historical_end_t():
+    st = _filled_store(n_scrapes=15, capacity_s=4.0)   # t in [0, 2.8]
+    # window of 1 s (5 points) ending at t=2.0 -> samples 6..10
+    arr, _ = st.query_window(["a"], 1.0, end_t=2.0, fast=True)
+    np.testing.assert_array_equal(arr[0], np.arange(6, 11, dtype=np.float32))
+    # end_t beyond the head clips to the head
+    arr, _ = st.query_window(["a"], 1.0, end_t=99.0, fast=True)
+    head, _ = st.query_window(["a"], 1.0, fast=True)
+    np.testing.assert_array_equal(arr, head)
+
+
+def test_query_window_end_t_spanning_wrap_point():
+    # capacity 20, 33 scrapes: live range is samples 13..32 (t 2.6..6.4)
+    st = _filled_store(n_scrapes=33, capacity_s=4.0)
+    # 1 s window (5 points) ending at t=4.0 -> samples 16..20, which
+    # straddle the physical wrap between buffer slots 19 and 0
+    arr, _ = st.query_window(["a", "b"], 1.0, end_t=4.0, fast=True)
+    np.testing.assert_array_equal(arr[0], np.arange(16, 21, dtype=np.float32))
+    np.testing.assert_array_equal(arr[1],
+                                  np.arange(1016, 1021, dtype=np.float32))
+
+
+def test_query_window_end_t_past_ring_is_zero_padded():
+    st = _filled_store(n_scrapes=33, capacity_s=4.0)
+    # ending at t=3.0 (sample 15): samples 10..14 predate the oldest ring
+    # survivor (13) -> first two positions zero-padded, rest served
+    arr, _ = st.query_window(["a"], 1.0, end_t=3.0, fast=True)
+    np.testing.assert_array_equal(arr[0], [0.0, 0.0, 13.0, 14.0, 15.0])
+    # a window entirely before recorded history is all zeros
+    arr, _ = st.query_window(["a"], 1.0, end_t=-10.0, fast=True)
+    np.testing.assert_array_equal(arr, np.zeros((1, 5), np.float32))
+
+
+def test_query_windows_mixes_live_and_historical_requests():
+    st = _filled_store(n_scrapes=40, capacity_s=4.0)
+    batched, _ = st.query_windows(
+        [(["a"], 1.0), (["a"], 1.0, 5.0), (["b"], 2.0, 6.0)], fast=True)
+    live, _ = st.query_window(["a"], 1.0, fast=True)
+    np.testing.assert_array_equal(batched[0], live)
+    np.testing.assert_array_equal(batched[1][0],
+                                  np.arange(21, 26, dtype=np.float32))
+    np.testing.assert_array_equal(batched[2][0],
+                                  np.arange(1021, 1031, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# clipped delay accounting: the modeled retrieval cost must bill the
+# points the gather can actually return, not the raw requested window
+# ---------------------------------------------------------------------------
+def test_delay_charged_on_capacity_clipped_points():
+    st = _filled_store(n_scrapes=10, capacity_s=4.0)    # capacity 20 pts
+    # a 60 s window can only ever return 4 s of ring: delay must equal
+    # the 4 s-window model, not bill 300 phantom samples
+    _, d = st.query_window(["a", "b"], 60.0)
+    assert abs(d - st.retrieval.delay(2, 4.0)) < 1e-12
+    assert d < st.retrieval.delay(2, 60.0)
+
+
+def test_batched_delay_uses_clipped_windows_per_request():
+    st = _filled_store(n_scrapes=10, capacity_s=4.0)
+    st.query_time_spent = 0.0
+    st.query_windows([(["a"], 2.0), (["a", "b"], 100.0)])
+    expect = st.retrieval.delay_batch([1, 2], [2.0, 4.0]).sum()
+    assert abs(st.query_time_spent - expect) < 1e-12

@@ -14,7 +14,10 @@ from repro.monitoring.metrics import PeriodicRefresh
 
 REQUIRED = ("baseline", "colocation-surge", "hetero-tiers", "diurnal",
             "flash-crowd", "churn", "stale-predictions", "cold-start",
-            "metric-outage", "mixed-app-fleet")
+            "metric-outage", "mixed-app-fleet",
+            # closed-loop drift scenarios (DESIGN.md §11)
+            "tier-drift", "app-drift", "colocation-drift",
+            "drift-fallback")
 
 
 # ---------------------------------------------------------------------------
@@ -56,6 +59,15 @@ def test_spec_validation():
         get_scenario("nonesuch")
     with pytest.raises(FrozenInstanceError):
         get_scenario("baseline").accuracy = 0.0
+
+
+def test_spec_validation_drift_knobs():
+    with pytest.raises(ValueError, match="without t_drift"):
+        ScenarioSpec(name="bad", drift_tier_shuffle=True)
+    with pytest.raises(ValueError, match="no drift knob"):
+        ScenarioSpec(name="bad", t_drift=30.0)
+    with pytest.raises(ValueError, match="drift_rtt_factor"):
+        ScenarioSpec(name="bad", t_drift=30.0, drift_rtt_factor=(1.0, 2.0))
 
 
 def test_same_spec_and_seed_is_bit_identical():
@@ -149,6 +161,35 @@ def test_outage_scenario_differs_from_plain_staleness():
     plain = SimConfig(**{**out.__dict__, "outage": None})
     ro, rp = run_sim(out, "perf_aware"), run_sim(plain, "perf_aware")
     assert not np.array_equal(ro["chosen"], rp["chosen"])
+
+
+def test_drift_knobs_build_post_regime_arrays():
+    from repro.core.simulator import SimConfig as SC
+    cfg = get_scenario("colocation-drift").compile(seed=0, n_trials=6)
+    cl = _build_cluster(cfg)
+    assert cl.imat_post is not None and cl.imat_post.shape == cl.imat.shape
+    assert not np.array_equal(cl.imat_post, cl.imat)
+    # tier shuffle permutes each trial's speeds (same multiset)
+    np.testing.assert_allclose(np.sort(cl.accel_post, axis=1),
+                               np.sort(cl.accel, axis=1))
+    assert not np.array_equal(cl.accel_post, cl.accel)
+    np.testing.assert_allclose(
+        cl.mean_rtt_post,
+        cl.mean_rtt * np.asarray(cfg.drift_rtt_factor))
+    # non-drift scenarios build no post regime
+    plain = _build_cluster(get_scenario("baseline").compile(seed=0))
+    assert plain.imat_post is None and plain.accel_post is None
+
+
+def test_drift_scenarios_run_closed_loop():
+    for name in ("tier-drift", "app-drift", "colocation-drift",
+                 "drift-fallback"):
+        spec = get_scenario(name)
+        assert spec.closed_loop and spec.t_drift is not None
+        cfg = spec.compile(seed=1, n_trials=2, n_requests=30)
+        res = run_sim(cfg, "perf_aware")
+        assert "online" in res           # fleet telemetry surfaced
+        assert np.isfinite(res["mean_rtt"]).all(), name
 
 
 def test_prediction_plane_outage_hook():

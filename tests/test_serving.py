@@ -111,6 +111,96 @@ def test_router_falls_back_without_trained_predictors(tiny_setup):
     assert rtts[1] == 1.0 + reps[1].pending()  # queue-depth proxy
 
 
+def test_router_keyed_sweep_honors_outage_window(tiny_setup):
+    """Regression (ISSUE 4): ``predict_all`` applied outage caching only
+    to full-fleet calls, so the router's keyed sweep re-queried the
+    store straight through an ``add_outage`` window.  Subset calls must
+    now serve the frozen snapshot too."""
+    cfg, params = tiny_setup
+    store = make_store()
+    clock = store.clock
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(3)]
+    preds = {f"n{i}": make_trained_predictor("serve", store, "lr",
+                                             seed=900 + i, node=f"n{i}")
+             for i in range(3)}
+    router = MorpheusRouter(reps, policy="perf_aware", predictors=preds)
+    now = clock.now()
+    router.plane.add_outage(now + 5.0, now + 500.0)
+    before = router._predicted_rtts()
+    d0 = router.plane.dispatches
+    clock.advance(10.0)                      # inside the outage window
+    rng = np.random.default_rng(0)
+    for _ in range(20):                      # the source keeps changing...
+        store.scrape({n: float(v) * 100.0 for n, v in
+                      zip(store.names, rng.standard_normal(10))})
+    during = router._predicted_rtts()
+    assert router.plane.dispatches == d0     # ...but no re-query happens
+    np.testing.assert_array_equal(during, before)
+    clock.advance(600.0)                     # outage over: fresh compute
+    after = router._predicted_rtts()
+    assert router.plane.dispatches > d0
+    assert not np.array_equal(after, before)
+
+
+def test_router_falls_back_to_least_conn_below_viability(tiny_setup):
+    """The DESIGN.md §11 fallback rule: once the rolling accuracy of the
+    routed predictions drops below the threshold, requests are PICKED by
+    least_conn — but predictions keep being computed and reconciled, so
+    a retrained fleet can win the route back."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(2)]
+    router = MorpheusRouter(reps, policy="perf_aware",
+                            fallback_threshold=0.6)
+    router.kb.put("serve", "n0", 0.0, 0.1)
+    router.kb.put("serve", "n1", 0.0, 5.0)
+    rng = np.random.default_rng(4)
+    assert router.predictions_viable()
+    router.route(Request(rid=0, tokens=rng.integers(0, 100, size=8)))
+    assert router.fallbacks == 0
+    # accuracy collapses (e.g. the workload drifted under the fleet)
+    for _ in range(router.accuracy.min_count):
+        router.accuracy.update(np.array([0.9, 0.9]))
+    assert not router.predictions_viable()
+    before = len(router.routed)
+    inflight_before = len(router._inflight)
+    router.route(Request(rid=1, tokens=rng.integers(0, 100, size=8)))
+    assert router.fallbacks == 1
+    assert len(router.routed) == before + 1
+    # still tracking predictions while fallen back: the tracker can see
+    # a hot-swapped fleet recover, so the fallback is not permanent
+    assert len(router._inflight) == inflight_before + 1
+    good = np.zeros(2)
+    for _ in range(router.accuracy.window):
+        router.accuracy.update(good)
+    assert router.predictions_viable()         # the route is won back
+    router.route(Request(rid=2, tokens=rng.integers(0, 100, size=8)))
+    assert router.fallbacks == 1               # no new fallback
+
+
+def test_router_drain_settles_accuracy_tracker(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock, slowdown=0.01)
+            for i in range(2)]
+    store = make_store()
+    preds = {f"n{i}": make_trained_predictor("serve", store, "lr",
+                                             seed=950 + i, node=f"n{i}")
+             for i in range(2)}
+    router = MorpheusRouter(reps, policy="perf_aware", predictors=preds)
+    rng = np.random.default_rng(5)
+    for r in _reqs(4, rng):
+        router.route(r)
+    assert len(router._inflight) == 4
+    assert router.accuracy.count.sum() == 0
+    router.drain()
+    assert len(router._inflight) == 0
+    assert router.accuracy.count.sum() == 4   # every completion settled
+
+
 def test_router_round_robin_spreads(tiny_setup):
     cfg, params = tiny_setup
     clock = SimClock()
