@@ -81,6 +81,9 @@ def _write_artifact(results, t_s, t_b, drift, seeds):
                 "inefficiency_std": r.inefficiency_std,
                 "p99_inefficiency_pct": r.p99_inefficiency_pct,
                 "resource_waste_pct": r.resource_waste_pct,
+                "waste": r.stat("waste"),
+                "shed_rate": r.stat("shed_rate"),
+                "slo_violation_s": r.stat("slo_violation_s"),
             } for pol, r in cell.items() if pol != "oracle"}
             for scen, cell in results.items()},
     }

@@ -1,0 +1,185 @@
+"""Capacity plane: predictive vs reactive autoscaling under overload
+(DESIGN.md §12).
+
+For every registered capacity scenario the elastic simulator runs three
+autoscaler variants over the same stacked multi-seed cluster grid:
+
+* **predictive** — Little's-law provisioning from the fleet's RTT
+  forecast (trailing demand x predicted service time / rho_target);
+  jumps straight to the required replica count.
+* **reactive**   — the classic threshold baseline: busy-fraction above
+  ``hi_util`` adds one replica, below ``lo_util`` removes one, with a
+  cooldown.  It can only crawl toward the right size.
+* **fixed**      — the full pool, always on: the best-possible RTT and
+  the worst-possible waste (the no-capacity-plane strawman).
+
+Each cell reports the (RTT, waste, shed) triple: nan-aware p95/mean RTT
+over served requests, ``waste`` = idle-provisioned replica-second
+fraction, ``shed_rate``, and ``slo_violation_s``.  The acceptance gate
+is **Pareto domination** on the overload scenarios (``overload-ramp``,
+``flash-crowd-autoscale``): the predictive autoscaler must achieve
+lower waste at equal-or-better p95, or better p95 at equal waste,
+versus the reactive baseline.  Writes
+experiments/artifacts/capacity.json (rendered into EXPERIMENTS.md
+§Capacity by experiments/generate_experiments.py).
+
+Run:  PYTHONPATH=src python benchmarks/bench_capacity.py \
+          [--seeds 12] [--smoke] [--no-artifact]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core.balancer import make_policy
+from repro.core.campaign import stack_clusters
+from repro.core.scenarios import get_scenario
+from repro.core.simulator import SimStepper, _build_cluster
+
+CAPACITY_SCENARIOS = ("overload-ramp", "flash-crowd-autoscale",
+                      "scale-to-zero-idle", "spot-preemption")
+#: the scenarios the Pareto gate is enforced on (ISSUE 5 acceptance)
+GATED = ("overload-ramp", "flash-crowd-autoscale")
+VARIANTS = ("predictive", "reactive", "fixed")
+#: slack on the "equal" side of the Pareto comparison
+PARETO_TOL = 0.02
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "artifacts", "capacity.json")
+
+
+def run_cell(name: str, autoscaler: str, seeds, policy: str = "perf_aware",
+             **overrides):
+    """One (scenario, autoscaler) cell over the stacked seed grid."""
+    spec = get_scenario(name)
+    cap = replace(spec.capacity, autoscaler=autoscaler)
+    if autoscaler == "fixed":
+        # the always-on baseline: the whole pool, no elasticity
+        cap = replace(cap, initial_replicas=spec.n_replicas_per_app)
+    cfgs = [spec.compile(seed=s, capacity=cap, **overrides) for s in seeds]
+    stacked = stack_clusters([_build_cluster(c) for c in cfgs])
+    pol = make_policy(policy, seed=cfgs[0].seed + 2,
+                      hedge_factor=cfgs[0].hedge_factor,
+                      seed_blocks=[(c.seed + 2, c.n_trials) for c in cfgs])
+    s = SimStepper(stacked, pol).run()
+    return {
+        "p95_rtt": float(np.nanmean(s["p95_rtt"])),
+        "mean_rtt": float(np.nanmean(s["mean_rtt"])),
+        "waste": float(s["waste"].mean()),
+        "shed_rate": float(s["shed_rate"].mean()),
+        "slo_violation_s": float(s["slo_violation_s"].mean()),
+        "provisioned_s": float(s["provisioned_s"].mean()),
+        "busy_s": float(s["busy_s"].mean()),
+        "routed_inactive": int(s["capacity"]["routed_inactive"]),
+        "scale_ups": float(s["capacity"]["scale_ups"].mean()),
+        "scale_downs": float(s["capacity"]["scale_downs"].mean()),
+    }
+
+
+def pareto_dominates(pred: dict, react: dict,
+                     tol: float = PARETO_TOL) -> bool:
+    """Lower waste at equal-or-better p95, or better p95 at equal waste
+    (ISSUE 5).  "Equal" carries ``tol`` relative slack; "better" must be
+    strict beyond it."""
+    p95_le = pred["p95_rtt"] <= react["p95_rtt"] * (1.0 + tol)
+    waste_le = pred["waste"] <= react["waste"] + tol
+    p95_lt = pred["p95_rtt"] < react["p95_rtt"] * (1.0 - tol)
+    waste_lt = pred["waste"] < react["waste"] - tol
+    return (p95_le and waste_lt) or (waste_le and p95_lt)
+
+
+def bench(scenarios, seeds, **overrides):
+    t0 = time.perf_counter()
+    results = {name: {v: run_cell(name, v, seeds, **overrides)
+                      for v in VARIANTS}
+               for name in scenarios}
+    return results, time.perf_counter() - t0
+
+
+def table(results) -> str:
+    rows = [("scenario", "autoscaler", "p95 s", "mean s", "waste",
+             "shed", "slo-viol s", "dominates")]
+    for name, cell in results.items():
+        dom = pareto_dominates(cell["predictive"], cell["reactive"])
+        for v in VARIANTS:
+            r = cell[v]
+            rows.append((name, v, f"{r['p95_rtt']:.2f}",
+                         f"{r['mean_rtt']:.2f}", f"{r['waste']:.3f}",
+                         f"{r['shed_rate']:.3f}",
+                         f"{r['slo_violation_s']:.1f}",
+                         ("yes" if dom else "NO")
+                         if v == "predictive" else ""))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return "\n".join("  ".join(c.ljust(w) for c, w in zip(r, widths))
+                     for r in rows)
+
+
+def _write_artifact(results, seeds, wall_s):
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {"seeds": list(seeds), "wall_s": wall_s,
+               "pareto_tol": PARETO_TOL, "gated": list(GATED),
+               "table": results,
+               "dominates": {name: pareto_dominates(cell["predictive"],
+                                                    cell["reactive"])
+                             for name, cell in results.items()}}
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {os.path.abspath(ARTIFACT)}")
+
+
+def run(seeds=tuple(range(12))):
+    """Harness contract (benchmarks/run.py): CSV rows per scenario."""
+    results, wall = bench(CAPACITY_SCENARIOS, tuple(seeds))
+    return [(f"capacity_{name}_{v}", cell[v]["p95_rtt"],
+             f"waste={cell[v]['waste']:.3f};"
+             f"shed={cell[v]['shed_rate']:.3f}")
+            for name, cell in results.items() for v in VARIANTS]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid + hard Pareto gate (CI)")
+    ap.add_argument("--no-artifact", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        # reduced grid: the two gated overload scenarios, fewer seeds
+        seeds, scenarios, overrides = tuple(range(6)), GATED, \
+            dict(n_trials=4)
+    else:
+        seeds, scenarios, overrides = tuple(range(args.seeds)), \
+            CAPACITY_SCENARIOS, {}
+    results, wall = bench(scenarios, seeds, **overrides)
+
+    print(f"capacity grid: {len(results)} scenarios x "
+          f"{{{', '.join(VARIANTS)}}} x {len(seeds)} seeds "
+          f"({wall:.1f}s, one stacked lockstep pass per cell)")
+    print(table(results))
+
+    if not args.smoke and not args.no_artifact:
+        _write_artifact(results, seeds, wall)
+
+    for name, cell in results.items():
+        assert cell["predictive"]["routed_inactive"] == 0 \
+            and cell["reactive"]["routed_inactive"] == 0, \
+            f"{name}: a request was routed to a drained replica"
+    for name in GATED:
+        if name not in results:
+            continue
+        p, r = results[name]["predictive"], results[name]["reactive"]
+        assert pareto_dominates(p, r), (
+            f"{name}: predictive (p95={p['p95_rtt']:.2f}, "
+            f"waste={p['waste']:.3f}) does not Pareto-dominate reactive "
+            f"(p95={r['p95_rtt']:.2f}, waste={r['waste']:.3f})")
+    print("\nOK: predictive Pareto-dominates the reactive threshold "
+          "baseline on " + ", ".join(n for n in GATED if n in results))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,10 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_adaptation, bench_binning, bench_breakdown,
-                            bench_campaign, bench_correlations,
-                            bench_covariability, bench_kernels,
-                            bench_load_balancing, bench_overhead,
+                            bench_campaign, bench_capacity,
+                            bench_correlations, bench_covariability,
+                            bench_kernels, bench_load_balancing,
+                            bench_online, bench_overhead,
                             bench_prediction_plane, bench_selection,
                             bench_state_scaling)
     from benchmarks import roofline
@@ -29,6 +30,8 @@ def main() -> None:
         ("plane", bench_prediction_plane.run),
         ("fig11", bench_load_balancing.run),
         ("campaign", bench_campaign.run),
+        ("online", bench_online.run),
+        ("capacity", bench_capacity.run),
         ("table5", bench_covariability.run),
         ("kernels", bench_kernels.run),
     ]

@@ -4,18 +4,23 @@ scenario engine support.
 
 Run:  PYTHONPATH=src python examples/lb_simulation.py [--trials 200]
       PYTHONPATH=src python examples/lb_simulation.py --campaign
+      PYTHONPATH=src python examples/lb_simulation.py --capacity
       PYTHONPATH=src python examples/lb_simulation.py --smoke
 --campaign runs the registered scenario x policy x seed grid through the
-batched campaign runner and prints its table.  --smoke runs every
+batched campaign runner and prints its table.  --capacity runs one
+overload scenario through the capacity plane (DESIGN.md §12) and prints
+the (RTT, waste, shed) triple per autoscaler.  --smoke runs every
 registered policy (plus scenario variants and a mini-campaign) on tiny
 configs — CI uses it to catch policy/simulator drift on every PR.
 """
 import argparse
 from dataclasses import replace
 
+import numpy as np
+
 from repro.core.balancer import POLICIES
 from repro.core.campaign import campaign_table, run_campaign
-from repro.core.scenarios import SCENARIOS
+from repro.core.scenarios import SCENARIOS, get_scenario
 from repro.core.simulator import (SimConfig, run_sim, sweep_accuracy,
                                   sweep_heterogeneity, sweep_replicas)
 
@@ -58,6 +63,27 @@ def campaign() -> None:
     print(campaign_table(results))
 
 
+def capacity(scenario: str = "overload-ramp") -> None:
+    """One overload scenario through the capacity plane: the (RTT,
+    waste, shed) triple per autoscaler variant (DESIGN.md §12)."""
+    spec = get_scenario(scenario)
+    print(f"== capacity plane: {scenario} "
+          f"(pool {spec.n_replicas_per_app}/app, "
+          f"SLO p95<={spec.capacity.slo_target_s:.0f}s) ==")
+    for kind in ("predictive", "reactive", "fixed"):
+        cap = replace(spec.capacity, autoscaler=kind)
+        if kind == "fixed":
+            cap = replace(cap, initial_replicas=spec.n_replicas_per_app)
+        res = run_sim(spec.compile(seed=0, capacity=cap), "perf_aware")
+        print(f"  {kind:10s} p95={np.nanmean(res['p95_rtt']):6.2f}s "
+              f"mean={np.nanmean(res['mean_rtt']):5.2f}s "
+              f"waste={res['waste'].mean():.3f} "
+              f"shed={res['shed_rate'].mean():.3f} "
+              f"slo_violation={res['slo_violation_s'].mean():6.1f}s")
+    print("  (predictive: lower waste at equal-or-better p95 than "
+          "reactive; fixed burns the pool for the best RTT)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=200)
@@ -65,12 +91,18 @@ def main():
                     help="fast every-policy sanity sweep (used by CI)")
     ap.add_argument("--campaign", action="store_true",
                     help="batched scenario x policy x seed campaign table")
+    ap.add_argument("--capacity", action="store_true",
+                    help="capacity plane on one overload scenario: the "
+                         "(RTT, waste, shed) triple per autoscaler")
     args = ap.parse_args()
     if args.smoke:
         smoke()
         return
     if args.campaign:
         campaign()
+        return
+    if args.capacity:
+        capacity()
         return
     base = SimConfig(n_trials=args.trials, n_requests=300)
 

@@ -64,9 +64,15 @@ class ClusterState:
     queue_depth: Optional[np.ndarray] = None  # (T, C) pending requests
     predicted: Optional[np.ndarray] = None    # (T, C) predicted RTT (s)
     actual: Optional[np.ndarray] = None       # (T, C) true RTT (oracle)
+    #: capacity-plane membership mask (DESIGN.md §12): False marks a
+    #: drained / preempted replica that must never be picked.  None (the
+    #: default) keeps the fixed-membership behaviour bit-identical.
+    active: Optional[np.ndarray] = None       # (T, C) routable candidates
 
     def __post_init__(self):
         self.busy_until = np.atleast_2d(np.asarray(self.busy_until, float))
+        if self.active is not None:
+            self.active = np.atleast_2d(np.asarray(self.active, bool))
         if self.queue_depth is None:
             # read-only zero view: skips a per-step (T, C) allocation on
             # the simulator's hot path
@@ -82,6 +88,14 @@ class ClusterState:
     def wait(self) -> np.ndarray:
         """Remaining queue wait per candidate, clamped at 0."""
         return np.maximum(self.busy_until - self.now, 0.0)
+
+    def mask_inactive(self, scores: np.ndarray) -> np.ndarray:
+        """Scores with drained candidates forced to +inf, so argmin can
+        only land on an inactive replica when a trial has none active
+        (the capacity plane's wake rule prevents that)."""
+        if self.active is None:
+            return scores
+        return np.where(self.active, scores, np.inf)
 
     def idle(self) -> np.ndarray:
         return self.busy_until <= self.now
@@ -118,8 +132,9 @@ class Policy:
         raise NotImplementedError
 
     def pick(self, state: ClusterState) -> np.ndarray:
-        """argmin over candidates per trial, then advance policy state."""
-        picks = np.argmin(self.score(state), axis=1)
+        """argmin over candidates per trial (drained candidates masked
+        out), then advance policy state."""
+        picks = np.argmin(state.mask_inactive(self.score(state)), axis=1)
         self.update(state, picks)
         return picks
 
@@ -246,15 +261,21 @@ class PerfAware(Policy):
             return second, mask
         sig = self.signal(state)
         completion = state.wait() + sig
-        # runner-up by score, excluding the pick
-        s = (self.score(state) if scores is None else scores).copy()
+        # runner-up by score, excluding the pick (and, under the
+        # capacity plane, any drained candidate)
+        s = state.mask_inactive(
+            self.score(state) if scores is None else scores).copy()
         s[trial, picks] = np.inf
         second = np.argmin(s, axis=1)
-        # best busy completion (inf when no replica is busy -> no hedge)
-        busy_completion = np.where(~state.idle(), completion, np.inf)
+        # best busy completion (inf when no replica is busy -> no hedge);
+        # a drained replica cannot take the duplicate NOR be waited on
+        busy_completion = state.mask_inactive(
+            np.where(~state.idle(), completion, np.inf))
         ref = busy_completion.min(axis=1)
         chosen_pred = sig[trial, picks]
         mask = chosen_pred > self.hedge_factor * ref
+        if state.active is not None:
+            mask &= state.active[trial, second]
         return second, mask
 
     def hedge_candidates(self, replicas: Sequence[Replica], now: float,

@@ -43,9 +43,11 @@ DEFAULT_POLICIES = ("perf_aware", "least_conn", "round_robin", "random")
 
 #: summary stats aggregated per seed (means over that seed's trials);
 #: also the stat set the bench parity gate compares, so batched/serial
-#: coverage can't drift from what the campaign aggregates
+#: coverage can't drift from what the campaign aggregates.  The
+#: capacity plane's (waste, shed, SLO) triple rides the same gate.
 SUMMARY_STATS = ("mean_rtt", "p50_rtt", "p95_rtt", "p99_rtt",
-                 "cpu_s", "mem_s")
+                 "cpu_s", "mem_s", "waste", "shed_rate",
+                 "slo_violation_s")
 
 
 def _resolve(scenario) -> ScenarioSpec:
@@ -92,6 +94,7 @@ def stack_clusters(clusters: Sequence[_Cluster]) -> _Cluster:
     # guarantees it matches across seeds
     imat_post = None if c0.imat_post is None else cat_imat("imat_post")
     accel_post = None if c0.accel_post is None else cat("accel_post")
+    preempted = None if c0.preempted_node is None else cat("preempted_node")
     return _Cluster(
         cfg=replace(c0.cfg, n_trials=sum(trials)),
         app_of=c0.app_of, mean_rtt=c0.mean_rtt,
@@ -100,7 +103,7 @@ def stack_clusters(clusters: Sequence[_Cluster]) -> _Cluster:
         req_app=c0.req_app, req_t=c0.req_t,
         z_rtt=cat("z_rtt"), z_pred=cat("z_pred"), failed_node=failed,
         imat_post=imat_post, accel_post=accel_post,
-        mean_rtt_post=c0.mean_rtt_post)
+        mean_rtt_post=c0.mean_rtt_post, preempted_node=preempted)
 
 
 @dataclass
@@ -250,9 +253,11 @@ def run_campaign_serial(scenarios: Optional[Sequence] = None,
 def campaign_table(results: Dict[str, Dict[str, PolicyResult]],
                    markdown: bool = False) -> str:
     """Render the scenario x policy grid as one table (p50/p95/p99 s,
-    oracle-relative inefficiency % and resource waste %)."""
+    oracle-relative inefficiency % and resource waste %, plus the
+    capacity plane's idle-provisioned fraction and shed rate — the
+    (RTT, waste, shed) triple every cell now reports)."""
     rows = [("scenario", "policy", "p50 s", "p95 s", "p99 s",
-             "ineff %", "waste %")]
+             "ineff %", "waste %", "idle", "shed")]
     for scen, cell in results.items():
         for pol, r in cell.items():
             if pol == "oracle":
@@ -263,7 +268,9 @@ def campaign_table(results: Dict[str, Dict[str, PolicyResult]],
                 else f"{r.resource_waste_pct:.1f}"
             rows.append((scen, pol, f"{r.stat('p50_rtt'):.2f}",
                          f"{r.stat('p95_rtt'):.2f}",
-                         f"{r.stat('p99_rtt'):.2f}", ineff, waste))
+                         f"{r.stat('p99_rtt'):.2f}", ineff, waste,
+                         f"{r.stat('waste'):.2f}",
+                         f"{r.stat('shed_rate'):.3f}"))
     if markdown:
         lines = ["| " + " | ".join(rows[0]) + " |",
                  "|" + "---|" * len(rows[0])]

@@ -1,0 +1,598 @@
+"""Capacity plane (DESIGN.md §12): predictive autoscaling, admission
+control, and resource-waste accounting.
+
+The paper's headline simulation claim is that performance-aware load
+balancing "can significantly reduce application RTT and minimize
+resource waste" in resource-constrained clusters — which needs a notion
+of *capacity*: how many replicas are provisioned, how busy they are,
+and what happens when demand outruns the pool.  This module turns the
+prediction plane's RTT signals into capacity decisions, three ways:
+
+* **Elastic replica set** — per-trial ``(T, R)`` active-replica masks
+  with scale-up warm-up (a freshly-activated replica serves at
+  ``cold_rtt_factor``-degraded RTT until ``warmup_s`` has elapsed) and
+  scale-down *draining* (a deactivated replica takes no new work but
+  finishes what it has; its drain tail is still paid for).  The
+  simulator's one-shot churn latch is superseded by a general
+  membership-event timeline (:class:`MembershipEvent`) that also
+  carries spot preemptions and autoscaler decision epochs.
+
+* **Autoscalers** (:class:`CapacityController`) — the *predictive*
+  autoscaler provisions from Little's law: estimated per-app demand
+  (trailing arrival rate) x the fleet's predicted service RTT (the same
+  signal the perf-aware policy routes on), divided by a target
+  utilization ``rho_target``; it jumps straight to the required count.
+  The *reactive* baseline is the classic threshold rule — busy-fraction
+  above ``hi_util`` adds one replica, below ``lo_util`` removes one,
+  with a cooldown — which can only crawl toward the right size.
+  ``fixed`` pins the initial count (the accounting-only baseline).
+
+* **Admission control** — when even the currently-active set cannot
+  bound queue wait (estimated wait above ``admission_limit_s``) the
+  request is *shed* instead of queueing unboundedly; shed-rate is a
+  first-class summary stat.
+
+* **Waste accounting** — replica-seconds provisioned (the integral of
+  the active-replica count, plus drain tails) vs replica-seconds busy
+  (the service time actually consumed); ``waste`` is the
+  idle-provisioned fraction in [0, 1], and ``slo_violation_s`` sums
+  response time in excess of the SLO target.  Every scenario x policy
+  cell therefore reports an (RTT, waste, shed) triple.
+
+Everything is vectorised over the leading trial axis — the same batch
+axis the policy engine scores — so the campaign runner's stacked seed
+grid makes identical capacity decisions to per-seed serial runs
+(``tests/test_campaign.py`` pins parity for the capacity scenarios).
+:class:`EnginePool` is the serving-side mirror: the same controller
+logic over a pool of :class:`~repro.serving.engine.ServingEngine`
+replicas (grow/shrink + admission hook) for the live router.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["CapacityConfig", "MembershipEvent", "CapacityController",
+           "EnginePool", "DEFAULT_SLO_S"]
+
+#: SLO used by the accounting when no CapacityConfig is set, so
+#: ``slo_violation_s`` is comparable across capacity and non-capacity
+#: runs (golden-pinned on the default configs).
+DEFAULT_SLO_S = 30.0
+
+AUTOSCALERS = ("predictive", "reactive", "fixed")
+
+
+@dataclass(frozen=True)
+class CapacityConfig:
+    """Capacity-plane knobs; frozen so SimConfig equality (the campaign
+    stacking precondition) keeps working."""
+    autoscaler: str = "predictive"      # predictive | reactive | fixed
+    min_replicas: int = 1               # per app (0 enables scale-to-zero)
+    max_replicas: Optional[int] = None  # per app; None -> the full pool
+    initial_replicas: Optional[int] = None  # None -> max(min_replicas, 1)
+    decide_every_s: float = 5.0         # autoscaler decision cadence
+    # scale-up warm-up: a just-activated replica is COLD — it serves at
+    # cold_rtt_factor x RTT until warmup_s after activation
+    warmup_s: float = 10.0
+    cold_rtt_factor: float = 2.0
+    # predictive autoscaler (Little's law provisioning)
+    slo_target_s: float = 30.0          # p95 target; accounting SLO
+    rho_target: float = 0.7             # target busy fraction
+    rate_window_s: float = 20.0         # trailing arrival-rate window
+    ewma_alpha: float = 0.1             # predicted-RTT EWMA step
+    # reactive threshold baseline
+    hi_util: float = 0.8
+    lo_util: float = 0.3
+    cooldown_s: float = 10.0            # min seconds between +-1 steps
+    # admission control: shed when est. queue wait exceeds the limit
+    admission_limit_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.autoscaler not in AUTOSCALERS:
+            raise ValueError(f"unknown autoscaler {self.autoscaler!r}; "
+                             f"one of {AUTOSCALERS}")
+        if self.min_replicas < 0:
+            raise ValueError("min_replicas must be >= 0")
+        if not 0.0 < self.rho_target <= 1.0:
+            raise ValueError("rho_target must be in (0, 1]")
+
+    @property
+    def initial(self) -> int:
+        return self.initial_replicas if self.initial_replicas is not None \
+            else max(self.min_replicas, 1)
+
+
+@dataclass(order=True)
+class MembershipEvent:
+    """One timed membership change; the stepper keeps a heap of these
+    and applies everything with ``t <= now`` before routing a request.
+    ``seq`` makes same-instant ordering deterministic."""
+    t: float
+    seq: int
+    kind: str = field(compare=False)   # churn | preempt_down | preempt_up | scale
+
+
+def _take_lowest(eligible: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """(T, C) bool: the first (lowest-index) ``k[t]`` eligible columns
+    per row — the deterministic activation order."""
+    csum = np.cumsum(eligible, axis=1)
+    return eligible & (csum <= k[:, None])
+
+
+def _take_highest(eligible: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """(T, C) bool: the last (highest-index) ``k[t]`` eligible columns
+    per row — the deterministic deactivation order."""
+    csum = np.cumsum(eligible[:, ::-1], axis=1)[:, ::-1]
+    return eligible & (csum <= k[:, None])
+
+
+class CapacityController:
+    """Per-trial elastic replica set + autoscaler + accounting ledger.
+
+    All state carries a leading ``(T,)`` trial axis; the arrival stream
+    (and therefore the demand estimate) is shared across trials — the
+    same precondition the campaign's seed stacking already relies on —
+    so a stacked multi-seed cluster makes bit-identical decisions to
+    per-seed serial runs.
+    """
+
+    def __init__(self, cap: CapacityConfig, app_of: np.ndarray,
+                 node_of: np.ndarray, mean_rtt: Sequence[float],
+                 req_app: np.ndarray, req_t: np.ndarray,
+                 preempted_node: Optional[np.ndarray] = None):
+        self.cap = cap
+        self.app_of = np.asarray(app_of)
+        self.node_of = np.asarray(node_of)            # (T, R)
+        self.T, self.R = self.node_of.shape
+        self.A = int(self.app_of.max()) + 1
+        self.req_t = np.asarray(req_t, float)
+        self.preempted_node = preempted_node
+        self._cand = [np.flatnonzero(self.app_of == a)
+                      for a in range(self.A)]
+        # cumulative per-app arrival counts -> O(1) trailing-rate query
+        self._cum = np.zeros((len(req_app) + 1, self.A))
+        np.add.at(self._cum, (np.arange(len(req_app)) + 1,
+                              np.asarray(req_app)), 1.0)
+        self._cum = np.cumsum(self._cum, axis=0)
+
+        self.active = np.zeros((self.T, self.R), bool)
+        self.allowed = np.ones((self.T, self.R), bool)
+        for a, cand in enumerate(self._cand):
+            n0 = min(cap.initial, len(cand))
+            self.active[:, cand[:n0]] = True
+        self.warm_at = np.full((self.T, self.R), -np.inf)  # warm at start
+        self.paid_until = np.zeros((self.T, self.R))
+        # ledger
+        self.prov_s = np.zeros(self.T)
+        self._last_t = 0.0
+        # demand/service estimates
+        self.s_hat = np.broadcast_to(
+            np.asarray(mean_rtt, float), (self.T, self.A)).copy()
+        self._pending: List[Tuple[int, np.ndarray, np.ndarray,
+                                  np.ndarray]] = []
+        self.last_scale = np.full((self.T, self.A), -np.inf)
+        # telemetry
+        self.scale_ups = np.zeros(self.T, np.int64)
+        self.scale_downs = np.zeros(self.T, np.int64)
+        self.routed_inactive = 0
+        self.wakeups = np.zeros(self.T, np.int64)
+        self.decisions = 0
+        self._util_sum = np.zeros(self.T)
+        self._util_n = 0
+
+    # ------------------------------------------------------------------
+    # ledger
+    def accrue(self, t: float) -> None:
+        """Charge active replicas up to ``t`` (call before any mask
+        change at ``t``)."""
+        dt = t - self._last_t
+        if dt > 0:
+            self.prov_s += self.active.sum(axis=1) * dt
+            self._last_t = t
+
+    def _activate(self, mask: np.ndarray, t: float, cold: bool = True):
+        """Turn on ``mask`` replicas at ``t``; refund any still-paid
+        drain-tail overlap so reactivation never double-charges."""
+        if not mask.any():
+            return
+        overlap = np.where(mask, np.maximum(self.paid_until - t, 0.0), 0.0)
+        self.prov_s -= overlap.sum(axis=1)
+        self.active |= mask
+        if cold:
+            self.warm_at = np.where(mask, t + self.cap.warmup_s,
+                                    self.warm_at)
+
+    def _deactivate(self, mask: np.ndarray, t: float,
+                    busy_until: np.ndarray):
+        """Turn off ``mask`` replicas at ``t``; busy ones drain — their
+        remaining service time is still provisioned (paid) once."""
+        if not mask.any():
+            return
+        tail = np.where(mask, np.maximum(busy_until - t, 0.0), 0.0)
+        self.prov_s += tail.sum(axis=1)
+        self.paid_until = np.where(mask, t + tail, self.paid_until)
+        self.active &= ~mask
+
+    def finalize(self, t_end: np.ndarray) -> None:
+        """Flush the ledger to the per-trial horizon ``t_end`` (>= every
+        completion, so busy-seconds can never exceed provisioned)."""
+        t_end = np.asarray(t_end, float)
+        self.prov_s += self.active.sum(axis=1) \
+            * np.maximum(t_end - self._last_t, 0.0)
+        self._last_t = float(t_end.max())
+
+    # ------------------------------------------------------------------
+    # demand / service-time signals
+    def rate(self, t: float) -> np.ndarray:
+        """(A,) trailing per-app arrival rate over ``rate_window_s``
+        (shared across trials: the arrival stream is)."""
+        win = min(self.cap.rate_window_s, max(t, 1e-9))
+        hi = np.searchsorted(self.req_t, t, side="right")
+        lo = np.searchsorted(self.req_t, t - win, side="right")
+        return (self._cum[hi] - self._cum[lo]) / win
+
+    def note_prediction(self, a: int, pred: np.ndarray,
+                        served: Optional[np.ndarray] = None) -> None:
+        """EWMA-fold the routed prediction for app ``a`` — the fleet RTT
+        forecast the predictive autoscaler provisions from."""
+        al = self.cap.ewma_alpha
+        new = (1.0 - al) * self.s_hat[:, a] + al * np.asarray(pred, float)
+        if served is None:
+            self.s_hat[:, a] = new
+        else:
+            self.s_hat[:, a] = np.where(served, new, self.s_hat[:, a])
+
+    def note_completion(self, a: int, rtt: np.ndarray, finish: np.ndarray,
+                        served: Optional[np.ndarray] = None) -> None:
+        """Queue an observed service RTT; folded into the EWMA only once
+        ``finish <= now`` (reactive-policy runs have no predictions, so
+        the controller learns from completions — never clairvoyantly)."""
+        fin = np.asarray(finish, float)
+        if served is not None:
+            fin = np.where(served, fin, np.inf)
+        if not np.isfinite(fin).any():
+            return                      # shed everywhere: nothing to fold
+        self._pending.append((int(a), np.asarray(rtt, float).copy(), fin,
+                              np.asarray(fin.min(), float)))
+
+    def _fold_completions(self, now: float) -> None:
+        al = self.cap.ewma_alpha
+        keep = []
+        for a, rtt, fin, t_min in self._pending:
+            if t_min > now:
+                keep.append((a, rtt, fin, t_min))
+                continue
+            done = fin <= now
+            upd = (1.0 - al) * self.s_hat[:, a] + al * rtt
+            self.s_hat[:, a] = np.where(done, upd, self.s_hat[:, a])
+            fin = np.where(done, np.inf, fin)
+            if np.isfinite(fin).any():   # shed (inf) entries never fold
+                keep.append((a, rtt, fin, np.asarray(fin.min(), float)))
+        self._pending = keep
+
+    # ------------------------------------------------------------------
+    # decisions
+    def targets(self, now: float, busy_until: np.ndarray) -> np.ndarray:
+        """(T, A) desired active counts under the configured autoscaler."""
+        cap = self.cap
+        tgt = np.zeros((self.T, self.A), np.int64)
+        lam = self.rate(now)
+        for a, cand in enumerate(self._cand):
+            act = self.active[:, cand]
+            cur = act.sum(axis=1)
+            if cap.autoscaler == "predictive":
+                # Little's law: concurrency = demand x predicted service
+                # time; provision at rho_target of it, jump straight there
+                need = np.ceil(lam[a] * self.s_hat[:, a]
+                               / cap.rho_target).astype(np.int64)
+            elif cap.autoscaler == "reactive":
+                busy = (busy_until[:, cand] > now) & act
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    util = np.where(cur > 0, busy.sum(axis=1)
+                                    / np.maximum(cur, 1), 0.0)
+                cooled = now - self.last_scale[:, a] >= cap.cooldown_s
+                need = cur + np.where(cooled & (util > cap.hi_util), 1,
+                                      np.where(cooled & (util < cap.lo_util),
+                                               -1, 0))
+            else:                       # fixed
+                need = np.full(self.T, cap.initial, np.int64)
+            hi = len(cand) if cap.max_replicas is None \
+                else min(cap.max_replicas, len(cand))
+            # never above what the preemption mask leaves available
+            # (np.clip lets the upper bound win when the two collide)
+            hi = np.minimum(hi, self.allowed[:, cand].sum(axis=1))
+            tgt[:, a] = np.clip(need, cap.min_replicas, hi)
+        return tgt
+
+    def decide(self, now: float, busy_until: np.ndarray) -> None:
+        """One autoscaler epoch: fold completions, compute targets, and
+        apply them (activate lowest-index standby replicas first,
+        deactivate idle highest-index replicas first, drain busy ones
+        only when idle capacity cannot cover the scale-down)."""
+        self._fold_completions(now)
+        self.accrue(now)
+        tgt = self.targets(now, busy_until)
+        self.decisions += 1
+        util_acc = np.zeros(self.T)
+        for a, cand in enumerate(self._cand):
+            act = self.active[:, cand]
+            cur = act.sum(axis=1)
+            busy = (busy_until[:, cand] > now) & act
+            with np.errstate(invalid="ignore", divide="ignore"):
+                util_acc += np.where(cur > 0,
+                                     busy.sum(axis=1) / np.maximum(cur, 1),
+                                     0.0)
+            want = tgt[:, a]
+            k_up = np.maximum(want - cur, 0)
+            k_dn = np.maximum(cur - want, 0)
+            changed = (k_up > 0) | (k_dn > 0)
+            if k_up.any():
+                grow = _take_lowest(~act & self.allowed[:, cand], k_up)
+                m = np.zeros_like(self.active)
+                m[:, cand] = grow
+                self._activate(m, now)
+                self.scale_ups += grow.sum(axis=1)
+            if k_dn.any():
+                idle = act & ~busy
+                drop = _take_highest(idle, k_dn)
+                rem = k_dn - drop.sum(axis=1)
+                if rem.any():
+                    drop |= _take_highest(act & busy & ~drop, rem)
+                m = np.zeros_like(self.active)
+                m[:, cand] = drop
+                self._deactivate(m, now, busy_until)
+                self.scale_downs += drop.sum(axis=1)
+            self.last_scale[:, a] = np.where(changed, now,
+                                             self.last_scale[:, a])
+        self._util_sum += util_acc / max(self.A, 1)
+        self._util_n += 1
+
+    def wake(self, a: int, now: float) -> None:
+        """Scale-from-zero: an arrival for an app with no active replica
+        immediately activates its first available candidate (cold)."""
+        cand = self._cand[a]
+        empty = ~self.active[:, cand].any(axis=1)
+        if not empty.any():
+            return
+        self.accrue(now)
+        first = _take_lowest(self.allowed[:, cand],
+                             empty.astype(np.int64))
+        none = ~first.any(axis=1) & empty
+        if none.any():
+            # whole pool preempted: break glass, wake regardless
+            first |= _take_lowest(np.ones_like(first),
+                                  none.astype(np.int64))
+        m = np.zeros_like(self.active)
+        m[:, cand] = first
+        self._activate(m, now)
+        self.wakeups += empty
+
+    def preempt(self, now: float, busy_until: np.ndarray) -> None:
+        """Spot preemption: replicas on the per-trial preempted node are
+        forced out of the pool (not activatable) until restored.  In-
+        flight work drains gracefully and its tail is still paid for, so
+        busy-seconds can never exceed provisioned-seconds."""
+        if self.preempted_node is None:
+            return
+        self.accrue(now)
+        hit = self.node_of == self.preempted_node[:, None]   # (T, R)
+        self.allowed &= ~hit
+        self._deactivate(hit & self.active, now, busy_until)
+
+    def restore(self, now: float) -> None:
+        """Preemption window over: replicas become activatable again (the
+        next autoscaler epoch — or a wake — brings them back, cold)."""
+        if self.preempted_node is None:
+            return
+        hit = self.node_of == self.preempted_node[:, None]
+        self.allowed |= hit
+
+    # ------------------------------------------------------------------
+    # routing-side queries
+    def active_for(self, candidates: np.ndarray) -> np.ndarray:
+        """(T, C) mask of routable candidates."""
+        return self.active[:, candidates]
+
+    def cold_mult(self, candidates: np.ndarray, now: float) -> np.ndarray:
+        """(T, C) RTT multiplier: cold replicas serve degraded."""
+        cold = now < self.warm_at[:, candidates]
+        return np.where(cold, self.cap.cold_rtt_factor, 1.0)
+
+    def admission_wait(self, candidates: np.ndarray,
+                       busy_until: np.ndarray, now: float) -> np.ndarray:
+        """(T,) best-case queue wait over the active candidates (inf when
+        none are active) — the admission-control signal."""
+        act = self.active[:, candidates]
+        wait = np.maximum(busy_until[:, candidates] - now, 0.0)
+        return np.where(act, wait, np.inf).min(axis=1)
+
+    def shed_mask(self, candidates: np.ndarray, busy_until: np.ndarray,
+                  now: float) -> Optional[np.ndarray]:
+        """(T,) bool: trials whose request is shed at admission, or None
+        when admission control is disabled."""
+        if self.cap.admission_limit_s is None:
+            return None
+        return self.admission_wait(candidates, busy_until, now) \
+            > self.cap.admission_limit_s
+
+    def check_routed(self, rep: np.ndarray,
+                     served: Optional[np.ndarray] = None) -> None:
+        """Count violations of the invariant that no served request ever
+        lands on a drained replica (tests pin this at zero)."""
+        ok = self.active[np.arange(self.T), rep]
+        if served is not None:
+            ok = ok | ~served
+        self.routed_inactive += int((~ok).sum())
+
+    def telemetry(self) -> Dict[str, object]:
+        return {
+            "decisions": self.decisions,
+            "scale_ups": self.scale_ups.copy(),
+            "scale_downs": self.scale_downs.copy(),
+            "wakeups": self.wakeups.copy(),
+            "routed_inactive": self.routed_inactive,
+            "mean_util": self._util_sum / max(self._util_n, 1),
+            "active_final": self.active.sum(axis=1),
+        }
+
+
+class EnginePool:
+    """Serving-side mirror of the capacity plane: grow/shrink a pool of
+    :class:`~repro.serving.engine.ServingEngine` replicas and gate
+    admission, using the same decision rules as the simulator's
+    controller (one app, one "trial").
+
+    The router calls :meth:`on_request` per arrival (scale epochs ride
+    the request clock, as in the simulator), :meth:`admit` before
+    submitting, and reads :meth:`active_mask` into its ClusterState so
+    the policy can never pick a drained engine.  ``ledger()`` reports
+    the same (provisioned, busy, waste) triple the simulator pins.
+    """
+
+    def __init__(self, engines: Sequence, cap: CapacityConfig):
+        self.engines = list(engines)
+        self.cap = cap
+        n = len(self.engines)
+        n0 = min(cap.initial, n)
+        for i, e in enumerate(self.engines):
+            e.active = i < n0
+        self.clock = self.engines[0].clock
+        self._t0 = self.clock.now()
+        self._last_t = self._t0
+        self._next_decide = self._t0 + cap.decide_every_s
+        self._last_scale = -np.inf
+        self.prov_s = 0.0
+        self.shed = 0
+        self.scale_events: List[Tuple[float, int]] = []
+        self._arrivals: List[float] = []
+        self._s_hat: Optional[float] = None
+        self._busy_seen = [float(getattr(e, "busy_s", 0.0))
+                           for e in self.engines]
+
+    # ------------------------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        return np.array([e.active for e in self.engines], bool)
+
+    def _accrue(self, now: float) -> None:
+        dt = now - self._last_t
+        if dt > 0:
+            self.prov_s += int(self.active_mask().sum()) * dt
+            self._last_t = now
+        # drain tails: serving time an INACTIVE engine spent emptying
+        # its queue since the last accrual is still paid for — the
+        # serving mirror of the controller's _deactivate tail, keeping
+        # busy_s <= prov_s (waste in [0, 1]) through scale-downs
+        for i, e in enumerate(self.engines):
+            busy = float(getattr(e, "busy_s", 0.0))
+            if not e.active:
+                self.prov_s += max(busy - self._busy_seen[i], 0.0)
+            self._busy_seen[i] = busy
+
+    def note_prediction(self, pred: float) -> None:
+        al = self.cap.ewma_alpha
+        self._s_hat = pred if self._s_hat is None \
+            else (1.0 - al) * self._s_hat + al * pred
+
+    def on_request(self, now: float) -> None:
+        """Record the arrival; run the latest due autoscaler epoch; wake
+        the pool when everything is drained (scale-from-zero).  After an
+        idle gap only the MOST RECENT due epoch runs — replaying stale
+        epochs would score them against arrivals from after their time
+        (the simulator controller never has this problem: its epochs
+        ride the membership timeline request by request)."""
+        self._arrivals.append(now)
+        # only the trailing rate window (plus one epoch of slack for a
+        # decision made at t < now) can matter: prune so a long-lived
+        # router stays O(window), not O(lifetime)
+        lo = now - self.cap.rate_window_s - self.cap.decide_every_s
+        if self._arrivals[0] < lo:
+            keep = np.searchsorted(np.asarray(self._arrivals), lo,
+                                   side="right")
+            del self._arrivals[:keep]
+        if self._next_decide <= now:
+            missed = int((now - self._next_decide)
+                         // self.cap.decide_every_s)
+            t = self._next_decide + missed * self.cap.decide_every_s
+            self._decide(t)
+            self._next_decide = t + self.cap.decide_every_s
+        if not any(e.active for e in self.engines):
+            self._accrue(now)
+            self.engines[0].active = True
+            self.scale_events.append((now, +1))
+
+    def _rate(self, now: float) -> float:
+        win = min(self.cap.rate_window_s, max(now - self._t0, 1e-9))
+        lo = now - win
+        return sum(1 for t in self._arrivals if lo < t <= now) / win
+
+    def _decide(self, now: float) -> None:
+        cap = self.cap
+        act = [e for e in self.engines if e.active]
+        cur = len(act)
+        if cap.autoscaler == "predictive":
+            s = self._s_hat if self._s_hat is not None else 1.0
+            need = int(np.ceil(self._rate(now) * s / cap.rho_target))
+        elif cap.autoscaler == "reactive":
+            util = (sum(1 for e in act if e.pending() > 0)
+                    / max(cur, 1)) if cur else 0.0
+            cooled = now - self._last_scale >= cap.cooldown_s
+            need = cur + (1 if cooled and util > cap.hi_util else
+                          -1 if cooled and util < cap.lo_util else 0)
+        else:
+            need = cap.initial
+        hi = len(self.engines) if cap.max_replicas is None \
+            else min(cap.max_replicas, len(self.engines))
+        want = int(np.clip(need, cap.min_replicas, hi))
+        if want == cur:
+            return
+        self._accrue(now)
+        self._last_scale = now
+        if want > cur:
+            for e in self.engines:
+                if not e.active and want > cur:
+                    e.active = True
+                    cur += 1
+            self.scale_events.append((now, +1))
+        else:
+            # drain idle engines first, highest index first
+            for e in reversed(self.engines):
+                if cur <= want:
+                    break
+                if e.active and e.pending() == 0:
+                    e.active = False
+                    cur -= 1
+            for e in reversed(self.engines):
+                if cur <= want:
+                    break
+                if e.active:
+                    e.active = False
+                    cur -= 1
+            self.scale_events.append((now, -1))
+
+    # ------------------------------------------------------------------
+    def admit(self, now: float) -> bool:
+        """Admission hook: False sheds the request (queues on the active
+        set already exceed the wait limit)."""
+        if self.cap.admission_limit_s is None:
+            return True
+        waits = [e.pending() * (self._s_hat or 1.0) / max(e.max_batch, 1)
+                 for e in self.engines if e.active]
+        if not waits:
+            return True
+        if min(waits) > self.cap.admission_limit_s:
+            self.shed += 1
+            return False
+        return True
+
+    def ledger(self) -> Dict[str, float]:
+        """(provisioned, busy, waste, shed) — the serving-side triple."""
+        now = self.clock.now()
+        self._accrue(now)
+        busy = float(sum(getattr(e, "busy_s", 0.0) for e in self.engines))
+        prov = max(self.prov_s, 1e-9)
+        return {"provisioned_s": self.prov_s, "busy_s": busy,
+                "waste": float(np.clip(1.0 - busy / prov, 0.0, 1.0)),
+                "shed": self.shed}

@@ -173,22 +173,33 @@ class OnlineFleet:
     # ------------------------------------------------------------------
     # observation + accuracy
     def observe(self, a: int, X_pick: np.ndarray, rtt: np.ndarray,
-                finish: np.ndarray, predicted: np.ndarray):
+                finish: np.ndarray, predicted: np.ndarray,
+                served: Optional[np.ndarray] = None):
         """Record one routed request per trial: the picked candidate's
         features, its true RTT, its completion time (training and the
         tracker only consume it once ``finish <= now``), and what the
-        fleet predicted for it."""
+        fleet predicted for it.  ``served`` masks trials whose request
+        was actually admitted — a trial shed by the capacity plane's
+        admission control contributes neither training data nor an
+        accuracy observation."""
         rtt = np.asarray(rtt, float)
         X_pick = np.asarray(X_pick, float)
         finish = np.asarray(finish, float)
+        if served is not None:
+            # an infinite completion time keeps shed trials out of every
+            # ``finish <= now`` training mask, including the final
+            # fold at now = inf (their tracker slot starts done=True)
+            finish = np.where(served, finish, np.inf)
         self._obs.append((int(a), X_pick, rtt, finish))
         if len(self._obs) > self.window:
             del self._obs[: len(self._obs) - self.window]
         err = np.abs(np.asarray(predicted, float) - rtt) \
             / np.maximum(rtt, 1e-9)
+        done0 = np.zeros(self.T, bool) if served is None \
+            else ~np.asarray(served, bool)
         # [app, finish, err, done-mask, earliest outstanding finish]
-        self._pending.append([int(a), finish, err,
-                              np.zeros(self.T, bool), float(finish.min())])
+        self._pending.append([int(a), finish, err, done0,
+                              float(finish.min())])
 
     def fold_pending(self, now: float):
         """Move completed observations into the accuracy trackers

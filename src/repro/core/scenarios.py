@@ -24,6 +24,7 @@ import zlib
 from dataclasses import dataclass, fields, replace
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.capacity import CapacityConfig
 from repro.core.simulator import APPS, ARRIVAL_PROCESSES, SimConfig
 
 
@@ -70,6 +71,9 @@ class ScenarioSpec:
     drift_interference: Optional[float] = None
     drift_rtt_factor: Optional[Tuple[float, ...]] = None
     drift_tier_shuffle: bool = False
+    # capacity plane (core/capacity.py, DESIGN.md §12)
+    capacity: Optional[CapacityConfig] = None
+    preempt: Optional[Tuple[float, float]] = None
 
     def __post_init__(self):
         if self.arrival_process not in ARRIVAL_PROCESSES:
@@ -91,6 +95,10 @@ class ScenarioSpec:
                 f"{self.name}: drift_rtt_factor needs 1 or "
                 f"{len(self.apps)} entries, got "
                 f"{len(self.drift_rtt_factor)}")
+        if self.preempt is not None and self.capacity is None:
+            raise ValueError(f"{self.name}: preempt requires a capacity "
+                             "config (the elastic replica set handles "
+                             "the takeback)")
 
     @property
     def stream_seed(self) -> int:
@@ -248,6 +256,76 @@ register(ScenarioSpec(
                 "to least_conn until retraining restores the predictor.",
     interference_strength=0.2, drift_tier_shuffle=True,
     fallback_threshold=0.55, **_DRIFT))
+
+# ----------------------------------------------------------------------
+# capacity-plane scenarios (DESIGN.md §12).  All run the elastic replica
+# set: a predictive autoscaler provisions replicas from Little's law
+# (trailing demand x the fleet's RTT forecast / rho_target), admission
+# control sheds requests the active set cannot bound, and every cell
+# reports the (RTT, waste, shed) triple.  benchmarks/bench_capacity.py
+# compares the predictive autoscaler against the reactive
+# threshold baseline on these and gates Pareto domination.
+#
+# Design note: the apps are the three light SPA stages (means 5/5/3 s)
+# so the overload peaks need ~8-10 of the 12 replicas per app — a real
+# dynamic range for the autoscaler — instead of the 20 s upload stage,
+# which would saturate any pool the paper's cluster sizes allow.
+_CAP_APPS = ("motioncor2", "gctf", "ctffind4")
+_CAP = dict(apps=_CAP_APPS, n_nodes=12, n_replicas_per_app=12,
+            heterogeneity=0.2, interference_strength=0.4, accuracy=0.85,
+            n_trials=8)
+_CAP_CFG = CapacityConfig(min_replicas=2, decide_every_s=5.0,
+                          warmup_s=8.0, cold_rtt_factor=2.0,
+                          slo_target_s=15.0, rho_target=0.75,
+                          rate_window_s=15.0, cooldown_s=10.0,
+                          admission_limit_s=45.0)
+
+register(ScenarioSpec(
+    name="overload-ramp",
+    description="Arrivals ramp 1x -> 5x over [30s, 90s] and recede by "
+                "150s: the autoscaler must grow ahead of the ramp (or "
+                "p95 explodes) and release capacity behind it (or waste "
+                "does).",
+    arrival_process="ramp", arrival_params=(30.0, 90.0, 150.0, 5.0),
+    arrival_rate=0.9, n_requests=480, capacity=_CAP_CFG, **_CAP))
+
+register(ScenarioSpec(
+    name="flash-crowd-autoscale",
+    description="A 6x flash crowd 50s in, 40s long, over a minimally-"
+                "provisioned pool: the +1-per-cooldown reactive rule "
+                "cannot reach the required size inside the spike, the "
+                "Little's-law predictive rule jumps straight there.",
+    arrival_process="flash_crowd", arrival_params=(50.0, 40.0, 6.0),
+    arrival_rate=0.8, n_requests=420, capacity=_CAP_CFG, **_CAP))
+
+register(ScenarioSpec(
+    name="scale-to-zero-idle",
+    description="Long idle valleys between short bursts (20s on at 6x, "
+                "70s off) with min_replicas=0: the pool drains to zero "
+                "when demand stops and pays a cold-start penalty on the "
+                "first arrival of the next burst.",
+    arrival_process="bursty", arrival_params=(6.0, 20.0, 70.0),
+    arrival_rate=0.5, n_requests=360,
+    capacity=CapacityConfig(min_replicas=0, initial_replicas=1,
+                            decide_every_s=5.0, warmup_s=6.0,
+                            cold_rtt_factor=2.0, slo_target_s=15.0,
+                            rho_target=0.75, rate_window_s=12.0,
+                            cooldown_s=10.0, admission_limit_s=60.0),
+    **_CAP))
+
+register(ScenarioSpec(
+    name="spot-preemption",
+    description="A spot node is reclaimed at t=50s for 60s under steady "
+                "load: its replicas drain out of the pool and the "
+                "autoscaler back-fills from standby capacity (which "
+                "comes up cold).",
+    arrival_rate=1.2, n_requests=420, preempt=(50.0, 60.0),
+    capacity=CapacityConfig(min_replicas=2, decide_every_s=5.0,
+                            warmup_s=8.0, cold_rtt_factor=2.0,
+                            slo_target_s=15.0, rho_target=0.7,
+                            rate_window_s=15.0, cooldown_s=10.0,
+                            admission_limit_s=45.0),
+    **_CAP))
 
 register(ScenarioSpec(
     name="mixed-app-fleet",

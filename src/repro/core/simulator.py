@@ -50,19 +50,33 @@ Beyond the seed scenarios, the simulator supports:
     ``drift_rtt_factor`` / ``drift_tier_shuffle``): at ``t_drift`` the
     interference matrix is redrawn, per-app mean RTTs are rescaled,
     and/or node speeds are reshuffled — the regime shifts the paper's
-    §7 adaptability argument is about.
+    §7 adaptability argument is about;
+  * the capacity plane (``SimConfig.capacity``, DESIGN.md §12): an
+    elastic per-trial active-replica set driven by a predictive or
+    reactive autoscaler (``repro.core.capacity``), scale-up warm-up
+    (cold replicas serve degraded RTT), scale-down draining, spot
+    preemption (``preempt``), admission control (requests are SHED when
+    even the active set cannot bound queue wait), and resource-waste
+    accounting — every summary now reports replica-seconds provisioned
+    vs busy, the idle-provisioned ``waste`` fraction, ``shed_rate``,
+    and ``slo_violation_s``.  Node failure (``churn``), preemption, and
+    autoscaler epochs all ride one membership-event timeline.
 
 The declarative layer over these knobs lives in
 ``repro.core.scenarios`` (ScenarioSpec -> SimConfig).
 """
 from __future__ import annotations
 
+import heapq
+import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
+from repro.core.capacity import (CapacityConfig, CapacityController,
+                                 DEFAULT_SLO_S, MembershipEvent)
 from repro.core.online import OnlineFleet
 from repro.monitoring.metrics import PeriodicRefresh
 
@@ -76,7 +90,7 @@ APPS = {
     "ctffind4": (3.0, 1.0, 1.0),
 }
 
-ARRIVAL_PROCESSES = ("poisson", "bursty", "diurnal", "flash_crowd")
+ARRIVAL_PROCESSES = ("poisson", "bursty", "diurnal", "flash_crowd", "ramp")
 
 
 @dataclass
@@ -127,6 +141,13 @@ class SimConfig:
     drift_interference: Optional[float] = None    # redraw imat, new strength
     drift_rtt_factor: Optional[Tuple[float, ...]] = None  # per-app factors
     drift_tier_shuffle: bool = False              # permute node speeds
+    # -- capacity plane (core/capacity.py, DESIGN.md §12) ---------------
+    #: elastic replica set + autoscaler + admission control; None keeps
+    #: the fixed-membership behaviour (and its goldens) bit-identical
+    capacity: Optional[CapacityConfig] = None
+    #: spot preemption: (t_start_s, duration_s) — one node per trial is
+    #: reclaimed for the window (requires ``capacity``)
+    preempt: Optional[Tuple[float, float]] = None
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -163,6 +184,16 @@ def _rate_factor(cfg: SimConfig, t: float) -> float:
     if kind == "flash_crowd":
         t_start, duration, factor = p or (60.0, 30.0, 8.0)
         return factor if t_start <= t < t_start + duration else 1.0
+    if kind == "ramp":
+        # triangular overload: 1 -> peak over [t0, tp], peak -> 1 over
+        # [tp, t1] — exercises the autoscaler in BOTH directions (scale
+        # up under rising demand, release capacity as it recedes)
+        t0, tp, t1, peak = p or (30.0, 80.0, 140.0, 5.0)
+        if t <= t0 or t >= t1:
+            return 1.0
+        if t <= tp:
+            return 1.0 + (peak - 1.0) * (t - t0) / max(tp - t0, 1e-9)
+        return 1.0 + (peak - 1.0) * (t1 - t) / max(t1 - tp, 1e-9)
     raise ValueError(f"unknown arrival_process {kind!r}; "
                      f"one of {ARRIVAL_PROCESSES}")
 
@@ -221,6 +252,7 @@ class _Cluster:
     imat_post: Optional[np.ndarray] = None     # post-drift interference
     accel_post: Optional[np.ndarray] = None    # post-drift node speeds
     mean_rtt_post: Optional[np.ndarray] = None  # post-drift app means
+    preempted_node: Optional[np.ndarray] = None  # (T,) spot-preempt target
 
     def __post_init__(self):
         self._prep: Dict[Tuple[int, bool], _AppPrep] = {}
@@ -266,25 +298,34 @@ class _Cluster:
             self._prep[key] = prep
         return prep
 
+    def _node_buckets(self, p: _AppPrep, busy_until: np.ndarray,
+                      now: float) -> np.ndarray:
+        """(T*N,) summed interference weight of busy replicas per
+        (trial, node) bucket — the shared core of :meth:`rtt_draw` and
+        :meth:`rtt_draw_at`.  One bincount is O(T*R) instead of the
+        O(T*C*R) mask product; each candidate then gathers its bucket."""
+        busy = busy_until > now                                  # (T, R)
+        return np.bincount(self._flat_nodes,
+                           weights=(busy * p.weight).ravel(),
+                           minlength=self._tn)
+
+    @staticmethod
+    def _lognormal(log_rbar: float, inter: np.ndarray,
+                   z: np.ndarray) -> np.ndarray:
+        """Log-normal moment matching with s = rbar * (0.1 + inter):
+        mu = log(rbar) - u/2, sigma = sqrt(u), u = log(1 + (s/rbar)^2)."""
+        v = 0.1 + inter
+        u = np.log1p(v * v)
+        return np.exp(log_rbar - 0.5 * u + np.sqrt(u) * z)
+
     def rtt_draw(self, j: int, a: int, busy_until: np.ndarray,
                  now: float) -> np.ndarray:
         """True RTT per candidate under the given occupancy snapshot
         (log-normal with co-location interference, Eqs. 10-11)."""
         p = self.app_prep(a, self.in_drift(now))
-        busy = busy_until > now                                  # (T, R)
-        # interference on a candidate = sum of weights of busy replicas
-        # sharing its node.  Bucket busy weights per (trial, node) with
-        # one bincount — O(T*R) instead of the O(T*C*R) mask product —
-        # then gather each candidate's bucket.
-        g = np.bincount(self._flat_nodes, weights=(busy * p.weight).ravel(),
-                        minlength=self._tn)
+        g = self._node_buckets(p, busy_until, now)
         inter = g[p.cand_flat].reshape(p.speed.shape)            # (T, C)
-        # log-normal moment matching with s = rbar * (0.1 + inter):
-        # mu = log(rbar) - u/2, sigma = sqrt(u), u = log(1 + (s/rbar)^2)
-        v = 0.1 + inter
-        u = np.log1p(v * v)
-        sigma_z = np.sqrt(u) * self.z_rtt[:, j, None]
-        x = np.exp(p.log_rbar - 0.5 * u + sigma_z)               # (T, C)
+        x = self._lognormal(p.log_rbar, inter, self.z_rtt[:, j, None])
         return x * p.speed                                       # Eq. 10
 
     def rtt_draw_at(self, j: int, a: int, busy_until: np.ndarray,
@@ -293,16 +334,13 @@ class _Cluster:
         without materialising the other candidates.  Every op is
         elementwise in the candidate axis, so values are bit-identical
         to ``rtt_draw(...)[trial, picks]`` — the fast path for policies
-        that never read the full RTT/prediction matrix."""
+        that never read the full RTT/prediction matrix
+        (``tests/test_capacity.py`` pins the equivalence)."""
         p = self.app_prep(a, self.in_drift(now))
-        busy = busy_until > now
-        g = np.bincount(self._flat_nodes, weights=(busy * p.weight).ravel(),
-                        minlength=self._tn)
+        g = self._node_buckets(p, busy_until, now)
         T = len(self.node_of)
         flat = p.cand_flat.reshape(T, -1)[self._trial, picks]
-        v = 0.1 + g[flat]                                        # (T,)
-        u = np.log1p(v * v)
-        x = np.exp(p.log_rbar - 0.5 * u + np.sqrt(u) * self.z_rtt[:, j])
+        x = self._lognormal(p.log_rbar, g[flat], self.z_rtt[:, j])
         return x * p.speed[self._trial, picks]
 
 
@@ -342,6 +380,13 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
     if cfg.churn is not None:
         failed_node = np.random.default_rng(cfg.seed + 3).integers(
             0, cfg.n_nodes, size=T)
+    preempted_node = None
+    if cfg.preempt is not None:
+        if cfg.capacity is None:
+            raise ValueError("preempt requires a CapacityConfig (the "
+                             "elastic replica set handles the takeback)")
+        preempted_node = np.random.default_rng((37, cfg.seed)).integers(
+            0, cfg.n_nodes, size=T)
     mean_rtt = np.array([APPS[a][0] for a in cfg.apps])
     # post-drift regime: redrawn interference mix, reshuffled node
     # speeds, rescaled app means — all from drift-salted generators so
@@ -370,12 +415,20 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
         imat=imat, node_of=node_of, accel=accel,
         req_app=req_app, req_t=req_t, z_rtt=z_rtt, z_pred=z_pred,
         failed_node=failed_node, imat_post=imat_post,
-        accel_post=accel_post, mean_rtt_post=mean_rtt_post)
+        accel_post=accel_post, mean_rtt_post=mean_rtt_post,
+        preempted_node=preempted_node)
 
 
 class _Metrics:
     """Per-trial accumulation: full RTT matrix (for tail percentiles and
-    the per-app breakdown), resource-seconds, assignments."""
+    the per-app breakdown), resource-seconds, assignments, and the
+    capacity plane's waste / shed / SLO accounting (DESIGN.md §12).
+
+    Shed requests carry NaN in the RTT matrix and -1 in ``chosen``;
+    RTT stats then become nan-aware (the guard is the CONFIG — capacity
+    with admission control enabled — not the data, so batched and
+    serial campaign runs always take the same code path).
+    """
 
     def __init__(self, cfg: SimConfig):
         T, J = cfg.n_trials, cfg.n_requests
@@ -386,30 +439,89 @@ class _Metrics:
         self.chosen = np.zeros((T, J), dtype=np.int64)
         self.n_hedged = 0
         self.hedged = np.zeros(T, dtype=np.int64)   # per-trial hedge count
+        # capacity-plane accounting (reported for EVERY run: without a
+        # CapacityConfig the whole pool counts as provisioned and the
+        # accounting SLO defaults to DEFAULT_SLO_S)
+        self.slo = cfg.capacity.slo_target_s if cfg.capacity is not None \
+            else DEFAULT_SLO_S
+        self._nan_stats = cfg.capacity is not None \
+            and cfg.capacity.admission_limit_s is not None
+        self.busy_s = np.zeros(T)           # replica-seconds of service
+        self.slo_violation_s = np.zeros(T)  # response time above the SLO
+        self.shed = np.zeros((T, J), bool)
+        self.n_fallback = 0                 # least_conn-fallback routings
 
     def add(self, j: int, response: np.ndarray, cpu: np.ndarray,
-            mem: np.ndarray, rep: np.ndarray):
+            mem: np.ndarray, rep: np.ndarray, rtt: np.ndarray,
+            shed: Optional[np.ndarray] = None):
         self.rtts[:, j] = response
         self.cpu_s += cpu
         self.mem_s += mem
-        self.chosen[:, j] = rep
+        if shed is None:
+            self.chosen[:, j] = rep
+            self.busy_s += rtt
+            self.slo_violation_s += np.maximum(response - self.slo, 0.0)
+        else:
+            served = ~shed
+            self.chosen[:, j] = np.where(shed, -1, rep)
+            self.shed[:, j] = shed
+            self.busy_s += np.where(served, rtt, 0.0)
+            self.slo_violation_s += np.where(
+                served, np.maximum(response - self.slo, 0.0), 0.0)
 
-    def summary(self, cluster: _Cluster) -> Dict[str, np.ndarray]:
-        p50, p95, p99 = np.percentile(self.rtts, [50, 95, 99], axis=1)
-        per_app = {}
-        for i, name in enumerate(self.cfg.apps):
-            mask = cluster.req_app == i
-            if mask.any():
-                per_app[name] = self.rtts[:, mask].mean(axis=1)
-        return {"mean_rtt": self.rtts.mean(axis=1),
-                "p50_rtt": p50, "p95_rtt": p95, "p99_rtt": p99,
-                "per_app": per_app,
-                "cpu_s": self.cpu_s, "mem_s": self.mem_s,
-                "chosen": self.chosen, "n_hedged": self.n_hedged,
-                "hedged_per_trial": self.hedged,
-                # raw per-request views (windowed analyses, e.g. the
-                # post-drift recovery metric in benchmarks/bench_online)
-                "rtts": self.rtts, "req_t": cluster.req_t}
+    def _stat_fns(self):
+        if not self._nan_stats:
+            return np.mean, np.percentile
+        return np.nanmean, np.nanpercentile
+
+    def summary(self, cluster: _Cluster,
+                busy_until: Optional[np.ndarray] = None,
+                capacity: Optional[CapacityController] = None
+                ) -> Dict[str, np.ndarray]:
+        mean_fn, pct_fn = self._stat_fns()
+        with warnings.catch_warnings():
+            # all-shed slices legitimately yield NaN stats
+            warnings.simplefilter("ignore", RuntimeWarning)
+            p50, p95, p99 = pct_fn(self.rtts, [50, 95, 99], axis=1)
+            per_app = {}
+            for i, name in enumerate(self.cfg.apps):
+                mask = cluster.req_app == i
+                if mask.any():
+                    per_app[name] = mean_fn(self.rtts[:, mask], axis=1)
+            mean_rtt = mean_fn(self.rtts, axis=1)
+        # replica-seconds provisioned: the capacity ledger when elastic,
+        # else the full pool over the per-trial horizon (which covers
+        # every completion, so waste = idle fraction stays in [0, 1])
+        t_end = float(cluster.req_t[-1])
+        if busy_until is not None:
+            t_end = np.maximum(t_end, busy_until.max(axis=1))
+        if capacity is not None:
+            capacity.finalize(t_end)
+            provisioned = capacity.prov_s.copy()
+        else:
+            provisioned = len(cluster.app_of) * np.asarray(t_end, float) \
+                * np.ones(len(self.rtts))
+        waste = np.clip(1.0 - self.busy_s / np.maximum(provisioned, 1e-9),
+                        0.0, 1.0)
+        out = {"mean_rtt": mean_rtt,
+               "p50_rtt": p50, "p95_rtt": p95, "p99_rtt": p99,
+               "per_app": per_app,
+               "cpu_s": self.cpu_s, "mem_s": self.mem_s,
+               "chosen": self.chosen, "n_hedged": self.n_hedged,
+               "hedged_per_trial": self.hedged,
+               # capacity-plane accounting (DESIGN.md §12)
+               "provisioned_s": provisioned, "busy_s": self.busy_s,
+               "waste": waste,
+               "shed_rate": self.shed.mean(axis=1),
+               "n_shed": int(self.shed.sum()),
+               "slo_violation_s": self.slo_violation_s,
+               "n_fallback": self.n_fallback,
+               # raw per-request views (windowed analyses, e.g. the
+               # post-drift recovery metric in benchmarks/bench_online)
+               "rtts": self.rtts, "req_t": cluster.req_t}
+        if capacity is not None:
+            out["capacity"] = capacity.telemetry()
+        return out
 
 
 class SimStepper:
@@ -463,33 +575,88 @@ class SimStepper:
             outages = ((t0, t0 + duration),)
         self.snapshot = PeriodicRefresh(cfg.prediction_lag_s, outages) \
             if (cfg.prediction_lag_s > 0 or outages) else None
-        self.churn_pending = cfg.churn is not None
+        # membership-event timeline (DESIGN.md §12): node churn, spot
+        # preemption, and autoscaler epochs all queue here and are
+        # applied, in time order, before each request routes
+        self._events: List[MembershipEvent] = []
+        self._seq = 0
+        if cfg.churn is not None:
+            self._push_event(cfg.churn[0], "churn")
+        self.capacity: Optional[CapacityController] = None
+        if cfg.capacity is not None:
+            self.capacity = CapacityController(
+                cfg.capacity, cluster.app_of, cluster.node_of,
+                cluster.mean_rtt, cluster.req_app, cluster.req_t,
+                cluster.preempted_node)
+            self._push_event(cfg.capacity.decide_every_s, "scale")
+            if cfg.preempt is not None:
+                self._push_event(cfg.preempt[0], "preempt_down")
+                self._push_event(cfg.preempt[0] + cfg.preempt[1],
+                                 "preempt_up")
+
+    def _push_event(self, t: float, kind: str):
+        heapq.heappush(self._events,
+                       MembershipEvent(float(t), self._seq, kind))
+        self._seq += 1
+
+    def _advance_membership(self, now: float):
+        """Apply every queued membership event with ``t <= now``: the
+        churn busy-bump (numerically identical to the old one-shot
+        latch), spot preemption windows, and autoscaler epochs."""
+        while self._events and self._events[0].t <= now:
+            ev = heapq.heappop(self._events)
+            if ev.kind == "churn":
+                down = self.cluster.node_of \
+                    == self.cluster.failed_node[:, None]         # (T, R)
+                t_up = self.cfg.churn[0] + self.cfg.churn[1]
+                self.busy_until = np.where(
+                    down, np.maximum(self.busy_until, t_up),
+                    self.busy_until)
+            elif ev.kind == "scale":
+                self.capacity.decide(ev.t, self.busy_until)
+                self._push_event(ev.t + self.cfg.capacity.decide_every_s,
+                                 "scale")
+            elif ev.kind == "preempt_down":
+                self.capacity.preempt(ev.t, self.busy_until)
+            elif ev.kind == "preempt_up":
+                self.capacity.restore(ev.t)
 
     def step(self, j: int):
         cluster, cfg = self.cluster, self.cfg
-        busy_until, trial = self.busy_until, self.trial
         a = int(cluster.req_app[j])
         now = float(cluster.req_t[j])
 
-        if self.churn_pending and now >= cfg.churn[0]:
-            down = cluster.node_of == cluster.failed_node[:, None]  # (T, R)
-            t_up = cfg.churn[0] + cfg.churn[1]
-            self.busy_until = busy_until = np.where(
-                down, np.maximum(busy_until, t_up), busy_until)
-            self.churn_pending = False
+        self._advance_membership(now)
+        busy_until, trial = self.busy_until, self.trial
 
         prep = cluster.app_prep(a)
         candidates = prep.candidates
 
+        # capacity plane: wake scale-from-zero apps, evaluate admission,
+        # and expose the routable mask + cold-replica degradation
+        capacity = self.capacity
+        active = cold = shed = served = None
+        if capacity is not None:
+            capacity.wake(a, now)
+            shed = capacity.shed_mask(candidates, busy_until, now)
+            served = None if shed is None else ~shed
+            active = capacity.active_for(candidates)
+            cold = capacity.cold_mult(candidates, now)
+
+        predicted = fleet_X = fleet_pred = None
         if self.reactive:
             state = ClusterState(now=now,
-                                 busy_until=busy_until[:, candidates])
+                                 busy_until=busy_until[:, candidates],
+                                 active=active)
             picks = self.pol.pick(state)
             rep = candidates[picks]
             rtt = cluster.rtt_draw_at(j, a, busy_until, now, picks)
+            if cold is not None:
+                rtt = rtt * cold[trial, picks]
         else:
             actual = cluster.rtt_draw(j, a, busy_until, now)
-            predicted = fleet_X = fleet_pred = None
+            if cold is not None:
+                actual = actual * cold      # cold replicas serve degraded
             if self.fleet is not None:
                 # closed loop: the fleet folds completed observations,
                 # retrains on its cadence, and scores the same (stale,
@@ -509,6 +676,7 @@ class SimStepper:
                     # the prediction leaves score = queue wait exactly
                     ok = self.fleet.viable(a, cfg.fallback_threshold)
                     predicted = np.where(ok[:, None], fleet_pred, 0.0)
+                    self.metrics.n_fallback += int((~ok).sum())
             elif self.needs_pred:
                 # predicted RTT: Eq. 12 with eps = (1 - p) * actual,
                 # computed on the (possibly stale) occupancy snapshot the
@@ -523,15 +691,21 @@ class SimStepper:
                     pred_basis = cluster.rtt_draw(j, a, stale_busy, now)
                 else:
                     pred_basis = actual
+                if cold is not None and pred_basis is not actual:
+                    # the predictor knows membership state: cold
+                    # replicas are predicted slow too ("actual" already
+                    # carries the factor)
+                    pred_basis = pred_basis * cold
                 eps = (1.0 - cfg.accuracy) * pred_basis
                 predicted = pred_basis + eps * prep.z_pred[:, j, :]
 
             state = ClusterState(now=now,
                                  busy_until=busy_until[:, candidates],
-                                 predicted=predicted, actual=actual)
+                                 predicted=predicted, actual=actual,
+                                 active=active)
             if self.hedging:
                 scores = self.pol.score(state)  # reused by hedge_plan
-                picks = np.argmin(scores, axis=1)
+                picks = np.argmin(state.mask_inactive(scores), axis=1)
                 self.pol.update(state, picks)
             else:
                 picks = self.pol.pick(state)
@@ -541,35 +715,67 @@ class SimStepper:
         if self.fleet is not None:
             # the routed request is the training signal: picked
             # candidate's features, its true RTT, and when it completes
+            # (shed trials contribute nothing)
             self.fleet.observe(a, fleet_X[trial, picks], rtt, finish,
-                               fleet_pred[trial, picks])
+                               fleet_pred[trial, picks], served=served)
+        if capacity is not None:
+            # feed the autoscaler's signals: the drained-replica
+            # invariant, and the service-RTT estimate (route-time fleet
+            # forecast when predictions exist, completion-folded
+            # observations otherwise — never clairvoyant)
+            capacity.check_routed(rep, served)
+            if fleet_pred is not None:
+                capacity.note_prediction(a, fleet_pred[trial, picks],
+                                         served)
+            elif predicted is not None:
+                capacity.note_prediction(a, predicted[trial, picks],
+                                         served)
+            else:
+                capacity.note_completion(a, rtt, finish, served)
         cpu = cluster.cpu_req[a] * rtt
         mem = cluster.mem_req[a] * rtt
 
         if self.hedging:
             second, mask = self.pol.hedge_plan(state, picks, scores)
+            if served is not None:
+                mask = mask & served
             rep2 = candidates[second]
             rtt2 = actual[trial, second]
             finish2 = np.maximum(now, busy_until[trial, rep2]) + rtt2
             response = np.where(mask, np.minimum(finish, finish2),
                                 finish) - now
-            busy_until[trial, rep] = finish
+            response, cpu, mem = self._settle(served, response, finish,
+                                              rep, cpu, mem)
             hm = np.flatnonzero(mask)
             busy_until[hm, rep2[hm]] = finish2[hm]    # duplicate occupies
             cpu = cpu + mask * cluster.cpu_req[a] * rtt2   # resource waste
             mem = mem + mask * cluster.mem_req[a] * rtt2
+            self.metrics.busy_s += mask * rtt2
             self.metrics.n_hedged += int(mask.sum())
             self.metrics.hedged += mask
         else:
-            response = finish - now
-            busy_until[trial, rep] = finish
+            response, cpu, mem = self._settle(served, finish - now,
+                                              finish, rep, cpu, mem)
 
-        self.metrics.add(j, response, cpu, mem, rep)
+        self.metrics.add(j, response, cpu, mem, rep, rtt, shed)
+
+    def _settle(self, served, response, finish, rep, cpu, mem):
+        """Commit the routed request's occupancy and mask the shed
+        trials out of the response/resource accounting (one place, both
+        the hedged and plain paths)."""
+        if served is None:
+            self.busy_until[self.trial, rep] = finish
+            return response, cpu, mem
+        ok = np.flatnonzero(served)
+        self.busy_until[ok, rep[ok]] = finish[ok]
+        return (np.where(served, response, np.nan),
+                np.where(served, cpu, 0.0), np.where(served, mem, 0.0))
 
     def run(self) -> Dict[str, np.ndarray]:
         for j in range(self.cfg.n_requests):
             self.step(j)
-        summary = self.metrics.summary(self.cluster)
+        summary = self.metrics.summary(self.cluster, self.busy_until,
+                                       self.capacity)
         if self.fleet is not None:
             self.fleet.fold_pending(np.inf)   # everything has completed
             summary["online"] = self.fleet.stats()

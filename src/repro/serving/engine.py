@@ -52,6 +52,11 @@ class ServingEngine:
         self.rng = np.random.default_rng(seed)
         self._tok_count = 0
         self._t_last = self.clock.now()
+        # capacity plane (DESIGN.md §12): an inactive engine takes no
+        # NEW work but still drains its queue; busy_s feeds the pool's
+        # replica-seconds-busy side of the waste ledger
+        self.active = True
+        self.busy_s = 0.0
 
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, cache_len=max_seq))
@@ -84,6 +89,7 @@ class ServingEngine:
         decode to completion, return finished requests."""
         if not self.queue:
             return []
+        t_wave0 = self.clock.now()
         wave = self.queue[: self.max_batch]
         self.queue = self.queue[self.max_batch:]
         B = len(wave)
@@ -119,6 +125,7 @@ class ServingEngine:
             self._export()
         jax.block_until_ready(logits)
         now = self.clock.now()
+        self.busy_s += now - t_wave0       # wall/clock time spent serving
         for i, r in enumerate(wave):
             r.t_done = now
             r.output = np.array(outs[i][: r.max_new_tokens])

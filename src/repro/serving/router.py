@@ -24,6 +24,16 @@ request's measured RTT at ``drain`` time through the same
 simulator uses, and when the fleet's rolling accuracy drops below
 ``fallback_threshold`` the router serves requests via ``least_conn``
 until retraining (e.g. an ``OnlineAdapter`` hot-swap) restores it.
+
+It also mirrors the capacity plane (DESIGN.md §12): with a
+:class:`~repro.core.capacity.CapacityConfig` the router manages its
+replicas through an :class:`~repro.core.capacity.EnginePool` — the
+autoscaler grows/shrinks the active engine set on the same decision
+rules the simulator uses, drained engines are masked out of the
+policy's ClusterState (they still serve their queues), the admission
+hook sheds requests the active set cannot bound (``route`` returns
+-1), and ``pool.ledger()`` reports the serving-side (provisioned,
+busy, waste, shed) accounting.
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
+from repro.core.capacity import CapacityConfig, EnginePool
 from repro.core.knowledge import KnowledgeBase
 from repro.core.online import RollingAccuracy
 from repro.core.prediction_plane import PredictionPlane
@@ -45,7 +56,8 @@ class MorpheusRouter:
                  plane: Optional[PredictionPlane] = None,
                  hedge_factor: Optional[float] = None, seed: int = 0,
                  fallback_threshold: float = 0.0,
-                 accuracy_window: int = 40):
+                 accuracy_window: int = 40,
+                 capacity: Optional[CapacityConfig] = None):
         self.replicas = list(replicas)
         self.policy_name = policy
         self.policy = make_policy(policy, seed=seed, hedge_factor=hedge_factor)
@@ -64,6 +76,10 @@ class MorpheusRouter:
         self.fallbacks = 0                    # requests routed via fallback
         self._fallback_policy = make_policy("least_conn", seed=seed)
         self._inflight: List[Tuple[Request, int, float]] = []
+        # capacity plane (DESIGN.md §12): elastic engine pool + admission
+        self.pool = None if capacity is None \
+            else EnginePool(self.replicas, capacity)
+        self.shed: List[Request] = []         # admission-rejected requests
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
@@ -138,12 +154,28 @@ class MorpheusRouter:
             waves = np.ceil(queue
                             / np.array([r.max_batch for r in self.replicas]))
             wait_est = predicted * waves
+            if self.pool is not None and np.isfinite(predicted).any():
+                self.pool.note_prediction(
+                    float(predicted[np.isfinite(predicted)].mean()))
+        active = None if self.pool is None \
+            else self.pool.active_mask()[None, :]
         return ClusterState(now=0.0, busy_until=wait_est[None, :],
                             queue_depth=queue[None, :],
                             predicted=None if predicted is None
-                            else predicted[None, :])
+                            else predicted[None, :], active=active)
 
     def route(self, req: Request) -> int:
+        """Route one request; returns the replica index, or -1 when the
+        capacity plane's admission control sheds it (the request is
+        recorded in ``self.shed`` and not enqueued anywhere)."""
+        if self.pool is not None:
+            # capacity epoch: scale decisions ride the request clock,
+            # wake from zero, then gate admission
+            now = self.pool.clock.now()
+            self.pool.on_request(now)
+            if not self.pool.admit(now):
+                self.shed.append(req)
+                return -1
         use_pred = isinstance(self.policy, PerfAware)
         fell_back = use_pred and not self.predictions_viable()
         # predictions are still computed and reconciled while fallen
@@ -154,7 +186,8 @@ class MorpheusRouter:
             self.fallbacks += 1
             reactive = ClusterState(
                 now=0.0, busy_until=np.zeros((1, len(self.replicas))),
-                queue_depth=self._queue_proxy()[None, :])
+                queue_depth=self._queue_proxy()[None, :],
+                active=state.active)
             i = int(self._fallback_policy.pick(reactive)[0])
         else:
             i = int(self.policy.pick(state)[0])

@@ -1,0 +1,341 @@
+"""Capacity plane (DESIGN.md §12): autoscaler semantics, the elastic
+replica set's invariants, admission control, waste accounting, and the
+predictive-vs-reactive Pareto gate (smoke grid here, full grid slow).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import (SUMMARY_STATS, run_campaign_serial,
+                                 run_scenario)
+from repro.core.capacity import CapacityConfig
+from repro.core.scenarios import ScenarioSpec, get_scenario
+from repro.core.simulator import SimConfig, _build_cluster, run_sim
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+CAPACITY_SCENARIOS = ("overload-ramp", "flash-crowd-autoscale",
+                      "scale-to-zero-idle", "spot-preemption")
+
+
+# ---------------------------------------------------------------------------
+# config + registry
+# ---------------------------------------------------------------------------
+def test_capacity_config_validation():
+    with pytest.raises(ValueError, match="autoscaler"):
+        CapacityConfig(autoscaler="clairvoyant")
+    with pytest.raises(ValueError, match="min_replicas"):
+        CapacityConfig(min_replicas=-1)
+    with pytest.raises(ValueError, match="rho_target"):
+        CapacityConfig(rho_target=0.0)
+    assert CapacityConfig(min_replicas=0, initial_replicas=1).initial == 1
+    assert CapacityConfig(min_replicas=0).initial == 1   # never start empty
+    assert CapacityConfig(min_replicas=3).initial == 3
+
+
+def test_registry_has_capacity_scenarios():
+    for name in CAPACITY_SCENARIOS:
+        spec = get_scenario(name)
+        assert spec.capacity is not None, name
+    assert get_scenario("spot-preemption").preempt is not None
+    assert get_scenario("scale-to-zero-idle").capacity.min_replicas == 0
+
+
+def test_preempt_requires_capacity():
+    with pytest.raises(ValueError, match="[Cc]apacity"):
+        ScenarioSpec(name="bad", preempt=(10.0, 20.0))
+    with pytest.raises(ValueError, match="[Cc]apacity"):
+        _build_cluster(SimConfig(n_trials=2, preempt=(10.0, 20.0)))
+
+
+# ---------------------------------------------------------------------------
+# satellite: rtt_draw / rtt_draw_at share one helper — pin equivalence
+# ---------------------------------------------------------------------------
+def test_rtt_draw_at_matches_full_draw():
+    """rtt_draw_at(j, a, busy, now, picks) must stay BIT-identical to
+    rtt_draw(j, a, busy, now)[trial, picks] (the shared node-bucket +
+    log-normal helpers guarantee it by construction)."""
+    cfg = SimConfig(n_trials=12, n_requests=40, seed=3)
+    cluster = _build_cluster(cfg)
+    rng = np.random.default_rng(0)
+    trial = np.arange(cfg.n_trials)
+    R = len(cluster.app_of)
+    for j in (0, 7, 23):
+        a = int(cluster.req_app[j])
+        now = float(cluster.req_t[j])
+        busy = rng.uniform(0.0, 2.0 * now + 5.0, size=(cfg.n_trials, R))
+        C = (cluster.app_of == a).sum()
+        picks = rng.integers(0, C, size=cfg.n_trials)
+        full = cluster.rtt_draw(j, a, busy, now)
+        at = cluster.rtt_draw_at(j, a, busy, now, picks)
+        np.testing.assert_array_equal(at, full[trial, picks])
+
+
+# ---------------------------------------------------------------------------
+# properties: mask routing, waste bounds, admission
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", CAPACITY_SCENARIOS)
+@pytest.mark.parametrize("policy", ("perf_aware", "least_conn",
+                                    "round_robin", "random"))
+def test_never_routes_to_a_drained_replica(name, policy):
+    """The elastic-membership invariant: across every capacity scenario
+    and policy, no served request ever lands on an inactive replica
+    (the controller counts violations on every step)."""
+    cfg = get_scenario(name).compile(seed=1, n_trials=4, n_requests=120)
+    res = run_sim(cfg, policy)
+    assert res["capacity"]["routed_inactive"] == 0, (name, policy)
+
+
+@pytest.mark.parametrize("name", CAPACITY_SCENARIOS)
+def test_waste_is_a_fraction(name):
+    """waste = idle-provisioned fraction must live in [0, 1]: busy
+    replica-seconds can never exceed provisioned (drain tails are paid,
+    reactivation refunds the overlap)."""
+    cfg = get_scenario(name).compile(seed=2, n_trials=4, n_requests=120)
+    res = run_sim(cfg, "perf_aware")
+    assert ((res["waste"] >= 0.0) & (res["waste"] <= 1.0)).all(), name
+    assert (res["busy_s"] <= res["provisioned_s"] + 1e-9).all(), name
+    assert (res["busy_s"] > 0).all(), name
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_waste_bounds_hold_under_random_knobs(seed):
+    """Randomised capacity knobs (autoscaler kind, warmup, admission,
+    min/max) cannot push the ledger out of its invariant."""
+    rng = np.random.default_rng(seed)
+    cap = CapacityConfig(
+        autoscaler=("predictive", "reactive", "fixed")[int(rng.integers(3))],
+        min_replicas=int(rng.integers(0, 3)),
+        initial_replicas=int(rng.integers(1, 4)),
+        decide_every_s=float(rng.uniform(2.0, 10.0)),
+        warmup_s=float(rng.uniform(0.0, 15.0)),
+        cold_rtt_factor=float(rng.uniform(1.0, 3.0)),
+        rho_target=float(rng.uniform(0.4, 0.95)),
+        admission_limit_s=None if rng.random() < 0.5
+        else float(rng.uniform(10.0, 60.0)))
+    cfg = SimConfig(n_trials=3, n_requests=60, seed=int(seed),
+                    arrival_rate=float(rng.uniform(0.5, 4.0)),
+                    capacity=cap)
+    res = run_sim(cfg, "perf_aware")
+    assert ((res["waste"] >= 0.0) & (res["waste"] <= 1.0)).all()
+    assert (res["busy_s"] <= res["provisioned_s"] + 1e-9).all()
+    assert res["capacity"]["routed_inactive"] == 0
+
+
+def test_admission_sheds_under_hopeless_overload():
+    """A tiny pinned pool under heavy arrivals must shed: NaN responses,
+    chosen = -1, shed_rate > 0 — and served stats stay finite."""
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=1,
+                         max_replicas=1, min_replicas=1,
+                         admission_limit_s=10.0)
+    cfg = SimConfig(n_trials=6, n_requests=150, arrival_rate=6.0,
+                    seed=0, capacity=cap)
+    res = run_sim(cfg, "perf_aware")
+    assert res["n_shed"] > 0
+    assert (res["shed_rate"] > 0).any()
+    shed = res["chosen"] == -1
+    assert shed.sum() == res["n_shed"]
+    assert np.isnan(res["rtts"][shed]).all()
+    assert np.isfinite(res["rtts"][~shed]).all()
+    assert np.isfinite(res["mean_rtt"]).all()   # nan-aware served stats
+    # shed requests consume no resources
+    assert (res["busy_s"] <= res["provisioned_s"]).all()
+
+
+def test_no_admission_limit_never_sheds():
+    cap = CapacityConfig(admission_limit_s=None)
+    cfg = SimConfig(n_trials=4, n_requests=80, arrival_rate=6.0, seed=1,
+                    capacity=cap)
+    res = run_sim(cfg, "perf_aware")
+    assert res["n_shed"] == 0 and res["shed_rate"].sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# autoscaler semantics
+# ---------------------------------------------------------------------------
+def test_scale_to_zero_drains_and_wakes():
+    """min_replicas=0: idle valleys drain the pool to zero and the next
+    arrival wakes it (cold) — wakeups observed, invariant intact."""
+    cfg = get_scenario("scale-to-zero-idle").compile(seed=0, n_trials=4)
+    res = run_sim(cfg, "perf_aware")
+    cap = res["capacity"]
+    assert (cap["wakeups"] > 0).all()
+    assert (cap["scale_downs"] > 0).all()
+    assert cap["routed_inactive"] == 0
+
+
+def test_fixed_autoscaler_never_scales():
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=2)
+    cfg = SimConfig(n_trials=3, n_requests=60, seed=0, capacity=cap)
+    res = run_sim(cfg, "perf_aware")
+    assert (res["capacity"]["scale_ups"] == 0).all()
+    assert (res["capacity"]["scale_downs"] == 0).all()
+    assert (res["capacity"]["active_final"]
+            == 2 * len(cfg.apps)).all()
+
+
+def test_predictive_tracks_demand_reactive_lags():
+    """On the overload ramp the predictive autoscaler must both reach a
+    better p95 than the +-1 reactive rule AND hand capacity back (lower
+    waste) — the Pareto relation the bench gates, asserted here on a
+    small grid so plain pytest catches regressions early."""
+    spec = get_scenario("overload-ramp")
+    out = {}
+    for kind in ("predictive", "reactive"):
+        cfg = spec.compile(seed=0, n_trials=6,
+                           capacity=replace(spec.capacity,
+                                            autoscaler=kind))
+        res = run_sim(cfg, "perf_aware")
+        out[kind] = (float(np.nanmean(res["p95_rtt"])),
+                     float(res["waste"].mean()))
+    (p95_p, waste_p), (p95_r, waste_r) = out["predictive"], out["reactive"]
+    assert p95_p <= p95_r * 1.02, out
+    assert waste_p < waste_r, out
+
+
+def test_cold_replicas_serve_degraded():
+    """Scale-ups come up cold: with a large cold_rtt_factor the same
+    scenario gets slower, so warm-up is genuinely modelled."""
+    spec = get_scenario("flash-crowd-autoscale")
+    base = spec.compile(seed=0, n_trials=6)
+    hot = run_sim(base, "perf_aware")
+    cold = run_sim(replace(base, capacity=replace(
+        spec.capacity, cold_rtt_factor=6.0, warmup_s=25.0)), "perf_aware")
+    assert np.nanmean(cold["mean_rtt"]) > np.nanmean(hot["mean_rtt"])
+
+
+def test_preemption_blocks_the_node_and_restores():
+    """During the preemption window no served request may land on the
+    preempted node; afterwards its replicas may serve again."""
+    spec = get_scenario("spot-preemption")
+    cfg = spec.compile(seed=0, n_trials=6)
+    res = run_sim(cfg, "perf_aware")
+    cluster = _build_cluster(cfg)
+    t0, dur = cfg.preempt
+    chosen, req_t = res["chosen"], res["req_t"]
+    # replicas' nodes per trial: (T, R); chosen is a replica index
+    node_hit = np.take_along_axis(
+        cluster.node_of, chosen.clip(min=0), axis=1)
+    on_preempted = node_hit == cluster.preempted_node[:, None]
+    window = (req_t >= t0) & (req_t < t0 + dur)
+    # allow the in-window requests routed BEFORE the event applies at
+    # the first in-window arrival: the event fires at that arrival, so
+    # every in-window request already sees the mask
+    assert not (on_preempted[:, window] & (chosen[:, window] >= 0)).any()
+    after = req_t >= t0 + dur
+    assert res["capacity"]["routed_inactive"] == 0
+    # the autoscaler can (and under steady load does) reuse the node
+    assert after.any()
+
+
+# ---------------------------------------------------------------------------
+# batched campaign parity ACROSS the capacity events
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,ov", [
+    # long enough horizons that the ramp/burst/preemption actually
+    # happen inside the run (the registry-wide parity test in
+    # test_campaign covers the scenarios too, but on a 50-request
+    # horizon that ends before most membership events fire)
+    ("overload-ramp", dict(n_requests=160)),
+    ("flash-crowd-autoscale", dict(n_requests=160)),
+    ("scale-to-zero-idle", dict(n_requests=120)),
+    ("spot-preemption", dict(n_requests=120, preempt=(15.0, 20.0))),
+])
+def test_capacity_event_crossing_batched_matches_serial(name, ov):
+    """Stacked multi-seed lockstep passes must make bit-identical
+    capacity decisions to per-seed serial runs even when autoscaler
+    epochs, wakes, shedding, and preemption all fire mid-run."""
+    kw = dict(seeds=(0, 1, 2), n_trials=3, **ov)
+    batched = run_scenario(name, **kw)
+    serial = run_campaign_serial([name], **kw)[name]
+    for pol in batched:
+        for k in SUMMARY_STATS + ("hedged",):
+            np.testing.assert_allclose(
+                batched[pol].per_seed[k], serial[pol].per_seed[k],
+                rtol=1e-5, atol=1e-7, err_msg=f"{name}/{pol}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# satellite: fallback interplay — least_conn fallback still accrues
+# utilization + waste accounting
+# ---------------------------------------------------------------------------
+def test_fallback_trials_still_accrue_waste_accounting():
+    """A closed-loop run whose trials fall back to least_conn (viability
+    rule armed, drifted fleet) must still account busy/provisioned
+    replica-seconds — fallback can't silently zero the waste metric."""
+    spec = get_scenario("drift-fallback")
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=4,
+                         admission_limit_s=None)
+    cfg = spec.compile(seed=0, n_trials=3, n_requests=200,
+                      online_warmup_s=8.0, retrain_every_s=0.0,
+                      t_drift=20.0, fallback_threshold=0.9,
+                      capacity=cap)
+    res = run_sim(cfg, "perf_aware")
+    assert res["n_fallback"] > 0          # the rule actually engaged
+    assert (res["busy_s"] > 0).all()      # utilization still accrued
+    assert ((res["waste"] > 0) & (res["waste"] < 1)).all()
+    assert (res["provisioned_s"] > 0).all()
+    assert res["capacity"]["routed_inactive"] == 0
+    # and WITHOUT the capacity plane the accounting still reports
+    plain = run_sim(replace(cfg, capacity=None), "perf_aware")
+    assert plain["n_fallback"] > 0
+    assert (plain["busy_s"] > 0).all()
+    assert ((plain["waste"] > 0) & (plain["waste"] < 1)).all()
+
+
+def test_summary_fields_present_on_every_run():
+    """The (waste, shed, SLO) triple is first-class on every summary —
+    capacity-less runs included (full pool provisioned, DEFAULT_SLO_S)."""
+    res = run_sim(SimConfig(n_trials=3, n_requests=30, seed=0),
+                  "least_conn")
+    for key in ("waste", "shed_rate", "slo_violation_s", "busy_s",
+                "provisioned_s", "n_shed", "n_fallback"):
+        assert key in res, key
+    assert "capacity" not in res
+    assert (res["shed_rate"] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the bench gate (smoke grid fast, full grid slow)
+# ---------------------------------------------------------------------------
+def _bench():
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "bench_capacity.py")
+    spec = importlib.util.spec_from_file_location("bench_capacity", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_pareto_gate_smoke():
+    """The CI acceptance gate on a reduced grid: predictive
+    Pareto-dominates reactive on both overload scenarios."""
+    bench = _bench()
+    results, _ = bench.bench(bench.GATED, tuple(range(4)), n_trials=4)
+    for name in bench.GATED:
+        cell = results[name]
+        assert bench.pareto_dominates(cell["predictive"],
+                                      cell["reactive"]), (name, cell)
+        assert cell["predictive"]["routed_inactive"] == 0
+
+
+@pytest.mark.slow
+def test_pareto_gate_full_grid():
+    """The full overload grid (all capacity scenarios x 12 seeds)."""
+    bench = _bench()
+    results, _ = bench.bench(bench.CAPACITY_SCENARIOS, tuple(range(12)))
+    for name in bench.GATED:
+        cell = results[name]
+        assert bench.pareto_dominates(cell["predictive"],
+                                      cell["reactive"]), (name, cell)
+    for name, cell in results.items():
+        for v in cell.values():
+            assert v["routed_inactive"] == 0
+            assert 0.0 <= v["waste"] <= 1.0

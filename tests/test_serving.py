@@ -5,6 +5,7 @@ import pytest
 import jax
 
 from repro.configs.base import get_config
+from repro.core.capacity import CapacityConfig
 from repro.models import model as M
 from repro.monitoring.metrics import SimClock
 from repro.serving.engine import Request, ServingEngine
@@ -199,6 +200,110 @@ def test_router_drain_settles_accuracy_tracker(tiny_setup):
     router.drain()
     assert len(router._inflight) == 0
     assert router.accuracy.count.sum() == 4   # every completion settled
+
+
+def test_router_capacity_pool_masks_drained_engines(tiny_setup):
+    """The serving-side capacity mirror (DESIGN.md §12): a fixed pool
+    smaller than the engine count keeps the standby engines drained —
+    the policy can never pick them — and the ledger reports the
+    provisioned/busy/waste triple."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock, slowdown=0.01)
+            for i in range(4)]
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=2,
+                         decide_every_s=1.0)
+    router = MorpheusRouter(reps, policy="round_robin", capacity=cap)
+    assert [e.active for e in reps] == [True, True, False, False]
+    rng = np.random.default_rng(6)
+    for r in _reqs(6, rng):
+        clock.advance(0.1)
+        assert router.route(r) in (0, 1)
+    done = router.drain()
+    assert len(done) == 6
+    led = router.pool.ledger()
+    assert led["provisioned_s"] > 0
+    assert led["busy_s"] > 0
+    assert 0.0 <= led["waste"] <= 1.0
+    assert led["shed"] == 0
+
+
+def test_router_capacity_admission_sheds(tiny_setup):
+    """The admission hook: once every active engine's estimated wait
+    exceeds the limit, route() returns -1 and records the shed request
+    instead of queueing unboundedly."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=1,
+                          max_seq=32, clock=clock) for i in range(2)]
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=2,
+                         admission_limit_s=0.5)
+    router = MorpheusRouter(reps, policy="least_conn", capacity=cap)
+    router.pool.note_prediction(10.0)     # each queued wave ~10s of wait
+    rng = np.random.default_rng(7)
+    results = [router.route(r) for r in _reqs(6, rng)]
+    assert -1 in results                  # deep queues -> shed
+    assert router.pool.shed == results.count(-1) == len(router.shed)
+    served = [i for i in results if i >= 0]
+    assert len(router.drain()) == len(served)
+
+
+def test_router_capacity_scales_up_reactively(tiny_setup):
+    """Queue pressure grows the active set on the decision cadence."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=1,
+                          max_seq=32, clock=clock) for i in range(3)]
+    cap = CapacityConfig(autoscaler="reactive", initial_replicas=1,
+                         min_replicas=1, decide_every_s=1.0,
+                         cooldown_s=0.0, hi_util=0.5)
+    router = MorpheusRouter(reps, policy="least_conn", capacity=cap)
+    assert sum(e.active for e in reps) == 1
+    rng = np.random.default_rng(8)
+    for r in _reqs(8, rng):
+        router.route(r)
+        clock.advance(1.1)                # queues stay busy -> util 1.0
+    assert sum(e.active for e in reps) > 1
+    assert any(d > 0 for _, d in router.pool.scale_events)
+
+
+def test_pool_ledger_pays_drain_tails(tiny_setup):
+    """Scale-down with queued work: the drained engines' remaining
+    serving time is still provisioned, so busy_s can never exceed
+    provisioned_s (waste stays a true fraction, not a clipped 0)."""
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=1,
+                          max_seq=32, clock=clock, slowdown=0.02)
+            for i in range(3)]
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=3,
+                         decide_every_s=1.0)
+    router = MorpheusRouter(reps, policy="round_robin", capacity=cap)
+    rng = np.random.default_rng(10)
+    for r in _reqs(6, rng):
+        router.route(r)
+    # operator forces a scale-down while every engine holds queued work
+    for e in reps[1:]:
+        e.active = False
+    router.drain()                       # inactive engines still drain
+    clock.advance(0.5)
+    led = router.pool.ledger()
+    assert led["busy_s"] <= led["provisioned_s"] + 1e-9, led
+    assert led["waste"] >= 0.0
+
+
+def test_engine_accumulates_busy_seconds(tiny_setup):
+    cfg, params = tiny_setup
+    clock = SimClock()
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=32, clock=clock,
+                        slowdown=0.01)
+    assert eng.busy_s == 0.0
+    rng = np.random.default_rng(9)
+    for r in _reqs(2, rng):
+        eng.submit(r)
+    eng.step_wave()
+    assert eng.busy_s > 0.0
 
 
 def test_router_round_robin_spreads(tiny_setup):
