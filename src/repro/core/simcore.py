@@ -1,0 +1,1348 @@
+"""Compiled simulator core (DESIGN.md §13): the §6 event loop as one
+fixed-shape ``lax.scan`` kernel.
+
+The serial :class:`~repro.core.simulator.SimStepper` pays a Python
+iteration per request; this module lowers the SAME per-request update to
+a jitted scan over the request grid, with every piece of mutable state
+held as dense arrays carried through the scan:
+
+* replica occupancy ``busy_until`` as a dense ``(T, R)`` carry (serial
+  semantics: never decreases per replica);
+* membership events — node churn, autoscaler epochs, spot preemption —
+  from the :func:`~repro.core.capacity.membership_timeline` lowered to
+  masked time-indexed updates (churn becomes an idempotent per-step
+  ``max`` bump; capacity events are walked by an in-kernel pointer +
+  ``lax.while_loop``, so each event fires exactly once, in heap order);
+* policy scoring reuses the exact arithmetic of the vectorized
+  ``Policy.score`` batch axis (``BUSY_PENALTY``, argmin-first tie
+  break, ``mask_inactive``) — in-kernel, per step;
+* the capacity plane (decide / wake / preempt / admission / ledger) and
+  the closed-loop :class:`~repro.core.online.OnlineFleet` (ridge
+  retrains via ``jnp.linalg.solve``, rolling-accuracy fallback) are
+  carried as dense per-trial state with the serial update order
+  preserved step for step.
+
+**Serial-reference contract**: the serial stepper is the semantics; the
+kernel must agree with it to <= 1e-5 relative on every summary stat for
+every supported config (``tests/test_simcore.py`` gates all registered
+scenarios).  All float state runs under ``jax.experimental.enable_x64``
+so the only divergence from the numpy path is libm/XLA ulp noise.
+Pre-drawn noise (``_Cluster.z_rtt`` / ``z_pred`` / the RandomChoice
+stream) is fed in as scan inputs, so compiled and serial runs consume
+bit-identical randomness.
+
+**Dispatch**: with multiple devices and a supported config the trial
+axis is sharded via ``shard_map`` (trials are embarrassingly parallel
+for everything except the capacity plane's global ledger scalars, which
+therefore force the single-device path); one device — CPU CI — takes a
+plain ``jit`` with identical numerics.  ``force_single=True`` pins the
+fallback for tests.
+
+**Throughput mode** (:func:`fleet_throughput`): for scale demos the
+pre-drawn ``(T, J, R)`` noise tensors are infeasible; the kernel can
+instead draw noise in-kernel from a JAX PRNG (``native_noise``).  That
+path makes no bit-parity claim against the serial stepper — it is the
+same model with a different random stream — and is only used by
+``benchmarks/bench_simcore.py``'s fleet-scale demo.
+
+Buffer reuse: the scan carry is updated in place by XLA (double
+buffering at worst); input buffers are deliberately NOT donated because
+CPU ``device_put`` of numpy arrays can alias host memory, and donating
+an alias would corrupt the caller's plan arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                            # moved in newer jax; 0.4.x location first
+    from jax.experimental.shard_map import shard_map
+except ImportError:             # pragma: no cover - newer jax
+    from jax.sharding import shard_map
+
+from repro.core.balancer import BUSY_PENALTY, POLICIES
+from repro.core.capacity import CapacityConfig, membership_timeline
+from repro.core.simulator import SimConfig, _build_cluster, _Cluster, _Metrics
+from repro.monitoring.metrics import PeriodicRefresh
+
+__all__ = ["supports", "run_compiled", "run_sim_compiled",
+           "fleet_throughput"]
+
+_EV_KIND = {"scale": 0, "preempt_down": 1, "preempt_up": 2}
+
+
+# ----------------------------------------------------------------------
+# static kernel specialisation
+@dataclass(frozen=True)
+class _Static:
+    """Everything the kernel builder branches on at trace time.  Hashable
+    -> one compiled kernel per distinct feature combination (shapes are
+    handled by jit's own cache)."""
+    policy: str
+    n_apps: int
+    k: int                       # replicas per app (candidate count)
+    n_nodes: int
+    hedge: Optional[float]
+    accuracy: float
+    reactive: bool               # policy reads neither predicted nor actual
+    needs_pred: bool             # Eq. 12 / fleet predictions consumed
+    closed_loop: bool            # OnlineFleet active (needs_pred implied)
+    snapshot: bool               # stale/outage occupancy snapshot carried
+    cold_start: bool
+    churn: Optional[Tuple[float, float]]
+    drift: bool
+    capacity: Optional[CapacityConfig]
+    preempt: bool
+    admission: bool
+    pending: bool                # completion-EWMA ring (capacity, no preds)
+    fallback_threshold: float
+    obs_window: int              # fleet observation ring length (Wn)
+    acc_window: int              # rolling-accuracy ring length (Wa)
+    lam: float = 1e-3
+    min_obs: int = 8
+    min_count: int = 8
+    native_noise: bool = False
+
+    @property
+    def hedging(self) -> bool:
+        return self.hedge is not None and self.k >= 2
+
+    @property
+    def fallback(self) -> bool:
+        return self.closed_loop and self.fallback_threshold > 0
+
+
+def supports(cfg: SimConfig, policy: str) -> Optional[str]:
+    """None when ``run_compiled`` reproduces the serial stepper for this
+    (config, policy); otherwise the human-readable reason it cannot."""
+    cls = POLICIES.get(policy)
+    if cls is None:
+        return f"unknown policy {policy!r}"
+    if not getattr(cls, "scan_lowered", False):
+        return f"policy {policy!r} has no in-kernel score lowering"
+    if cfg.churn is not None and cfg.capacity is not None:
+        return ("churn + capacity share one membership heap; the kernel "
+                "lowers churn as a masked bump which cannot interleave "
+                "with autoscaler epochs")
+    hedging = policy in ("perf_aware", "oracle") \
+        and cfg.hedge_factor is not None
+    needs_pred = hedging or "predicted" in cls.requires
+    if cfg.closed_loop and needs_pred and policy == "oracle":
+        return "closed-loop fleet under an oracle hedger is not lowered"
+    if cfg.closed_loop and needs_pred and cfg.capacity is not None:
+        return "closed-loop + capacity is not lowered (never co-occurs)"
+    return None
+
+
+def _static_for(cfg: SimConfig, policy: str) -> _Static:
+    cls = POLICIES[policy]
+    hedge = cfg.hedge_factor if policy in ("perf_aware", "oracle") else None
+    hedging = hedge is not None
+    reactive = not hedging and not cls.requires
+    needs_pred = hedging or "predicted" in cls.requires
+    closed = bool(cfg.closed_loop and needs_pred)
+    outages = cfg.outage is not None
+    snapshot = (cfg.prediction_lag_s > 0 or outages) \
+        and (needs_pred or closed)
+    return _Static(
+        policy=policy, n_apps=len(cfg.apps), k=cfg.n_replicas_per_app,
+        n_nodes=cfg.n_nodes, hedge=hedge, accuracy=cfg.accuracy,
+        reactive=reactive, needs_pred=needs_pred, closed_loop=closed,
+        snapshot=snapshot, cold_start=cfg.cold_start_s > 0,
+        churn=cfg.churn, drift=cfg.t_drift is not None,
+        capacity=cfg.capacity, preempt=cfg.preempt is not None,
+        admission=cfg.capacity is not None
+        and cfg.capacity.admission_limit_s is not None,
+        pending=cfg.capacity is not None and not needs_pred,
+        fallback_threshold=cfg.fallback_threshold if closed else 0.0,
+        obs_window=max(1, min(cfg.online_window, cfg.n_requests)),
+        acc_window=max(1, int(cfg.accuracy_window)))
+
+
+# ----------------------------------------------------------------------
+# host-side schedule precomputation (data-independent per-step flags)
+def _refresh_schedule(cfg: SimConfig, req_t: np.ndarray,
+                      call_mask: np.ndarray) -> np.ndarray:
+    """(J,) bool: steps where the snapshot recomputes.  Drives the REAL
+    :class:`PeriodicRefresh` with the serial call pattern, so cadence +
+    outage-freeze semantics cannot drift from the reference."""
+    outages = ()
+    if cfg.outage is not None:
+        t0, duration = cfg.outage
+        outages = ((t0, t0 + duration),)
+    pr = PeriodicRefresh(cfg.prediction_lag_s, outages)
+    out = np.zeros(len(req_t), bool)
+    for j, now in enumerate(req_t):
+        if not call_mask[j]:
+            continue
+        token = object()
+        out[j] = pr.get(float(now), lambda: token) is token
+    return out
+
+
+def _retrain_schedule(cfg: SimConfig, req_t: np.ndarray) -> np.ndarray:
+    """(J,) bool retrain flags replicating ``OnlineFleet.maybe_retrain``:
+    first at warmup_s, then every retrain_every_s (0 -> once, frozen)."""
+    out = np.zeros(len(req_t), bool)
+    nxt = float(cfg.online_warmup_s)
+    for j, now in enumerate(req_t):
+        if now < nxt:
+            continue
+        out[j] = True
+        if cfg.retrain_every_s > 0:
+            while nxt <= now:
+                nxt += cfg.retrain_every_s
+        else:
+            nxt = np.inf
+    return out
+
+
+def _policy_draws(J: int, T: int, K: int, seed: int,
+                  seed_blocks) -> np.ndarray:
+    """(J, T, K) RandomChoice draws, bit-identical to J sequential
+    ``rng.random((T, K))`` calls (PCG64 fills row-major)."""
+    if seed_blocks is None:
+        return np.random.default_rng(seed).random((J, T, K))
+    parts = [np.random.default_rng(s).random((J, int(n), K))
+             for s, n in seed_blocks]
+    return np.concatenate(parts, axis=1)
+
+
+def _rate_at(cap: CapacityConfig, req_t: np.ndarray, cum: np.ndarray,
+             t: float) -> np.ndarray:
+    """(A,) trailing arrival rate — same float ops as
+    ``CapacityController.rate`` (shared across trials)."""
+    win = min(cap.rate_window_s, max(t, 1e-9))
+    hi = np.searchsorted(req_t, t, side="right")
+    lo = np.searchsorted(req_t, t - win, side="right")
+    return (cum[hi] - cum[lo]) / win
+
+
+def _bucket_plan(key: np.ndarray, n_buckets: int):
+    """Static gather plan for per-trial bucket sums over the replica
+    axis.
+
+    XLA's scatter (segment_sum / bincount) serializes on CPU, so the
+    kernel reduces buckets as sort -> prefix-sum -> two static gathers
+    instead: ``perm`` sorts each trial's replicas by bucket key, and
+    ``[start, end)`` brackets each bucket in that order — all
+    host-precomputed constants (topology is static per trial)."""
+    T = key.shape[0]
+    perm = np.argsort(key, axis=1, kind="stable").astype(np.int32)
+    cnt = np.zeros((T, n_buckets), np.int64)
+    np.add.at(cnt, (np.arange(T)[:, None], key), 1)
+    end = np.cumsum(cnt, axis=1).astype(np.int32)
+    start = (end - cnt).astype(np.int32)
+    return perm, start, end
+
+
+def _mates_plan(node_of: np.ndarray, n_nodes: int):
+    """Static co-location table: ``idx[t, n, :]`` lists the replicas
+    placed on node ``n`` in trial ``t`` (clamped pad entries, padded
+    width ``B`` = the fattest node).
+
+    Placement never changes mid-run, so interference draws gather only
+    the O(B) replicas sharing the candidate's node instead of reducing
+    all R replicas per step; pad slots are masked out in-kernel via the
+    companion ``pad`` table."""
+    T, R = node_of.shape
+    trial = np.arange(T)[:, None]
+    counts = np.zeros((T, n_nodes), np.int64)
+    np.add.at(counts, (trial, node_of), 1)
+    B = max(int(counts.max()), 1)
+    order = np.argsort(node_of, axis=1, kind="stable")   # (T, R)
+    sorted_nodes = np.take_along_axis(node_of, order, axis=1)
+    starts = np.cumsum(counts, axis=1) - counts          # (T, n_nodes)
+    slot = np.arange(R)[None, :] \
+        - np.take_along_axis(starts, sorted_nodes, axis=1)
+    idx = np.zeros((T, n_nodes, B), np.int32)
+    pad = np.ones((T, n_nodes, B), bool)
+    idx[trial, sorted_nodes, slot] = order
+    pad[trial, sorted_nodes, slot] = False
+    return idx, pad
+
+
+# ----------------------------------------------------------------------
+# lowering: cluster -> (static, consts, xs, carry0, aux)
+def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
+    cfg = cluster.cfg
+    st = _static_for(cfg, policy)
+    T, J = cfg.n_trials, cfg.n_requests
+    A, K, N = st.n_apps, st.k, st.n_nodes
+    R = A * K
+    expected = np.repeat(np.arange(A), K)
+    if not np.array_equal(cluster.app_of, expected):
+        raise ValueError("simcore requires the contiguous app layout "
+                         "_build_cluster produces (app_of = repeat)")
+
+    req_t = np.asarray(cluster.req_t, float)
+    req_app = np.asarray(cluster.req_app, np.int32)
+    trial = np.arange(T)
+
+
+    def regime(imat, accel, mean_rtt):
+        """Per-app (imat row, speed, cand_node, log_rbar) tensors for one
+        interference/speed/mean regime — the ``_AppPrep`` inputs.
+
+        The serial path materialises a dense per-replica weight matrix
+        ``imat_row[app_of]`` (T, R); the kernel instead folds the busy
+        mask into per-(node, app) counts and contracts them with the raw
+        (T, A) imat row, so the per-step traffic stays O(T·R) once, not
+        once per tensor (same sum, reassociated — rounding-level drift
+        only)."""
+        speed = np.empty((A, T, K))
+        cand_node = np.empty((A, T, K), np.int32)
+        log_rbar = np.empty(A)
+        irow = np.empty((A, T, A))
+        for a in range(A):
+            cand = np.arange(a * K, (a + 1) * K)
+            nodes = cluster.node_of[:, cand]
+            irow[a] = imat[:, a, :] if imat.ndim == 3 \
+                else np.broadcast_to(imat[a], (T, A))
+            speed[a] = 1.0 + accel[trial[:, None], nodes]
+            cand_node[a] = nodes
+            log_rbar[a] = float(np.log(mean_rtt[a]))
+        return irow, speed, cand_node, log_rbar
+
+    ir_pre, sp_pre, cand_node, lr_pre = regime(
+        cluster.imat, cluster.accel, cluster.mean_rtt)
+    mate_idx, mate_pad = _mates_plan(np.asarray(cluster.node_of), N)
+    mate_app = cluster.app_of[mate_idx].astype(np.int32)  # (T, N, B)
+
+    consts: Dict[str, np.ndarray] = {
+        "node_of": np.asarray(cluster.node_of, np.int32),
+        "mate_idx": mate_idx, "mate_app": mate_app, "mate_pad": mate_pad,
+        "imat_pre": ir_pre,
+        "speed_pre": sp_pre,
+        "cand_node": cand_node, "log_rbar_pre": lr_pre,
+        "mean_rtt": np.asarray(cluster.mean_rtt, float),
+    }
+    if not st.reactive:
+        # full-K draws and fleet features reduce all R replicas to
+        # (node, app) counts once per step — sort-plan, scatter-free
+        na_key = np.asarray(cluster.node_of) * A \
+            + cluster.app_of[None, :]
+        perm, bstart, bend = _bucket_plan(na_key, N * A)
+        consts.update(perm=perm, bstart=bstart, bend=bend)
+    if st.drift:
+        imat_p = cluster.imat_post if cluster.imat_post is not None \
+            else cluster.imat
+        accel_p = cluster.accel_post if cluster.accel_post is not None \
+            else cluster.accel
+        mean_p = cluster.mean_rtt_post \
+            if cluster.mean_rtt_post is not None else cluster.mean_rtt
+        ir_po, sp_po, _, lr_po = regime(imat_p, accel_p, mean_p)
+        consts.update(speed_post=sp_po, log_rbar_post=lr_po,
+                      imat_post=ir_po)
+    if st.churn is not None:
+        consts["down"] = cluster.node_of == cluster.failed_node[:, None]
+    if st.pending or st.fallback:
+        consts["req_app"] = req_app
+
+    xs: Dict[str, np.ndarray] = {
+        "j": np.arange(J, dtype=np.int32),
+        "app": req_app,
+        "t": req_t,
+    }
+    if not st.native_noise:
+        xs["z"] = np.ascontiguousarray(cluster.z_rtt.T)        # (J, T)
+        if st.needs_pred and not st.closed_loop:
+            # pre-gather each step's candidate block: (J, T, K), the
+            # only slice of z_pred the kernel ever reads
+            cand_idx = req_app.astype(np.int64)[:, None] * K \
+                + np.arange(K)[None, :]                        # (J, K)
+            xs["zp"] = np.take_along_axis(
+                cluster.z_pred.transpose(1, 0, 2),
+                cand_idx[:, None, :], axis=2)                  # (J, T, K)
+        if st.policy == "random":
+            xs["draw"] = _policy_draws(J, T, K, cfg.seed + 2, seed_blocks)
+    if st.churn is not None:
+        xs["churnflag"] = req_t >= st.churn[0]
+    if st.drift:
+        xs["driftflag"] = req_t >= cfg.t_drift
+    if st.cold_start:
+        xs["coldflag"] = req_t < cfg.cold_start_s
+    if st.snapshot:
+        if st.closed_loop:
+            call = np.ones(J, bool)
+        else:                    # Eq. 12 consults it only past cold start
+            call = req_t >= cfg.cold_start_s if st.cold_start \
+                else np.ones(J, bool)
+        xs["refresh"] = _refresh_schedule(cfg, req_t, call)
+    if st.closed_loop:
+        xs["retrain"] = _retrain_schedule(cfg, req_t)
+
+    carry0: Dict[str, np.ndarray] = {"busy": np.zeros((T, R))}
+    if st.policy == "round_robin":
+        carry0["cursor"] = np.zeros(T, np.int64)
+    if st.snapshot:
+        carry0["snap"] = np.zeros((T, R))
+
+    aux: Dict[str, object] = {"st": st}
+    cap = st.capacity
+    if cap is not None:
+        events = membership_timeline(float(req_t[-1]), capacity=cap,
+                                     preempt=cfg.preempt)
+        ev_t = np.array([ev.t for ev in events])
+        ev_kind = np.array([_EV_KIND[ev.kind] for ev in events], np.int32)
+        ev_step = np.searchsorted(req_t, ev_t, side="left").astype(np.int32)
+        cum = np.zeros((J + 1, A))
+        np.add.at(cum, (np.arange(J) + 1, cluster.req_app), 1.0)
+        cum = np.cumsum(cum, axis=0)
+        ev_rate = np.stack([
+            _rate_at(cap, req_t, cum, t) if k == _EV_KIND["scale"]
+            else np.zeros(A)
+            for t, k in zip(ev_t, ev_kind)]) if len(events) \
+            else np.zeros((0, A))
+        consts.update(ev_t=ev_t, ev_kind=ev_kind, ev_step=ev_step,
+                      ev_rate=ev_rate)
+        if st.preempt:
+            consts["hit"] = cluster.node_of \
+                == cluster.preempted_node[:, None]
+        active0 = np.zeros((T, R), bool)
+        for a in range(A):
+            n0 = min(cap.initial, K)
+            active0[:, a * K:a * K + n0] = True
+        carry0.update(
+            active=active0, allowed=np.ones((T, R), bool),
+            warm=np.full((T, R), -np.inf), paid=np.zeros((T, R)),
+            prov=np.zeros(T), last_t=np.float64(0.0),
+            s_hat=np.broadcast_to(cluster.mean_rtt, (T, A)).copy(),
+            last_scale=np.full((T, A), -np.inf),
+            util_sum=np.zeros(T), ev_ptr=np.int64(0),
+            s_ups=np.zeros(T, np.int64), s_dns=np.zeros(T, np.int64),
+            wakeups=np.zeros(T, np.int64),
+            routed_inactive=np.int64(0))
+        if st.pending:
+            carry0.update(pend_rtt=np.zeros((J, T)),
+                          pend_fin=np.full((J, T), np.inf),
+                          folded=np.zeros((J, T), bool))
+        aux["decisions"] = int((ev_kind == _EV_KIND["scale"]).sum())
+    if st.closed_loop:
+        Wn, D = st.obs_window, N + A
+        carry0.update(
+            W=np.zeros((T, A, D)), trained=np.zeros((T, A), bool),
+            obs_X=np.zeros((Wn, T, D)), obs_y=np.zeros((Wn, T)),
+            obs_fin=np.full((Wn, T), np.inf),
+            obs_app=np.zeros(Wn, np.int32),
+            obs_valid=np.zeros(Wn, bool))
+        if st.fallback:
+            Wa = st.acc_window
+            carry0.update(
+                tr_ring=np.zeros((A, Wa, T)),
+                tr_pos=np.zeros((A, T), np.int64),
+                tr_cnt=np.zeros((A, T), np.int64),
+                pd_err=np.zeros((J, T)), pd_fin=np.full((J, T), np.inf),
+                pd_done=np.zeros((J, T), bool),
+                n_fallback=np.int64(0))
+        aux["retrain_steps"] = np.flatnonzero(xs["retrain"])
+    return st, consts, xs, carry0, aux
+
+
+# ----------------------------------------------------------------------
+# in-kernel helpers (jnp mirrors of capacity._take_lowest/_take_highest)
+def _take_lo(elig, k):
+    cs = jnp.cumsum(elig.astype(jnp.int64), axis=1)
+    return elig & (cs <= k[:, None])
+
+
+def _take_hi(elig, k):
+    cs = jnp.cumsum(elig[:, ::-1].astype(jnp.int64), axis=1)[:, ::-1]
+    return elig & (cs <= k[:, None])
+
+
+# ----------------------------------------------------------------------
+# kernel builder
+def _build_kernel(st: _Static):
+    cap = st.capacity
+    A, K, N = st.n_apps, st.k, st.n_nodes
+    R = A * K
+    PEN = BUSY_PENALTY
+    D = N + A
+    Wn, Wa = st.obs_window, st.acc_window
+
+    def run(c, xs, carry0):
+        T = c["node_of"].shape[0]
+        J = xs["t"].shape[0]
+        trial = jnp.arange(T)
+        if st.closed_loop:
+            eye_n = jnp.eye(N, dtype=jnp.float64)
+
+        def bucket_sum(values, perm, bstart, bend):
+            """Per-trial bucket sums of ``values`` (T, R) -> (T, B) via
+            the host-precomputed sort plan: gather into bucket order,
+            exclusive prefix-sum, difference the bucket brackets.  Pure
+            gather/cumsum — no scatter (see bucket_plan)."""
+            s = jnp.take_along_axis(values, perm, axis=1)
+            cs = jnp.concatenate(
+                [jnp.zeros((T, 1), values.dtype), jnp.cumsum(s, axis=1)],
+                axis=1)
+            return jnp.take_along_axis(cs, bend, axis=1) \
+                - jnp.take_along_axis(cs, bstart, axis=1)
+
+        def per_app(name, a):
+            return lax.dynamic_index_in_dim(c[name], a, 0, keepdims=False)
+
+        def col(m, a):
+            return lax.dynamic_index_in_dim(m, a, 1, keepdims=False)
+
+        def set_col(m, v, a):
+            return lax.dynamic_update_slice_in_dim(m, v[:, None], a, axis=1)
+
+        def sl(m, a0):
+            return lax.dynamic_slice_in_dim(m, a0, K, axis=1)
+
+        def unsl(m, v, a0):
+            return lax.dynamic_update_slice_in_dim(m, v, a0, axis=1)
+
+        if not st.reactive:
+            def busy_counts(busy_src, now):
+                """(T, N, A) busy-replica counts per (node, app) — one
+                O(T·R) reduction per occupancy source, feeding full-K
+                draws and the fleet features."""
+                busyb = (busy_src > now).astype(jnp.float64)
+                return bucket_sum(busyb, c["perm"], c["bstart"],
+                                  c["bend"]).reshape(-1, N, A)
+
+        def _lognormal(inter, lr, z):
+            v = 0.1 + inter
+            u = jnp.log1p(v * v)
+            return jnp.exp(lr - 0.5 * u + jnp.sqrt(u) * z)
+
+        def rtt_full(a, drift_on, busy_src, now, z):
+            """In-kernel ``_Cluster.rtt_draw`` over the app's whole
+            candidate row (T, K): reduce occupancy to per-(node, app)
+            counts once, then contract with the raw imat row.  The
+            serial bincount of ``busy · imat_row[app_of]`` is the same
+            sum reassociated — rounding-level drift only."""
+            iw = per_app("imat_pre", a)                    # (T, A)
+            lr = per_app("log_rbar_pre", a)
+            sp = per_app("speed_pre", a)
+            if st.drift:
+                iw = jnp.where(drift_on, per_app("imat_post", a), iw)
+                lr = jnp.where(drift_on, per_app("log_rbar_post", a), lr)
+                sp = jnp.where(drift_on, per_app("speed_post", a), sp)
+            nodes = per_app("cand_node", a)                # (T, K)
+            counts = busy_counts(busy_src, now)
+            cc = jnp.take_along_axis(counts, nodes[:, :, None],
+                                     axis=1)               # (T, K, A)
+            inter = jnp.einsum("tka,ta->tk", cc, iw)
+            return _lognormal(inter, lr, z[:, None]) * sp
+
+        def rtt_at(a, drift_on, busy_src, now, z, cand):
+            """Pick-only ``rtt_draw`` at candidate slots ``cand``
+            (T, Kq): gather the O(B) co-located replicas from the static
+            mates table instead of reducing the full replica axis.  The
+            mate's interference weight is the app's (T, A) imat-row
+            entry for the mate's app, gathered in-kernel — no (A,T,N,B)
+            weight tensor on the host, no per-regime rebuild under
+            drift; the summed set is identical to the serial bincount
+            (reassociated)."""
+            iw = per_app("imat_pre", a)                    # (T, A)
+            lr = per_app("log_rbar_pre", a)
+            sp = per_app("speed_pre", a)                   # (T, K)
+            if st.drift:
+                iw = jnp.where(drift_on, per_app("imat_post", a), iw)
+                lr = jnp.where(drift_on, per_app("log_rbar_post", a), lr)
+                sp = jnp.where(drift_on, per_app("speed_post", a), sp)
+            nodes = jnp.take_along_axis(per_app("cand_node", a), cand,
+                                        axis=1)            # (T, Kq)
+            sp = jnp.take_along_axis(sp, cand, axis=1)
+            mi = jnp.take_along_axis(c["mate_idx"], nodes[:, :, None],
+                                     axis=1)               # (T, Kq, B)
+            ma = jnp.take_along_axis(c["mate_app"], nodes[:, :, None],
+                                     axis=1)               # (T, Kq, B)
+            mp = jnp.take_along_axis(c["mate_pad"], nodes[:, :, None],
+                                     axis=1)               # (T, Kq, B)
+            w = jnp.take_along_axis(iw, ma.reshape(T, -1),
+                                    axis=1).reshape(ma.shape)
+            bg = jnp.take_along_axis(busy_src, mi.reshape(T, -1),
+                                     axis=1).reshape(mi.shape)
+            inter = jnp.where((bg > now) & ~mp, w, 0.0).sum(-1)
+            return _lognormal(inter, lr, z[:, None]) * sp
+
+        # -------------------------------------------------------------
+        # capacity-event machinery (fires inside a while_loop per step)
+        if cap is not None:
+            E = c["ev_t"].shape[0]
+            al = cap.ewma_alpha
+
+            def fold_completions(t_ev, j, s_hat, folded, pend_rtt,
+                                 pend_fin):
+                if not st.pending:
+                    return s_hat, folded
+
+                def body(s, fs):
+                    s_hat_, folded_ = fs
+                    ap = c["req_app"][s]
+                    m = (s < j) & (~folded_[s]) & (pend_fin[s] <= t_ev)
+                    cur = col(s_hat_, ap)
+                    new = jnp.where(m, (1.0 - al) * cur
+                                    + al * pend_rtt[s], cur)
+                    return (set_col(s_hat_, new, ap),
+                            folded_.at[s].set(folded_[s] | m))
+                return lax.fori_loop(0, J, body, (s_hat, folded))
+
+            def decide(t_ev, rate, j, busy, pend_rtt, pend_fin, cv):
+                (active, allowed, warm, paid, prov, last_t, s_hat,
+                 last_scale, folded, util_sum, s_ups, s_dns) = cv
+                s_hat, folded = fold_completions(t_ev, j, s_hat, folded,
+                                                 pend_rtt, pend_fin)
+                dt = jnp.maximum(t_ev - last_t, 0.0)
+                prov = prov + active.sum(1) * dt
+                last_t = jnp.maximum(last_t, t_ev)
+                # pass 1: targets from the PRE-change active set
+                tgts = []
+                for a_ in range(A):
+                    s_ = slice(a_ * K, (a_ + 1) * K)
+                    act = active[:, s_]
+                    cur = act.sum(1)
+                    if cap.autoscaler == "predictive":
+                        need = jnp.ceil(rate[a_] * s_hat[:, a_]
+                                        / cap.rho_target).astype(jnp.int64)
+                    elif cap.autoscaler == "reactive":
+                        busy_c = (busy[:, s_] > t_ev) & act
+                        util = jnp.where(
+                            cur > 0,
+                            busy_c.sum(1) / jnp.maximum(cur, 1), 0.0)
+                        cooled = t_ev - last_scale[:, a_] >= cap.cooldown_s
+                        need = cur + jnp.where(
+                            cooled & (util > cap.hi_util), 1,
+                            jnp.where(cooled & (util < cap.lo_util),
+                                      -1, 0))
+                    else:
+                        need = jnp.full((T,), cap.initial, jnp.int64)
+                    hi0 = K if cap.max_replicas is None \
+                        else min(cap.max_replicas, K)
+                    hi = jnp.minimum(hi0, allowed[:, s_].sum(1))
+                    tgts.append(jnp.clip(need, cap.min_replicas, hi))
+                # pass 2: apply (activate lowest standby, drain highest
+                # idle first, busy only to cover the rest)
+                util_acc = jnp.zeros((T,))
+                for a_ in range(A):
+                    s_ = slice(a_ * K, (a_ + 1) * K)
+                    act = active[:, s_]
+                    cur = act.sum(1)
+                    busy_c = (busy[:, s_] > t_ev) & act
+                    util_acc = util_acc + jnp.where(
+                        cur > 0, busy_c.sum(1) / jnp.maximum(cur, 1), 0.0)
+                    want = tgts[a_]
+                    k_up = jnp.maximum(want - cur, 0)
+                    k_dn = jnp.maximum(cur - want, 0)
+                    changed = (k_up > 0) | (k_dn > 0)
+                    grow = _take_lo(~act & allowed[:, s_], k_up)
+                    overlap = jnp.where(
+                        grow, jnp.maximum(paid[:, s_] - t_ev, 0.0), 0.0)
+                    prov = prov - overlap.sum(1)
+                    warm = warm.at[:, s_].set(
+                        jnp.where(grow, t_ev + cap.warmup_s, warm[:, s_]))
+                    active = active.at[:, s_].set(act | grow)
+                    s_ups = s_ups + grow.sum(1)
+                    idle = act & ~busy_c
+                    drop = _take_hi(idle, k_dn)
+                    rem = k_dn - drop.sum(1)
+                    drop = drop | _take_hi(act & busy_c & ~drop, rem)
+                    tail = jnp.where(
+                        drop, jnp.maximum(busy[:, s_] - t_ev, 0.0), 0.0)
+                    prov = prov + tail.sum(1)
+                    paid = paid.at[:, s_].set(
+                        jnp.where(drop, t_ev + tail, paid[:, s_]))
+                    active = active.at[:, s_].set(active[:, s_] & ~drop)
+                    s_dns = s_dns + drop.sum(1)
+                    last_scale = last_scale.at[:, a_].set(
+                        jnp.where(changed, t_ev, last_scale[:, a_]))
+                util_sum = util_sum + util_acc / max(A, 1)
+                return (active, allowed, warm, paid, prov, last_t, s_hat,
+                        last_scale, folded, util_sum, s_ups, s_dns)
+
+            def pre_down(t_ev, busy, cv):
+                (active, allowed, warm, paid, prov, last_t, s_hat,
+                 last_scale, folded, util_sum, s_ups, s_dns) = cv
+                dt = jnp.maximum(t_ev - last_t, 0.0)
+                prov = prov + active.sum(1) * dt
+                last_t = jnp.maximum(last_t, t_ev)
+                hit = c["hit"]
+                allowed = allowed & ~hit
+                m = hit & active
+                tail = jnp.where(m, jnp.maximum(busy - t_ev, 0.0), 0.0)
+                prov = prov + tail.sum(1)
+                paid = jnp.where(m, t_ev + tail, paid)
+                active = active & ~m
+                return (active, allowed, warm, paid, prov, last_t, s_hat,
+                        last_scale, folded, util_sum, s_ups, s_dns)
+
+            def pre_up(cv):
+                (active, allowed, warm, paid, prov, last_t, s_hat,
+                 last_scale, folded, util_sum, s_ups, s_dns) = cv
+                allowed = allowed | c["hit"]
+                return (active, allowed, warm, paid, prov, last_t, s_hat,
+                        last_scale, folded, util_sum, s_ups, s_dns)
+
+            def apply_events(j, busy, pend_rtt, pend_fin, ptr, cv):
+                if E == 0:
+                    return ptr, cv
+
+                def cond(s):
+                    p = s[0]
+                    return (p < E) \
+                        & (c["ev_step"][jnp.minimum(p, E - 1)] <= j)
+
+                def body(s):
+                    p = s[0]
+                    cv_ = s[1:]
+                    t_ev = c["ev_t"][p]
+                    rate = c["ev_rate"][p]
+                    if st.preempt:
+                        cv_ = lax.switch(
+                            c["ev_kind"][p],
+                            [lambda v: decide(t_ev, rate, j, busy,
+                                              pend_rtt, pend_fin, v),
+                             lambda v: pre_down(t_ev, busy, v),
+                             pre_up],
+                            cv_)
+                    else:
+                        cv_ = decide(t_ev, rate, j, busy, pend_rtt,
+                                     pend_fin, cv_)
+                    return (p + 1,) + cv_
+                out = lax.while_loop(cond, body, (ptr,) + cv)
+                return out[0], out[1:]
+
+        # -------------------------------------------------------------
+        if st.closed_loop:
+            def viable_mask(a, ring, pos, cnt):
+                cnt_a = lax.dynamic_index_in_dim(cnt, a, 0,
+                                                 keepdims=False)   # (T,)
+                ring_a = lax.dynamic_index_in_dim(ring, a, 0,
+                                                  keepdims=False)  # (Wa,T)
+                filled = jnp.minimum(cnt_a, Wa)
+                valid = jnp.arange(Wa)[:, None] < filled[None, :]
+                esum = jnp.where(valid, ring_a, 0.0).sum(0)
+                acc = 1.0 - esum / jnp.maximum(filled, 1)
+                acc = jnp.where(filled > 0, acc, 1.0)
+                return (cnt_a < st.min_count) \
+                    | (acc >= st.fallback_threshold)
+
+        def step(cr, x):
+            busy = cr["busy"]
+            j, a, now = x["j"], x["app"], x["t"]
+            a0 = a * K
+            ncr = dict(cr)
+
+            # membership: churn as an idempotent masked max-bump (busy
+            # never decreases per replica, so re-applying is a no-op)
+            if st.churn is not None:
+                t_up = st.churn[0] + st.churn[1]
+                busy = jnp.where(x["churnflag"] & c["down"],
+                                 jnp.maximum(busy, t_up), busy)
+
+            served = jnp.ones((T,), bool)
+            shed = jnp.zeros((T,), bool)
+            act_c = coldm = None
+            if cap is not None:
+                cv = (cr["active"], cr["allowed"], cr["warm"], cr["paid"],
+                      cr["prov"], cr["last_t"], cr["s_hat"],
+                      cr["last_scale"],
+                      cr["folded"] if st.pending else jnp.zeros((), bool),
+                      cr["util_sum"], cr["s_ups"], cr["s_dns"])
+                ptr, cv = apply_events(
+                    j, busy,
+                    cr["pend_rtt"] if st.pending else None,
+                    cr["pend_fin"] if st.pending else None,
+                    cr["ev_ptr"], cv)
+                (active, allowed, warm, paid, prov, last_t, s_hat,
+                 last_scale, folded, util_sum, s_ups, s_dns) = cv
+                # wake (scale-from-zero), serial call order preserved
+                act_c = sl(active, a0)
+                alw_c = sl(allowed, a0)
+                empty = ~act_c.any(1)
+                g_ = empty.any()
+                dt = jnp.maximum(now - last_t, 0.0)
+                prov = prov + jnp.where(g_, active.sum(1) * dt, 0.0)
+                last_t = jnp.where(g_, jnp.maximum(last_t, now), last_t)
+                first = _take_lo(alw_c, empty.astype(jnp.int64))
+                none = ~first.any(1) & empty
+                first = first | _take_lo(jnp.ones_like(first),
+                                         none.astype(jnp.int64))
+                paid_c = sl(paid, a0)
+                overlap = jnp.where(first,
+                                    jnp.maximum(paid_c - now, 0.0), 0.0)
+                prov = prov - overlap.sum(1)
+                warm_c = jnp.where(first, now + cap.warmup_s,
+                                   sl(warm, a0))
+                act_c = act_c | first
+                active = unsl(active, act_c, a0)
+                warm = unsl(warm, warm_c, a0)
+                wakeups = cr["wakeups"] + empty
+                busy_c = sl(busy, a0)
+                wait_c = jnp.maximum(busy_c - now, 0.0)
+                if st.admission:
+                    aw = jnp.where(act_c, wait_c, jnp.inf).min(1)
+                    shed = aw > cap.admission_limit_s
+                    served = ~shed
+                coldm = jnp.where(now < warm_c, cap.cold_rtt_factor, 1.0)
+            else:
+                busy_c = sl(busy, a0)
+                wait_c = jnp.maximum(busy_c - now, 0.0)
+
+            if st.snapshot:
+                snap = jnp.where(x["refresh"], busy, cr["snap"])
+                ncr["snap"] = snap
+            drift_on = x["driftflag"] if st.drift else False
+            if st.native_noise:
+                kj = jax.random.fold_in(c["key"], j)
+                z = jax.random.normal(kj, (T,), jnp.float64)
+            else:
+                z = x["z"]
+
+            hmask = jnp.zeros((T,), bool)
+            rtt2 = jnp.zeros((T,))
+            predicted = None
+            if st.reactive:
+                idle = busy_c <= now
+                if st.policy == "round_robin":
+                    dist = jnp.mod(jnp.arange(K)[None, :]
+                                   - cr["cursor"][:, None],
+                                   K).astype(jnp.float64)
+                    sc = jnp.where(idle, dist, PEN + wait_c)
+                elif st.policy == "random":
+                    if st.native_noise:
+                        draw = jax.random.uniform(
+                            jax.random.fold_in(kj, 2), (T, K),
+                            jnp.float64)
+                    else:
+                        draw = x["draw"]
+                    sc = jnp.where(idle, draw, PEN + wait_c)
+                else:                                    # least_conn
+                    sc = busy_c - now
+                sc_m = jnp.where(act_c, sc, jnp.inf) \
+                    if cap is not None else sc
+                picks = jnp.argmin(sc_m, axis=1)
+                if st.policy == "round_robin":
+                    ncr["cursor"] = (picks + 1) % K
+                rtt_pick = rtt_at(a, drift_on, busy, now, z,
+                                  picks[:, None])[:, 0]
+                if cap is not None:
+                    rtt_pick = rtt_pick * coldm[trial, picks]
+            else:
+                # the full-K actual draw is needed only when it scores
+                # (oracle) or seeds the Eq. 12 basis; otherwise the
+                # pick-only draw after argmin replaces it
+                full_actual = st.policy != "perf_aware" \
+                    or (not st.closed_loop and not st.snapshot)
+                actual = None
+                if full_actual:
+                    actual = rtt_full(a, drift_on, busy, now, z)
+                    if cap is not None:
+                        actual = actual * coldm
+                if st.closed_loop:
+                    # serial order: fold trackers -> retrain -> features
+                    if st.fallback:
+                        def tr_body(s, tv):
+                            ring, pos, cnt, done = tv
+                            ap = c["req_app"][s]
+                            m = (s < j) & (~done[s]) \
+                                & (cr["pd_fin"][s] <= now)
+                            err = jnp.minimum(jnp.abs(cr["pd_err"][s]),
+                                              1.0)
+                            pos_a = lax.dynamic_index_in_dim(
+                                pos, ap, 0, keepdims=False)       # (T,)
+                            ring_a = lax.dynamic_index_in_dim(
+                                ring, ap, 0, keepdims=False)      # (Wa,T)
+                            hit_w = (jnp.arange(Wa)[:, None]
+                                     == pos_a[None, :]) & m[None, :]
+                            ring_a = jnp.where(hit_w, err[None, :],
+                                               ring_a)
+                            ring = lax.dynamic_update_slice_in_dim(
+                                ring, ring_a[None], ap, axis=0)
+                            pos_a = jnp.where(m, (pos_a + 1) % Wa, pos_a)
+                            pos = lax.dynamic_update_slice_in_dim(
+                                pos, pos_a[None], ap, axis=0)
+                            cnt_a = lax.dynamic_index_in_dim(
+                                cnt, ap, 0, keepdims=False) + m
+                            cnt = lax.dynamic_update_slice_in_dim(
+                                cnt, cnt_a[None], ap, axis=0)
+                            done = done.at[s].set(done[s] | m)
+                            return ring, pos, cnt, done
+                        ring, pos, cnt, done = lax.fori_loop(
+                            0, J, tr_body,
+                            (cr["tr_ring"], cr["tr_pos"], cr["tr_cnt"],
+                             cr["pd_done"]))
+                        ncr.update(tr_ring=ring, tr_pos=pos, tr_cnt=cnt,
+                                   pd_done=done)
+
+                    def train(wt):
+                        W_, tr_ = wt
+                        for a_ in range(A):
+                            msl = cr["obs_valid"] & (cr["obs_app"] == a_)
+                            mm = (msl[:, None]
+                                  & (cr["obs_fin"] <= now)).astype(
+                                      jnp.float64)
+                            n_eff = mm.sum(0)
+                            Xw = cr["obs_X"] * mm[:, :, None]
+                            G = jnp.einsum("wtd,wte->tde", Xw,
+                                           cr["obs_X"]) \
+                                + st.lam * jnp.eye(D, dtype=jnp.float64)
+                            b = jnp.einsum("wtd,wt->td", Xw, cr["obs_y"])
+                            Wa_ = jnp.linalg.solve(G, b[..., None])[..., 0]
+                            okm = n_eff >= st.min_obs
+                            W_ = W_.at[:, a_].set(
+                                jnp.where(okm[:, None], Wa_, W_[:, a_]))
+                            tr_ = tr_.at[:, a_].set(tr_[:, a_] | okm)
+                        return W_, tr_
+                    W, trained = lax.cond(x["retrain"], train,
+                                          lambda wt: wt,
+                                          (cr["W"], cr["trained"]))
+                    ncr.update(W=W, trained=trained)
+                    snap_src = snap if st.snapshot else busy
+                    counts = busy_counts(snap_src, now)
+                    nodes = per_app("cand_node", a)
+                    onehot = jnp.take(eye_n, nodes, axis=0)   # (T, K, N)
+                    cand_counts = jnp.take_along_axis(
+                        counts, nodes[:, :, None], axis=1)    # (T, K, A)
+                    X = jnp.concatenate([onehot, cand_counts], axis=-1)
+                    W_a = lax.dynamic_index_in_dim(W, a, 1,
+                                                   keepdims=False)
+                    y = jnp.maximum(
+                        jnp.einsum("tkd,td->tk", X, W_a), 1e-3)
+                    tr_a = lax.dynamic_index_in_dim(trained, a, 1,
+                                                    keepdims=False)
+                    fleet_pred = jnp.where(tr_a[:, None], y,
+                                           c["mean_rtt"][a])
+                    predicted = fleet_pred
+                    if st.fallback:
+                        ok = viable_mask(a, ring, pos, cnt)
+                        predicted = jnp.where(ok[:, None], fleet_pred,
+                                              0.0)
+                        ncr["n_fallback"] = cr["n_fallback"] \
+                            + (~ok).sum()
+                elif st.needs_pred:
+                    mean_b = jnp.broadcast_to(c["mean_rtt"][a], (T, K))
+                    cold_on = x["coldflag"] if st.cold_start else False
+                    if st.snapshot:
+                        stale = rtt_full(a, drift_on, snap, now, z)
+                        basis = jnp.where(cold_on, mean_b, stale) \
+                            if st.cold_start else stale
+                        if cap is not None:
+                            basis = basis * coldm
+                    elif st.cold_start:
+                        other = mean_b * coldm if cap is not None \
+                            else mean_b
+                        basis = jnp.where(cold_on, other, actual)
+                    else:
+                        basis = actual
+                    if st.native_noise:
+                        zc = jax.random.normal(
+                            jax.random.fold_in(kj, 1), (T, K),
+                            jnp.float64)
+                    else:
+                        zc = x["zp"]
+                    eps = (1.0 - st.accuracy) * basis
+                    predicted = basis + eps * zc
+                sig = predicted if st.policy == "perf_aware" else actual
+                sc = wait_c + sig
+                sc_m = jnp.where(act_c, sc, jnp.inf) \
+                    if cap is not None else sc
+                picks = jnp.argmin(sc_m, axis=1)
+                if full_actual:
+                    rtt_pick = actual[trial, picks]
+                else:
+                    rtt_pick = rtt_at(a, drift_on, busy, now, z,
+                                      picks[:, None])[:, 0]
+                    if cap is not None:
+                        rtt_pick = rtt_pick * coldm[trial, picks]
+                if st.hedging:
+                    s2 = sc_m.at[trial, picks].set(jnp.inf)
+                    second = jnp.argmin(s2, axis=1)
+                    completion = wait_c + sig
+                    bc = jnp.where(busy_c > now, completion, jnp.inf)
+                    if cap is not None:
+                        bc = jnp.where(act_c, bc, jnp.inf)
+                    ref = bc.min(1)
+                    hmask = sig[trial, picks] > st.hedge * ref
+                    if cap is not None:
+                        hmask = hmask & act_c[trial, second]
+                    if st.admission:
+                        hmask = hmask & served
+
+            # commits only touch the app's K-column block, so the write
+            # is a masked block update, never a row-indexed scatter
+            # (XLA CPU scatter serializes over trials)
+            rep = a0 + picks
+            b_pick = busy_c[trial, picks]
+            finish = jnp.maximum(now, b_pick) + rtt_pick
+            colK = jnp.arange(K)[None, :]
+            new_c = jnp.where((colK == picks[:, None]) & served[:, None],
+                              finish[:, None], busy_c)
+            if st.hedging:
+                if full_actual:
+                    rtt2 = actual[trial, second]
+                else:
+                    rtt2 = rtt_at(a, drift_on, busy, now, z,
+                                  second[:, None])[:, 0]
+                    if cap is not None:
+                        rtt2 = rtt2 * coldm[trial, second]
+                b2 = busy_c[trial, second]
+                finish2 = jnp.maximum(now, b2) + rtt2
+                resp = jnp.where(hmask, jnp.minimum(finish, finish2),
+                                 finish) - now
+                new_c = jnp.where(
+                    (colK == second[:, None]) & hmask[:, None],
+                    finish2[:, None], new_c)
+            else:
+                resp = finish - now
+            busy = unsl(busy, new_c, a0)
+            if st.admission:
+                resp = jnp.where(served, resp, jnp.nan)
+            ncr["busy"] = busy
+
+            if st.closed_loop:
+                slot = jnp.mod(j, Wn)
+                ncr["obs_X"] = cr["obs_X"].at[slot].set(X[trial, picks])
+                ncr["obs_y"] = cr["obs_y"].at[slot].set(rtt_pick)
+                ncr["obs_fin"] = cr["obs_fin"].at[slot].set(finish)
+                ncr["obs_app"] = cr["obs_app"].at[slot].set(a)
+                ncr["obs_valid"] = cr["obs_valid"].at[slot].set(True)
+                if st.fallback:
+                    perr = jnp.abs(fleet_pred[trial, picks] - rtt_pick) \
+                        / jnp.maximum(rtt_pick, 1e-9)
+                    ncr["pd_err"] = cr["pd_err"].at[j].set(perr)
+                    ncr["pd_fin"] = cr["pd_fin"].at[j].set(finish)
+            if cap is not None:
+                ok_r = active[trial, rep]
+                if st.admission:
+                    ok_r = ok_r | ~served
+                ncr["routed_inactive"] = cr["routed_inactive"] \
+                    + (~ok_r).sum()
+                if predicted is not None:
+                    pred_pick = predicted[trial, picks]
+                    cur = col(s_hat, a)
+                    upd = (1.0 - al) * cur + al * pred_pick
+                    s_hat = set_col(s_hat,
+                                    jnp.where(served, upd, cur), a)
+                elif st.pending:
+                    fin_eff = jnp.where(served, finish, jnp.inf)
+                    ncr["pend_rtt"] = cr["pend_rtt"].at[j].set(rtt_pick)
+                    ncr["pend_fin"] = cr["pend_fin"].at[j].set(fin_eff)
+                ncr.update(active=active, allowed=allowed, warm=warm,
+                           paid=paid, prov=prov, last_t=last_t,
+                           s_hat=s_hat, last_scale=last_scale,
+                           util_sum=util_sum, ev_ptr=ptr, s_ups=s_ups,
+                           s_dns=s_dns, wakeups=wakeups)
+                if st.pending:
+                    ncr["folded"] = folded
+
+            ys = {"resp": resp, "rtt": rtt_pick,
+                  "rep": rep.astype(jnp.int32), "shed": shed,
+                  "hmask": hmask, "rtt2": rtt2}
+            return ncr, ys
+
+        return lax.scan(step, carry0, xs)
+
+    return run
+
+
+# ----------------------------------------------------------------------
+# dispatch: shard_map over trials, or plain jit
+_T_AXIS = {
+    # consts
+    "node_of": 0, "down": 0, "hit": 0, "perm": 0, "bstart": 0, "bend": 0,
+    "mate_idx": 0, "mate_app": 0, "mate_pad": 0,
+    "imat_pre": 1, "imat_post": 1,
+    "speed_pre": 1, "speed_post": 1, "cand_node": 1, "log_rbar_pre": None,
+    "log_rbar_post": None, "mean_rtt": None, "app_of": None,
+    "req_app": None, "ev_t": None, "ev_kind": None, "ev_step": None,
+    "ev_rate": None, "key": None,
+    # xs
+    "j": None, "app": None, "t": None, "z": 1, "zp": 1, "draw": 1,
+    "refresh": None, "coldflag": None, "driftflag": None,
+    "churnflag": None, "retrain": None,
+    # carry / ys
+    "busy": 0, "cursor": 0, "snap": 0,
+    "resp": 1, "rtt": 1, "rep": 1, "shed": 1, "hmask": 1, "rtt2": 1,
+}
+
+
+def _spec_tree(tree):
+    out = {}
+    for k in tree:
+        ax = _T_AXIS[k]                 # KeyError = unshardable state
+        out[k] = P() if ax is None else P(*([None] * ax + ["trials"]))
+    return out
+
+
+def _shardable(st: _Static) -> bool:
+    # the capacity ledger carries global scalars (last_t, event pointer,
+    # routed_inactive) and the closed-loop fleet a global fallback
+    # counter: both force the single-device path
+    return st.capacity is None and not st.closed_loop
+
+
+_FN_CACHE: Dict[Tuple, object] = {}
+
+
+def _get_fn(st: _Static, mode: str, ndev: int, trees=None):
+    key = (st, mode, ndev)
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        run = _build_kernel(st)
+        if mode == "shard":
+            consts, xs, carry0, ys_keys = trees
+            mesh = Mesh(np.array(jax.devices()), axis_names=("trials",))
+            cr_spec = _spec_tree(carry0)
+            fn = jax.jit(shard_map(
+                run, mesh=mesh,
+                in_specs=(_spec_tree(consts), _spec_tree(xs), cr_spec),
+                out_specs=(cr_spec, _spec_tree(ys_keys)),
+                check_rep=False))
+        else:
+            fn = jax.jit(run)
+        _FN_CACHE[key] = fn
+    return fn
+
+
+_YS_KEYS = {"resp": None, "rtt": None, "rep": None, "shed": None,
+            "hmask": None, "rtt2": None}
+
+
+def _execute(st, consts, xs, carry0, force_single=False):
+    ndev = jax.device_count()
+    T = carry0["busy"].shape[0]
+    use_shard = (not force_single and ndev > 1 and _shardable(st)
+                 and T % ndev == 0)
+    with enable_x64():
+        cj = {k: jnp.asarray(v) for k, v in consts.items()}
+        xj = {k: jnp.asarray(v) for k, v in xs.items()}
+        crj = {k: jnp.asarray(v) for k, v in carry0.items()}
+        if use_shard:
+            fn = _get_fn(st, "shard", ndev, (cj, xj, crj, _YS_KEYS))
+        else:
+            fn = _get_fn(st, "jit", 1)
+        final, ys = fn(cj, xj, crj)
+        final = {k: np.asarray(v) for k, v in final.items()}
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+    return final, ys, ("shard_map" if use_shard else "jit")
+
+
+# ----------------------------------------------------------------------
+# host-side summary (reuses _Metrics so percentile / nan / per-app
+# semantics are the serial code's, not a reimplementation)
+class _CompiledLedger:
+    """Duck-typed stand-in for CapacityController inside
+    ``_Metrics.summary`` (finalize + prov_s + telemetry)."""
+
+    def __init__(self, final, decisions: int):
+        self.prov_s = np.array(final["prov"], float)
+        self._last_t = float(final["last_t"])
+        self._active = np.asarray(final["active"], bool)
+        self._final = final
+        self._decisions = decisions
+
+    def finalize(self, t_end):
+        t_end = np.asarray(t_end, float)
+        self.prov_s += self._active.sum(axis=1) \
+            * np.maximum(t_end - self._last_t, 0.0)
+        self._last_t = float(np.max(t_end))
+
+    def telemetry(self):
+        f = self._final
+        return {
+            "decisions": self._decisions,
+            "scale_ups": np.array(f["s_ups"]),
+            "scale_downs": np.array(f["s_dns"]),
+            "wakeups": np.array(f["wakeups"]),
+            "routed_inactive": int(f["routed_inactive"]),
+            "mean_util": np.asarray(f["util_sum"])
+            / max(self._decisions, 1),
+            "active_final": self._active.sum(axis=1),
+        }
+
+
+def _online_summary(cluster: _Cluster, st: _Static, final, aux):
+    """Mirror of ``OnlineFleet.stats()`` from the final carry.  Accuracy
+    trackers are only maintained in-kernel when they can steer routing
+    (``fallback_threshold > 0``); otherwise ``accuracy`` is None."""
+    cfg = cluster.cfg
+    J = cfg.n_requests
+    steps = np.asarray(aux["retrain_steps"], int)
+    versions = np.zeros(st.n_apps, np.int64)
+    for j in steps:
+        lo = max(0, j - st.obs_window)
+        present = np.unique(cluster.req_app[lo:j])
+        versions[present] += 1
+    out = {
+        "versions": versions,
+        "retrain_times": [float(cluster.req_t[j]) for j in steps],
+        "trained_frac": float(np.asarray(final["trained"]).mean()),
+        "accuracy": None,
+    }
+    if st.fallback:
+        Wa = st.acc_window
+        ring = np.array(final["tr_ring"])            # (A, Wa, T)
+        pos = np.array(final["tr_pos"])
+        cnt = np.array(final["tr_cnt"])
+        done = np.array(final["pd_done"])
+        err_all = np.asarray(final["pd_err"])
+        fin_all = np.asarray(final["pd_fin"])
+        for s in range(J):                   # final fold at now = inf
+            m = ~done[s] & (fin_all[s] <= np.inf)
+            if not m.any():
+                continue
+            a = int(cluster.req_app[s])
+            err = np.minimum(np.abs(err_all[s]), 1.0)
+            idx = np.flatnonzero(m)
+            ring[a][pos[a, idx], idx] = err[idx]
+            pos[a, idx] = (pos[a, idx] + 1) % Wa
+            cnt[a, idx] += 1
+            done[s] |= m
+        filled = np.minimum(cnt, Wa)                 # (A, T)
+        valid = np.arange(Wa)[None, :, None] < filled[:, None, :]
+        esum = np.where(valid, ring, 0.0).sum(axis=1)
+        acc = 1.0 - esum / np.maximum(filled, 1)
+        out["accuracy"] = np.where(filled > 0, acc, 1.0)
+    return out
+
+
+def _summarize(cluster: _Cluster, st: _Static, final, ys, aux,
+               backend: str):
+    cfg = cluster.cfg
+    m = _Metrics(cfg)
+    resp = ys["resp"].T                              # (T, J)
+    rtt = ys["rtt"].T
+    rep = ys["rep"].T.astype(np.int64)
+    shed = ys["shed"].T
+    hmask = ys["hmask"].T
+    rtt2 = ys["rtt2"].T
+    served = ~shed
+    cpu_a = cluster.cpu_req[cluster.req_app][None, :]     # (1, J)
+    mem_a = cluster.mem_req[cluster.req_app][None, :]
+    m.rtts = resp
+    m.chosen = np.where(shed, -1, rep)
+    m.shed = shed
+    m.busy_s = (np.where(served, rtt, 0.0) + hmask * rtt2).sum(axis=1)
+    m.cpu_s = (np.where(served, cpu_a * rtt, 0.0)
+               + hmask * cpu_a * rtt2).sum(axis=1)
+    m.mem_s = (np.where(served, mem_a * rtt, 0.0)
+               + hmask * mem_a * rtt2).sum(axis=1)
+    with np.errstate(invalid="ignore"):
+        over = resp - m.slo
+    m.slo_violation_s = np.where(served, np.maximum(over, 0.0),
+                                 0.0).sum(axis=1)
+    m.n_hedged = int(hmask.sum())
+    m.hedged = hmask.sum(axis=1).astype(np.int64)
+    m.n_fallback = int(final.get("n_fallback", 0))
+    ledger = None
+    if cfg.capacity is not None:
+        ledger = _CompiledLedger(final, int(aux["decisions"]))
+    summary = m.summary(cluster, busy_until=np.asarray(final["busy"]),
+                        capacity=ledger)
+    if st.closed_loop:
+        summary["online"] = _online_summary(cluster, st, final, aux)
+    summary["simcore_backend"] = backend
+    return summary
+
+
+# ----------------------------------------------------------------------
+# public entry points
+def run_compiled(cluster: _Cluster, policy: str, *, seed_blocks=None,
+                 force_single: bool = False) -> Dict[str, np.ndarray]:
+    """Run one (cluster, policy) pass through the compiled scan kernel.
+
+    Drop-in for ``SimStepper(cluster, make_policy(...)).run()`` on
+    supported configs (see :func:`supports`); raises ValueError on an
+    unsupported one.  ``seed_blocks`` mirrors RandomChoice's campaign
+    blocks; ``force_single`` pins the single-device jit path even when
+    multiple devices are visible (fallback regression tests).
+    """
+    reason = supports(cluster.cfg, policy)
+    if reason is not None:
+        raise ValueError(f"simcore cannot run this config: {reason}")
+    st, consts, xs, carry0, aux = _lower(cluster, policy, seed_blocks)
+    final, ys, backend = _execute(st, consts, xs, carry0, force_single)
+    return _summarize(cluster, st, final, ys, aux, backend)
+
+
+def run_sim_compiled(cfg: SimConfig, policy: str = "perf_aware",
+                     force_single: bool = False):
+    """Compiled mirror of :func:`~repro.core.simulator.run_sim`."""
+    return run_compiled(_build_cluster(cfg), policy,
+                        force_single=force_single)
+
+
+def fleet_throughput(n_requests: int = 1_000_000, n_nodes: int = 250,
+                     n_replicas_per_app: int = 200, n_apps: int = 5,
+                     n_trials: int = 4, policy: str = "perf_aware",
+                     seed: int = 0, arrival_rate: float = 2000.0):
+    """Fleet-scale demo: million-request x thousand-replica runs with
+    in-kernel noise (no (T, J, R) host tensors, no serial-parity claim).
+
+    Returns (events_per_second, stats_dict).  Used by
+    ``benchmarks/bench_simcore.py`` to demonstrate the ROADMAP-scale
+    configuration runs in seconds.
+    """
+    import time
+
+    from repro.core.simulator import APPS
+
+    apps = tuple(APPS)[:n_apps]
+    cfg = SimConfig(n_nodes=n_nodes, n_replicas_per_app=n_replicas_per_app,
+                    apps=apps, n_requests=n_requests, n_trials=n_trials,
+                    seed=seed, arrival_rate=arrival_rate)
+    from dataclasses import replace as _dc_replace
+    st = _dc_replace(_static_for(cfg, policy), native_noise=True)
+
+    rng = np.random.default_rng(seed)
+    T, A, K, N = n_trials, n_apps, n_replicas_per_app, n_nodes
+    R = A * K
+    mean_rtt = np.array([APPS[a][0] for a in apps])
+    imat = 0.5 * rng.uniform(0.05, 0.35, size=(A, A))
+    node_of = rng.integers(0, N, size=(T, R)).astype(np.int32)
+    accel = np.clip(rng.normal(0.0, 0.3, size=(T, N)), -0.8, 2.0)
+    app_of = np.repeat(np.arange(A), K)
+    req_app = rng.integers(0, A, size=n_requests).astype(np.int32)
+    req_t = np.cumsum(rng.exponential(1.0 / arrival_rate,
+                                      size=n_requests))
+    trial = np.arange(T)
+    speed = np.empty((A, T, K))
+    cand_node = np.empty((A, T, K), np.int32)
+    log_rbar = np.log(mean_rtt)
+    for a in range(A):
+        nodes = node_of[:, a * K:(a + 1) * K]
+        speed[a] = 1.0 + accel[trial[:, None], nodes]
+        cand_node[a] = nodes
+    mate_idx, mate_pad = _mates_plan(node_of, N)
+    mate_app = app_of[mate_idx].astype(np.int32)         # (T, N, B)
+    irow = np.broadcast_to(imat[:, None, :], (A, T, A)).copy()
+    consts = {"node_of": node_of, "mate_idx": mate_idx,
+              "mate_app": mate_app, "mate_pad": mate_pad,
+              "imat_pre": irow,
+              "speed_pre": speed, "cand_node": cand_node,
+              "log_rbar_pre": log_rbar, "mean_rtt": mean_rtt,
+              "key": jax.random.PRNGKey(seed)}
+    if not st.reactive:
+        perm, bstart, bend = _bucket_plan(node_of * A + app_of[None, :],
+                                          N * A)
+        consts.update(perm=perm, bstart=bstart, bend=bend)
+    xs = {"j": np.arange(n_requests, dtype=np.int32), "app": req_app,
+          "t": req_t}
+    carry0 = {"busy": np.zeros((T, R))}
+    if policy == "round_robin":
+        carry0["cursor"] = np.zeros(T, np.int64)
+
+    t0 = time.perf_counter()
+    final, ys, backend = _execute(st, consts, xs, carry0)
+    wall = time.perf_counter() - t0
+    resp = ys["resp"]
+    stats = {"mean_rtt": float(resp.mean()),
+             "p99_rtt": float(np.percentile(resp, 99)),
+             "n_requests": n_requests, "n_replicas": R,
+             "n_trials": T, "wall_s": wall, "backend": backend,
+             "events_per_s": n_requests * T / wall}
+    return stats["events_per_s"], stats

@@ -67,7 +67,6 @@ The declarative layer over these knobs lives in
 """
 from __future__ import annotations
 
-import heapq
 import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -76,7 +75,8 @@ import numpy as np
 
 from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
 from repro.core.capacity import (CapacityConfig, CapacityController,
-                                 DEFAULT_SLO_S, MembershipEvent)
+                                 DEFAULT_SLO_S, MembershipEvent,
+                                 membership_timeline)
 from repro.core.online import OnlineFleet
 from repro.monitoring.metrics import PeriodicRefresh
 
@@ -264,6 +264,12 @@ class _Cluster:
         self._trial = np.arange(T)
         self._flat_nodes = (self._trial[:, None] * N
                             + self.node_of).ravel()
+        # per-event scratch (DESIGN.md §13): the busy mask and the
+        # weighted-occupancy product are recomputed every request, so the
+        # serial reference path reuses ONE pair of (T, R) buffers instead
+        # of allocating two fresh arrays per event
+        self._busy_mask = np.empty(self.node_of.shape, bool)
+        self._busy_w = np.empty(self.node_of.shape, float)
 
     def in_drift(self, now: float) -> bool:
         return self.cfg.t_drift is not None and now >= self.cfg.t_drift
@@ -286,7 +292,7 @@ class _Cluster:
             else:
                 weight = np.broadcast_to(imat[a][self.app_of],
                                          self.node_of.shape)
-            trial = np.arange(T)
+            trial = self._trial          # hoisted: no np.arange rebuild
             prep = _AppPrep(
                 candidates=cand,
                 cand_flat=(trial[:, None] * self.cfg.n_nodes
@@ -303,10 +309,12 @@ class _Cluster:
         """(T*N,) summed interference weight of busy replicas per
         (trial, node) bucket — the shared core of :meth:`rtt_draw` and
         :meth:`rtt_draw_at`.  One bincount is O(T*R) instead of the
-        O(T*C*R) mask product; each candidate then gathers its bucket."""
-        busy = busy_until > now                                  # (T, R)
-        return np.bincount(self._flat_nodes,
-                           weights=(busy * p.weight).ravel(),
+        O(T*C*R) mask product; each candidate then gathers its bucket.
+        The mask and the product land in preallocated scratch buffers
+        (``__post_init__``) — zero per-event allocations on this path."""
+        busy = np.greater(busy_until, now, out=self._busy_mask)  # (T, R)
+        w = np.multiply(busy, p.weight, out=self._busy_w)
+        return np.bincount(self._flat_nodes, weights=w.ravel(),
                            minlength=self._tn)
 
     @staticmethod
@@ -575,36 +583,32 @@ class SimStepper:
             outages = ((t0, t0 + duration),)
         self.snapshot = PeriodicRefresh(cfg.prediction_lag_s, outages) \
             if (cfg.prediction_lag_s > 0 or outages) else None
-        # membership-event timeline (DESIGN.md §12): node churn, spot
-        # preemption, and autoscaler epochs all queue here and are
-        # applied, in time order, before each request routes
-        self._events: List[MembershipEvent] = []
-        self._seq = 0
-        if cfg.churn is not None:
-            self._push_event(cfg.churn[0], "churn")
         self.capacity: Optional[CapacityController] = None
         if cfg.capacity is not None:
             self.capacity = CapacityController(
                 cfg.capacity, cluster.app_of, cluster.node_of,
                 cluster.mean_rtt, cluster.req_app, cluster.req_t,
                 cluster.preempted_node)
-            self._push_event(cfg.capacity.decide_every_s, "scale")
-            if cfg.preempt is not None:
-                self._push_event(cfg.preempt[0], "preempt_down")
-                self._push_event(cfg.preempt[0] + cfg.preempt[1],
-                                 "preempt_up")
-
-    def _push_event(self, t: float, kind: str):
-        heapq.heappush(self._events,
-                       MembershipEvent(float(t), self._seq, kind))
-        self._seq += 1
+        # membership-event timeline (DESIGN.md §12): node churn, spot
+        # preemption, and autoscaler epochs ride ONE precomputed
+        # timeline in exact heap pop order — event times are
+        # data-independent, so `membership_timeline` materialises the
+        # sequence up front and this stepper walks it with a pointer
+        # (the compiled scan core lowers the same timeline to masked
+        # per-step updates, DESIGN.md §13)
+        self._timeline: List[MembershipEvent] = membership_timeline(
+            float(cluster.req_t[-1]), churn=cfg.churn,
+            capacity=cfg.capacity, preempt=cfg.preempt)
+        self._ev_ptr = 0
 
     def _advance_membership(self, now: float):
-        """Apply every queued membership event with ``t <= now``: the
-        churn busy-bump (numerically identical to the old one-shot
-        latch), spot preemption windows, and autoscaler epochs."""
-        while self._events and self._events[0].t <= now:
-            ev = heapq.heappop(self._events)
+        """Apply every timeline event with ``t <= now``: the churn
+        busy-bump (numerically identical to the old one-shot latch),
+        spot preemption windows, and autoscaler epochs."""
+        while self._ev_ptr < len(self._timeline) \
+                and self._timeline[self._ev_ptr].t <= now:
+            ev = self._timeline[self._ev_ptr]
+            self._ev_ptr += 1
             if ev.kind == "churn":
                 down = self.cluster.node_of \
                     == self.cluster.failed_node[:, None]         # (T, R)
@@ -614,8 +618,6 @@ class SimStepper:
                     self.busy_until)
             elif ev.kind == "scale":
                 self.capacity.decide(ev.t, self.busy_until)
-                self._push_event(ev.t + self.cfg.capacity.decide_every_s,
-                                 "scale")
             elif ev.kind == "preempt_down":
                 self.capacity.preempt(ev.t, self.busy_until)
             elif ev.kind == "preempt_up":
