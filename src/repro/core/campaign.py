@@ -190,6 +190,27 @@ def _run_stacked(stacked: _Cluster, pol_name: str, seed0: int,
     return SimStepper(stacked, pol).run()
 
 
+def compiled_coverage(policies: Optional[Sequence[str]] = None
+                      ) -> List[Tuple[str, str, str]]:
+    """Every (registered scenario, policy) pair the compiled kernel
+    would kick back to the serial stepper under ``backend="auto"``, as
+    ``(scenario, policy, reason)`` rows — empty means 100% compiled
+    coverage.  ``bench_simcore.py --smoke`` and the test suite gate on
+    this so a support-matrix regression is loud, not a silent
+    10-100x slowdown in the next campaign sweep."""
+    from repro.core import simcore
+    pols = tuple(policies) if policies is not None \
+        else DEFAULT_POLICIES + ("oracle",)
+    out: List[Tuple[str, str, str]] = []
+    for name in scenario_names():
+        cfg = get_scenario(name).compile(seed=0)
+        for pol in pols:
+            reason = simcore.supports(cfg, pol)
+            if reason is not None:
+                out.append((name, pol, reason))
+    return out
+
+
 def run_scenario(scenario, policies: Sequence[str] = DEFAULT_POLICIES,
                  seeds: Sequence[int] = tuple(range(12)),
                  include_oracle: bool = True, backend: str = "serial",

@@ -7,12 +7,20 @@ a jitted scan over the request grid, with every piece of mutable state
 held as dense arrays carried through the scan:
 
 * replica occupancy ``busy_until`` as a dense ``(T, R)`` carry (serial
-  semantics: never decreases per replica);
+  semantics: never decreases per replica), plus an INCREMENTAL
+  per-(node, app) busy-count carry for the predictive policies: instead
+  of re-reducing all R replicas per step, the kernel delta-updates a
+  dense ``(A, T, N)`` count tensor on dispatch and pops completed
+  replicas through an amortized ``lax.while_loop`` expiry sweep
+  (``counted`` tracks membership in the counts, so every pop is an
+  O(T·N) masked one-hot update — scatter-free);
 * membership events — node churn, autoscaler epochs, spot preemption —
   from the :func:`~repro.core.capacity.membership_timeline` lowered to
-  masked time-indexed updates (churn becomes an idempotent per-step
-  ``max`` bump; capacity events are walked by an in-kernel pointer +
-  ``lax.while_loop``, so each event fires exactly once, in heap order);
+  masked time-indexed updates (with a capacity plane, churn is an event
+  kind walked by the same in-kernel pointer + ``lax.while_loop`` as the
+  autoscaler epochs, so it interleaves in exact heap order; without
+  one, it stays an idempotent per-step ``max`` bump — either way the
+  count carry resyncs from a full bucket reduction at the churn step);
 * policy scoring reuses the exact arithmetic of the vectorized
   ``Policy.score`` batch axis (``BUSY_PENALTY``, argmin-first tie
   break, ``mask_inactive``) — in-kernel, per step;
@@ -52,6 +60,7 @@ an alias would corrupt the caller's plan arrays.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -74,9 +83,21 @@ from repro.core.simulator import SimConfig, _build_cluster, _Cluster, _Metrics
 from repro.monitoring.metrics import PeriodicRefresh
 
 __all__ = ["supports", "run_compiled", "run_sim_compiled",
-           "fleet_throughput"]
+           "fleet_throughput", "cache_stats"]
 
-_EV_KIND = {"scale": 0, "preempt_down": 1, "preempt_up": 2}
+_EV_KIND = {"scale": 0, "preempt_down": 1, "preempt_up": 2, "churn": 3}
+
+#: segment-sum backend for the from-scratch bucket reductions (count
+#: resyncs at churn, snapshot refreshes): None auto-selects the Pallas
+#: kernel on TPU and the XLA sort-plan elsewhere; tests pin "pallas"
+#: (interpret mode on CPU) or "xla" explicitly.
+_SEGSUM_BACKEND: Optional[str] = None
+
+
+def _pallas_segsum() -> bool:
+    if _SEGSUM_BACKEND is not None:
+        return _SEGSUM_BACKEND == "pallas"
+    return jax.default_backend() == "tpu"
 
 
 # ----------------------------------------------------------------------
@@ -122,23 +143,18 @@ class _Static:
 
 def supports(cfg: SimConfig, policy: str) -> Optional[str]:
     """None when ``run_compiled`` reproduces the serial stepper for this
-    (config, policy); otherwise the human-readable reason it cannot."""
+    (config, policy); otherwise the human-readable reason it cannot.
+
+    Every SimConfig feature combination is lowered — churn interleaves
+    with autoscaler/preemption epochs through the shared membership
+    timeline, and the closed-loop fleet composes with the capacity
+    plane and the oracle hedger — so the only rejections left are
+    policies the kernel has no score lowering for."""
     cls = POLICIES.get(policy)
     if cls is None:
         return f"unknown policy {policy!r}"
     if not getattr(cls, "scan_lowered", False):
         return f"policy {policy!r} has no in-kernel score lowering"
-    if cfg.churn is not None and cfg.capacity is not None:
-        return ("churn + capacity share one membership heap; the kernel "
-                "lowers churn as a masked bump which cannot interleave "
-                "with autoscaler epochs")
-    hedging = policy in ("perf_aware", "oracle") \
-        and cfg.hedge_factor is not None
-    needs_pred = hedging or "predicted" in cls.requires
-    if cfg.closed_loop and needs_pred and policy == "oracle":
-        return "closed-loop fleet under an oracle hedger is not lowered"
-    if cfg.closed_loop and needs_pred and cfg.capacity is not None:
-        return "closed-loop + capacity is not lowered (never co-occurs)"
     return None
 
 
@@ -165,6 +181,28 @@ def _static_for(cfg: SimConfig, policy: str) -> _Static:
         fallback_threshold=cfg.fallback_threshold if closed else 0.0,
         obs_window=max(1, min(cfg.online_window, cfg.n_requests)),
         acc_window=max(1, int(cfg.accuracy_window)))
+
+
+def _count_flags(st: _Static) -> Tuple[bool, bool, bool]:
+    """(full_actual, need_live, need_snap): which occupancy sources the
+    kernel draws full-K interference from, hence which incremental
+    count carries exist.  ``need_live`` counts track the live ``busy``
+    occupancy; ``need_snap`` counts track the stale snapshot."""
+    if st.reactive:
+        return False, False, False
+    full_actual = st.policy != "perf_aware" \
+        or (not st.closed_loop and not st.snapshot)
+    need_live = full_actual or (st.closed_loop and not st.snapshot)
+    return full_actual, need_live, st.snapshot
+
+
+def _needs_plan(st: _Static) -> bool:
+    """True when the kernel still performs a from-scratch bucket
+    reduction (count resync at the churn step; snapshot refresh without
+    a live count carry to copy from)."""
+    _, need_live, need_snap = _count_flags(st)
+    return (need_live and st.churn is not None) \
+        or (need_snap and not need_live)
 
 
 # ----------------------------------------------------------------------
@@ -325,13 +363,18 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
         "cand_node": cand_node, "log_rbar_pre": lr_pre,
         "mean_rtt": np.asarray(cluster.mean_rtt, float),
     }
-    if not st.reactive:
-        # full-K draws and fleet features reduce all R replicas to
-        # (node, app) counts once per step — sort-plan, scatter-free
+    full_actual, need_live, need_snap = _count_flags(st)
+    if _needs_plan(st):
+        # the remaining from-scratch bucket reductions (count resync at
+        # the churn step, snapshot refresh without a live carry): the
+        # Pallas segment-sum kernel on TPU, else the XLA sort plan
         na_key = np.asarray(cluster.node_of) * A \
             + cluster.app_of[None, :]
-        perm, bstart, bend = _bucket_plan(na_key, N * A)
-        consts.update(perm=perm, bstart=bstart, bend=bend)
+        if _pallas_segsum():
+            consts["na_key"] = na_key.astype(np.int32)
+        else:
+            perm, bstart, bend = _bucket_plan(na_key, N * A)
+            consts.update(perm=perm, bstart=bstart, bend=bend)
     if st.drift:
         imat_p = cluster.imat_post if cluster.imat_post is not None \
             else cluster.imat
@@ -365,7 +408,16 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
         if st.policy == "random":
             xs["draw"] = _policy_draws(J, T, K, cfg.seed + 2, seed_blocks)
     if st.churn is not None:
-        xs["churnflag"] = req_t >= st.churn[0]
+        if st.capacity is None:
+            # no event walk to ride: churn stays a masked max-bump
+            xs["churnflag"] = req_t >= st.churn[0]
+        if need_live:
+            # one-hot flag at the churn step: the count carry resyncs
+            # from a full bucket reduction right after the bump
+            cf = req_t >= st.churn[0]
+            resync = cf.copy()
+            resync[1:] &= ~cf[:-1]
+            xs["resync"] = resync
     if st.drift:
         xs["driftflag"] = req_t >= cfg.t_drift
     if st.cold_start:
@@ -385,12 +437,19 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
         carry0["cursor"] = np.zeros(T, np.int64)
     if st.snapshot:
         carry0["snap"] = np.zeros((T, R))
+    # incremental occupancy counts: nothing is busy at t=0
+    if need_live:
+        carry0["cnt"] = np.zeros((A, T, N), np.int32)
+        carry0["counted"] = np.zeros((T, R), bool)
+    if need_snap:
+        carry0["snap_cnt"] = np.zeros((A, T, N), np.int32)
+        carry0["snap_counted"] = np.zeros((T, R), bool)
 
     aux: Dict[str, object] = {"st": st}
     cap = st.capacity
     if cap is not None:
-        events = membership_timeline(float(req_t[-1]), capacity=cap,
-                                     preempt=cfg.preempt)
+        events = membership_timeline(float(req_t[-1]), churn=cfg.churn,
+                                     capacity=cap, preempt=cfg.preempt)
         ev_t = np.array([ev.t for ev in events])
         ev_kind = np.array([_EV_KIND[ev.kind] for ev in events], np.int32)
         ev_step = np.searchsorted(req_t, ev_t, side="left").astype(np.int32)
@@ -468,6 +527,8 @@ def _build_kernel(st: _Static):
     PEN = BUSY_PENALTY
     D = N + A
     Wn, Wa = st.obs_window, st.acc_window
+    full_actual, need_live, need_snap = _count_flags(st)
+    seg_pallas = _pallas_segsum()
 
     def run(c, xs, carry0):
         T = c["node_of"].shape[0]
@@ -504,25 +565,110 @@ def _build_kernel(st: _Static):
             return lax.dynamic_update_slice_in_dim(m, v, a0, axis=1)
 
         if not st.reactive:
-            def busy_counts(busy_src, now):
-                """(T, N, A) busy-replica counts per (node, app) — one
-                O(T·R) reduction per occupancy source, feeding full-K
-                draws and the fleet features."""
-                busyb = (busy_src > now).astype(jnp.float64)
-                return bucket_sum(busyb, c["perm"], c["bstart"],
-                                  c["bend"]).reshape(-1, N, A)
+            def recount(busy_src, now):
+                """From-scratch (A, T, N) busy counts + (T, R) counted
+                mask — the full bucket reduction, amortized to count
+                resyncs (churn) and snapshot refreshes.  Pallas
+                segment-sum on TPU, XLA sort plan elsewhere."""
+                busyb = busy_src > now
+                if seg_pallas:
+                    from repro.kernels.segment_sum import segment_sum
+                    flat = segment_sum(busyb.astype(jnp.float64),
+                                       c["na_key"], N * A)
+                else:
+                    flat = bucket_sum(busyb.astype(jnp.float64),
+                                      c["perm"], c["bstart"], c["bend"])
+                return (flat.reshape(-1, N, A).transpose(2, 0, 1)
+                        .astype(jnp.int32), busyb)
+
+            # sub-blocks per app for the expiry pops; _SUB=2 would
+            # double the pops one round can retire but also doubles
+            # every scatter's index arrays, which measured strictly
+            # worse (4.2-4.5 vs 3.7-3.8 ms/step at the large config)
+            _SUB = 1
+            _NB = A * _SUB                  # sub-blocks per trial
+            _KB = K // _SUB                 # replicas per sub-block
+
+            def expire(cnt_, counted_, busy_src, now):
+                """Incremental count expiry: pop replicas whose
+                ``busy_until`` fell to <= now — the first AND last
+                expired of every app block, so up to 2·A per trial
+                per round.  Total pops are bounded by total
+                dispatches (~1/trial/step), so one unrolled round
+                retires everything on almost every step and the
+                while_loop behind it is entered only on burst tails.
+                Each round locates its pops with two iota min/max
+                reductions over the (T, NB, KB) expiry mask — measured
+                ~1.3 ms/step cheaper than bool argmax + a flipped-copy
+                argmax + any on XLA CPU — plus O(T·A)-element
+                scatters; never a dense (T, N) one-hot or a (T, R)
+                gather+cumsum bucket reduction (XLA's CPU cumsum alone
+                costs more than this whole loop).  The f64 expiry
+                compare is hoisted out and the expired mask rides the
+                carry, so rounds touch only bool masks."""
+                expm = busy_src <= now                       # (T, R)
+                blk = jnp.arange(_NB)[None, :]               # (1, NB)
+                base = (blk // _SUB) * K + (blk % _SUB) * _KB
+                t2 = trial[:, None]                          # (T, 1)
+
+                def cond(s):
+                    return s[2].any()
+
+                def body(s):
+                    cnt__, cted__, ex = s
+                    exv = ex.reshape(T, _NB, _KB)
+                    kio = jnp.arange(_KB, dtype=jnp.int32)[None, None, :]
+                    k1 = jnp.where(exv, kio, _KB).min(2)     # first hit
+                    k2 = jnp.where(exv, kio, -1).max(2)      # last hit
+                    hasb = k2 >= 0                           # (T, NB)
+                    k1 = jnp.where(hasb, k1, 0)
+                    has2 = hasb & (k2 != k1)                 # 2nd pop
+                    i1 = base + k1                           # replica ids
+                    i2 = base + k2
+                    n1 = c["node_of"][t2, i1]                # (T, NB)
+                    n2 = c["node_of"][t2, i2]
+                    app = blk // _SUB
+                    # one scatter per carry (each costs a buffer copy)
+                    aa = jnp.concatenate([app + 0 * k1, app + 0 * k2], 1)
+                    tt = jnp.concatenate([t2 + 0 * k1, t2 + 0 * k2], 1)
+                    nn = jnp.concatenate([n1, n2], 1)
+                    dec = jnp.concatenate([hasb, has2], 1)
+                    cnt__ = cnt__.at[aa, tt, nn].add(
+                        -dec.astype(cnt__.dtype))
+                    ii = jnp.concatenate([jnp.where(hasb, i1, R),
+                                          jnp.where(has2, i2, R)], 1)
+                    cted__ = cted__.at[tt, ii].set(False, mode="drop")
+                    return cnt__, cted__, expm & cted__
+                # first round unrolled: it runs on ~every step (some
+                # trial always has an expiry), and outside the loop XLA
+                # fuses it into the step instead of paying while-loop
+                # carry boundaries
+                first = body((cnt_, counted_, expm & counted_))
+                out = lax.while_loop(cond, body, first)
+                return out[0], out[1]
+
+            def gather_counts(counts, nodes):
+                """(A, T, N) counts at candidate nodes -> (A, T, K)."""
+                idx = jnp.broadcast_to(nodes[None], (A,) + nodes.shape)
+                return jnp.take_along_axis(counts, idx, axis=2)
 
         def _lognormal(inter, lr, z):
             v = 0.1 + inter
             u = jnp.log1p(v * v)
             return jnp.exp(lr - 0.5 * u + jnp.sqrt(u) * z)
 
-        def rtt_full(a, drift_on, busy_src, now, z):
+        def rtt_full(a, drift_on, counts, z):
             """In-kernel ``_Cluster.rtt_draw`` over the app's whole
-            candidate row (T, K): reduce occupancy to per-(node, app)
-            counts once, then contract with the raw imat row.  The
-            serial bincount of ``busy · imat_row[app_of]`` is the same
-            sum reassociated — rounding-level drift only."""
+            candidate row (T, K) from the carried per-(node, app)
+            occupancy ``counts`` (A, T, N), contracted with the raw
+            imat row.  The interference score depends only on the
+            candidate's *node*, so the app-axis contraction is done
+            once per node — an (A,T,N)×(T,A) pre-contraction — and the
+            (T, K) candidate row is a cheap gather from the (T, N)
+            result instead of an (A,T,K) gather + einsum.  The serial
+            bincount of ``busy · imat_row[app_of]`` is the same sum
+            reassociated — rounding-level drift only (counts are
+            integer-exact)."""
             iw = per_app("imat_pre", a)                    # (T, A)
             lr = per_app("log_rbar_pre", a)
             sp = per_app("speed_pre", a)
@@ -531,10 +677,13 @@ def _build_kernel(st: _Static):
                 lr = jnp.where(drift_on, per_app("log_rbar_post", a), lr)
                 sp = jnp.where(drift_on, per_app("speed_post", a), sp)
             nodes = per_app("cand_node", a)                # (T, K)
-            counts = busy_counts(busy_src, now)
-            cc = jnp.take_along_axis(counts, nodes[:, :, None],
-                                     axis=1)               # (T, K, A)
-            inter = jnp.einsum("tka,ta->tk", cc, iw)
+            # unrolled (A is tiny, static): XLA's CPU lowering of the
+            # equivalent "atn,ta->tn" einsum is ~3x slower than five
+            # fused broadcast multiply-adds
+            w_cnt = counts[0] * iw[:, 0:1]                 # (T, N)
+            for a_ in range(1, A):
+                w_cnt = w_cnt + counts[a_] * iw[:, a_:a_ + 1]
+            inter = jnp.take_along_axis(w_cnt, nodes, axis=1)
             return _lognormal(inter, lr, z[:, None]) * sp
 
         def rtt_at(a, drift_on, busy_src, now, z, cand):
@@ -687,33 +836,51 @@ def _build_kernel(st: _Static):
                         last_scale, folded, util_sum, s_ups, s_dns)
 
             def apply_events(j, busy, pend_rtt, pend_fin, ptr, cv):
+                """Walk every membership event with ``t <= now`` in heap
+                order.  ``busy`` rides the loop carry because the churn
+                event bumps it mid-walk, and later autoscaler epochs in
+                the same step must see the post-churn occupancy (exact
+                serial interleaving)."""
                 if E == 0:
-                    return ptr, cv
+                    return ptr, busy, cv
 
                 def cond(s):
                     p = s[0]
                     return (p < E) \
                         & (c["ev_step"][jnp.minimum(p, E - 1)] <= j)
 
+                def ev_scale(t_ev, rate, s_):
+                    b = s_[0]
+                    return (b,) + decide(t_ev, rate, j, b, pend_rtt,
+                                         pend_fin, s_[1:])
+
                 def body(s):
                     p = s[0]
-                    cv_ = s[1:]
+                    bcv = s[1:]
                     t_ev = c["ev_t"][p]
                     rate = c["ev_rate"][p]
-                    if st.preempt:
-                        cv_ = lax.switch(
-                            c["ev_kind"][p],
-                            [lambda v: decide(t_ev, rate, j, busy,
-                                              pend_rtt, pend_fin, v),
-                             lambda v: pre_down(t_ev, busy, v),
-                             pre_up],
-                            cv_)
+                    if st.preempt or st.churn is not None:
+                        ident = lambda s_: s_
+                        branches = [
+                            lambda s_: ev_scale(t_ev, rate, s_),
+                            (lambda s_: (s_[0],) + pre_down(t_ev, s_[0],
+                                                            s_[1:]))
+                            if st.preempt else ident,
+                            (lambda s_: (s_[0],) + pre_up(s_[1:]))
+                            if st.preempt else ident,
+                            (lambda s_: (jnp.where(
+                                c["down"],
+                                jnp.maximum(s_[0], st.churn[0]
+                                            + st.churn[1]), s_[0]),)
+                             + s_[1:])
+                            if st.churn is not None else ident,
+                        ]
+                        bcv = lax.switch(c["ev_kind"][p], branches, bcv)
                     else:
-                        cv_ = decide(t_ev, rate, j, busy, pend_rtt,
-                                     pend_fin, cv_)
-                    return (p + 1,) + cv_
-                out = lax.while_loop(cond, body, (ptr,) + cv)
-                return out[0], out[1:]
+                        bcv = ev_scale(t_ev, rate, bcv)
+                    return (p + 1,) + bcv
+                out = lax.while_loop(cond, body, (ptr, busy) + cv)
+                return out[0], out[1], out[2:]
 
         # -------------------------------------------------------------
         if st.closed_loop:
@@ -736,9 +903,12 @@ def _build_kernel(st: _Static):
             a0 = a * K
             ncr = dict(cr)
 
-            # membership: churn as an idempotent masked max-bump (busy
-            # never decreases per replica, so re-applying is a no-op)
-            if st.churn is not None:
+            # membership: without a capacity plane churn is an
+            # idempotent masked max-bump (busy never decreases per
+            # replica, so re-applying is a no-op); with one it rides
+            # the event walk below so it interleaves with autoscaler
+            # epochs in exact heap order
+            if st.churn is not None and cap is None:
                 t_up = st.churn[0] + st.churn[1]
                 busy = jnp.where(x["churnflag"] & c["down"],
                                  jnp.maximum(busy, t_up), busy)
@@ -752,7 +922,7 @@ def _build_kernel(st: _Static):
                       cr["last_scale"],
                       cr["folded"] if st.pending else jnp.zeros((), bool),
                       cr["util_sum"], cr["s_ups"], cr["s_dns"])
-                ptr, cv = apply_events(
+                ptr, busy, cv = apply_events(
                     j, busy,
                     cr["pend_rtt"] if st.pending else None,
                     cr["pend_fin"] if st.pending else None,
@@ -792,9 +962,31 @@ def _build_kernel(st: _Static):
                 busy_c = sl(busy, a0)
                 wait_c = jnp.maximum(busy_c - now, 0.0)
 
+            # incremental occupancy counts: resync once at the churn
+            # bump, then expire completions amortized per step
+            if need_live:
+                cnt, counted = cr["cnt"], cr["counted"]
+                if st.churn is not None:
+                    cnt, counted = lax.cond(
+                        x["resync"], lambda s: recount(busy, now),
+                        lambda s: s, (cnt, counted))
+                cnt, counted = expire(cnt, counted, busy, now)
             if st.snapshot:
                 snap = jnp.where(x["refresh"], busy, cr["snap"])
                 ncr["snap"] = snap
+                if need_snap:
+                    s_cnt, s_cted = cr["snap_cnt"], cr["snap_counted"]
+                    if need_live:
+                        # at refresh snap == busy, so the snapshot
+                        # counts are a copy of the live carry
+                        s_cnt = jnp.where(x["refresh"], cnt, s_cnt)
+                        s_cted = jnp.where(x["refresh"], counted, s_cted)
+                    else:
+                        s_cnt, s_cted = lax.cond(
+                            x["refresh"], lambda s: recount(busy, now),
+                            lambda s: s, (s_cnt, s_cted))
+                    s_cnt, s_cted = expire(s_cnt, s_cted, snap, now)
+                    ncr.update(snap_cnt=s_cnt, snap_counted=s_cted)
             drift_on = x["driftflag"] if st.drift else False
             if st.native_noise:
                 kj = jax.random.fold_in(c["key"], j)
@@ -835,11 +1027,9 @@ def _build_kernel(st: _Static):
                 # the full-K actual draw is needed only when it scores
                 # (oracle) or seeds the Eq. 12 basis; otherwise the
                 # pick-only draw after argmin replaces it
-                full_actual = st.policy != "perf_aware" \
-                    or (not st.closed_loop and not st.snapshot)
                 actual = None
                 if full_actual:
-                    actual = rtt_full(a, drift_on, busy, now, z)
+                    actual = rtt_full(a, drift_on, cnt, z)
                     if cap is not None:
                         actual = actual * coldm
                 if st.closed_loop:
@@ -871,12 +1061,12 @@ def _build_kernel(st: _Static):
                                 cnt, cnt_a[None], ap, axis=0)
                             done = done.at[s].set(done[s] | m)
                             return ring, pos, cnt, done
-                        ring, pos, cnt, done = lax.fori_loop(
+                        tr_ring, tr_pos, tr_cnt, tr_done = lax.fori_loop(
                             0, J, tr_body,
                             (cr["tr_ring"], cr["tr_pos"], cr["tr_cnt"],
                              cr["pd_done"]))
-                        ncr.update(tr_ring=ring, tr_pos=pos, tr_cnt=cnt,
-                                   pd_done=done)
+                        ncr.update(tr_ring=tr_ring, tr_pos=tr_pos,
+                                   tr_cnt=tr_cnt, pd_done=tr_done)
 
                     def train(wt):
                         W_, tr_ = wt
@@ -901,12 +1091,12 @@ def _build_kernel(st: _Static):
                                           lambda wt: wt,
                                           (cr["W"], cr["trained"]))
                     ncr.update(W=W, trained=trained)
-                    snap_src = snap if st.snapshot else busy
-                    counts = busy_counts(snap_src, now)
+                    counts_src = s_cnt if st.snapshot else cnt
                     nodes = per_app("cand_node", a)
                     onehot = jnp.take(eye_n, nodes, axis=0)   # (T, K, N)
-                    cand_counts = jnp.take_along_axis(
-                        counts, nodes[:, :, None], axis=1)    # (T, K, A)
+                    cand_counts = gather_counts(
+                        counts_src, nodes).transpose(1, 2, 0)  # (T, K, A)
+                    cand_counts = cand_counts.astype(jnp.float64)
                     X = jnp.concatenate([onehot, cand_counts], axis=-1)
                     W_a = lax.dynamic_index_in_dim(W, a, 1,
                                                    keepdims=False)
@@ -918,7 +1108,7 @@ def _build_kernel(st: _Static):
                                            c["mean_rtt"][a])
                     predicted = fleet_pred
                     if st.fallback:
-                        ok = viable_mask(a, ring, pos, cnt)
+                        ok = viable_mask(a, tr_ring, tr_pos, tr_cnt)
                         predicted = jnp.where(ok[:, None], fleet_pred,
                                               0.0)
                         ncr["n_fallback"] = cr["n_fallback"] \
@@ -927,7 +1117,7 @@ def _build_kernel(st: _Static):
                     mean_b = jnp.broadcast_to(c["mean_rtt"][a], (T, K))
                     cold_on = x["coldflag"] if st.cold_start else False
                     if st.snapshot:
-                        stale = rtt_full(a, drift_on, snap, now, z)
+                        stale = rtt_full(a, drift_on, s_cnt, z)
                         basis = jnp.where(cold_on, mean_b, stale) \
                             if st.cold_start else stale
                         if cap is not None:
@@ -1002,19 +1192,50 @@ def _build_kernel(st: _Static):
             if st.admission:
                 resp = jnp.where(served, resp, jnp.nan)
             ncr["busy"] = busy
+            if need_live:
+                # delta-update the count carry exactly as the busy
+                # commit: +1 per newly-busy replica (a pick that
+                # already had queued work stays counted, no increment).
+                # One dispatch per trial -> a T-element scatter, never
+                # a dense (T, N) one-hot.
+                nodes_row = per_app("cand_node", a)        # (T, K)
+                np1 = nodes_row[trial, picks]
+                r1 = a0 + picks                            # replica ids
+                add1 = served & ~counted[trial, r1]
+                dt = cnt.dtype
+                cnt = cnt.at[a, trial, np1].add(add1.astype(dt))
+                counted = counted.at[
+                    trial, jnp.where(served, r1, R)].set(True,
+                                                         mode="drop")
+                if st.hedging:
+                    np2 = nodes_row[trial, second]
+                    r2 = a0 + second
+                    add2 = hmask & ~counted[trial, r2]
+                    cnt = cnt.at[a, trial, np2].add(add2.astype(dt))
+                    counted = counted.at[
+                        trial, jnp.where(hmask, r2, R)].set(True,
+                                                            mode="drop")
+                ncr["cnt"] = cnt
+                ncr["counted"] = counted
 
             if st.closed_loop:
+                # the fleet's finish mask mirrors serial observe():
+                # shed requests never complete (inf keeps them out of
+                # the training window and the accuracy fold)
+                fin_obs = jnp.where(served, finish, jnp.inf)
                 slot = jnp.mod(j, Wn)
                 ncr["obs_X"] = cr["obs_X"].at[slot].set(X[trial, picks])
                 ncr["obs_y"] = cr["obs_y"].at[slot].set(rtt_pick)
-                ncr["obs_fin"] = cr["obs_fin"].at[slot].set(finish)
+                ncr["obs_fin"] = cr["obs_fin"].at[slot].set(fin_obs)
                 ncr["obs_app"] = cr["obs_app"].at[slot].set(a)
                 ncr["obs_valid"] = cr["obs_valid"].at[slot].set(True)
                 if st.fallback:
                     perr = jnp.abs(fleet_pred[trial, picks] - rtt_pick) \
                         / jnp.maximum(rtt_pick, 1e-9)
                     ncr["pd_err"] = cr["pd_err"].at[j].set(perr)
-                    ncr["pd_fin"] = cr["pd_fin"].at[j].set(finish)
+                    ncr["pd_fin"] = cr["pd_fin"].at[j].set(fin_obs)
+                    if st.admission:
+                        ncr["pd_done"] = ncr["pd_done"].at[j].set(~served)
             if cap is not None:
                 ok_r = active[trial, rep]
                 if st.admission:
@@ -1022,7 +1243,11 @@ def _build_kernel(st: _Static):
                 ncr["routed_inactive"] = cr["routed_inactive"] \
                     + (~ok_r).sum()
                 if predicted is not None:
-                    pred_pick = predicted[trial, picks]
+                    # serial note_prediction feeds the RAW fleet
+                    # prediction (fallback may have zeroed `predicted`
+                    # for scoring, but the capacity EWMA never sees 0s)
+                    pred_src = fleet_pred if st.closed_loop else predicted
+                    pred_pick = pred_src[trial, picks]
                     cur = col(s_hat, a)
                     upd = (1.0 - al) * cur + al * pred_pick
                     s_hat = set_col(s_hat,
@@ -1054,7 +1279,7 @@ def _build_kernel(st: _Static):
 _T_AXIS = {
     # consts
     "node_of": 0, "down": 0, "hit": 0, "perm": 0, "bstart": 0, "bend": 0,
-    "mate_idx": 0, "mate_app": 0, "mate_pad": 0,
+    "na_key": 0, "mate_idx": 0, "mate_app": 0, "mate_pad": 0,
     "imat_pre": 1, "imat_post": 1,
     "speed_pre": 1, "speed_post": 1, "cand_node": 1, "log_rbar_pre": None,
     "log_rbar_post": None, "mean_rtt": None, "app_of": None,
@@ -1063,9 +1288,10 @@ _T_AXIS = {
     # xs
     "j": None, "app": None, "t": None, "z": 1, "zp": 1, "draw": 1,
     "refresh": None, "coldflag": None, "driftflag": None,
-    "churnflag": None, "retrain": None,
+    "churnflag": None, "resync": None, "retrain": None,
     # carry / ys
     "busy": 0, "cursor": 0, "snap": 0,
+    "cnt": 1, "counted": 0, "snap_cnt": 1, "snap_counted": 0,
     "resp": 1, "rtt": 1, "rep": 1, "shed": 1, "hmask": 1, "rtt2": 1,
 }
 
@@ -1085,26 +1311,50 @@ def _shardable(st: _Static) -> bool:
     return st.capacity is None and not st.closed_loop
 
 
-_FN_CACHE: Dict[Tuple, object] = {}
+# LRU-bounded kernel cache.  A campaign sweep builds one entry per
+# distinct (_Static, dispatch mode) pair — the 19-scenario grid times
+# the default policies lands well under 128 — but an unbounded dict
+# would pin every jitted callable (and its compiled executables) for
+# the life of the process across repeated ad-hoc sweeps.
+_FN_CACHE_MAX = 128
+_FN_CACHE: "OrderedDict[Tuple, object]" = OrderedDict()
+_FN_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    """Kernel-cache telemetry: current size, bound, hit/miss/eviction
+    counters (cumulative over the process)."""
+    return {"size": len(_FN_CACHE), "max": _FN_CACHE_MAX,
+            **_FN_STATS}
 
 
 def _get_fn(st: _Static, mode: str, ndev: int, trees=None):
-    key = (st, mode, ndev)
+    # the segment-sum backend is trace-time state (_pallas_segsum() is
+    # read inside _build_kernel), so it must be part of the cache key
+    # or a test flipping _SEGSUM_BACKEND would get a stale kernel
+    key = (st, mode, ndev, _pallas_segsum())
     fn = _FN_CACHE.get(key)
-    if fn is None:
-        run = _build_kernel(st)
-        if mode == "shard":
-            consts, xs, carry0, ys_keys = trees
-            mesh = Mesh(np.array(jax.devices()), axis_names=("trials",))
-            cr_spec = _spec_tree(carry0)
-            fn = jax.jit(shard_map(
-                run, mesh=mesh,
-                in_specs=(_spec_tree(consts), _spec_tree(xs), cr_spec),
-                out_specs=(cr_spec, _spec_tree(ys_keys)),
-                check_rep=False))
-        else:
-            fn = jax.jit(run)
-        _FN_CACHE[key] = fn
+    if fn is not None:
+        _FN_STATS["hits"] += 1
+        _FN_CACHE.move_to_end(key)
+        return fn
+    _FN_STATS["misses"] += 1
+    run = _build_kernel(st)
+    if mode == "shard":
+        consts, xs, carry0, ys_keys = trees
+        mesh = Mesh(np.array(jax.devices()), axis_names=("trials",))
+        cr_spec = _spec_tree(carry0)
+        fn = jax.jit(shard_map(
+            run, mesh=mesh,
+            in_specs=(_spec_tree(consts), _spec_tree(xs), cr_spec),
+            out_specs=(cr_spec, _spec_tree(ys_keys)),
+            check_rep=False))
+    else:
+        fn = jax.jit(run)
+    _FN_CACHE[key] = fn
+    while len(_FN_CACHE) > _FN_CACHE_MAX:
+        _FN_CACHE.popitem(last=False)
+        _FN_STATS["evictions"] += 1
     return fn
 
 
@@ -1112,12 +1362,35 @@ _YS_KEYS = {"resp": None, "rtt": None, "rep": None, "shed": None,
             "hmask": None, "rtt2": None}
 
 
+def _pad_trials(tree, T, Tp):
+    """Pad every trial-sharded array from T to Tp trials by replicating
+    the last trial.  Replication (vs zeros) keeps the padded rows on
+    the same code path as real ones — no special-casing in-kernel —
+    and their outputs are simply sliced off afterwards.  Safe because
+    trials are independent on every shardable config (``_shardable``
+    already excludes the global-ledger features)."""
+    out = {}
+    for k, v in tree.items():
+        ax = _T_AXIS[k]
+        if ax is None or v.shape[ax] != T:
+            out[k] = v
+            continue
+        idx = np.concatenate(
+            [np.arange(T), np.full(Tp - T, T - 1, np.int64)])
+        out[k] = np.take(v, idx, axis=ax)
+    return out
+
+
 def _execute(st, consts, xs, carry0, force_single=False):
     ndev = jax.device_count()
     T = carry0["busy"].shape[0]
-    use_shard = (not force_single and ndev > 1 and _shardable(st)
-                 and T % ndev == 0)
+    use_shard = not force_single and ndev > 1 and _shardable(st)
+    Tp = -(-T // ndev) * ndev if use_shard else T
     with enable_x64():
+        if Tp != T:
+            consts = _pad_trials(consts, T, Tp)
+            xs = _pad_trials(xs, T, Tp)
+            carry0 = _pad_trials(carry0, T, Tp)
         cj = {k: jnp.asarray(v) for k, v in consts.items()}
         xj = {k: jnp.asarray(v) for k, v in xs.items()}
         crj = {k: jnp.asarray(v) for k, v in carry0.items()}
@@ -1128,6 +1401,17 @@ def _execute(st, consts, xs, carry0, force_single=False):
         final, ys = fn(cj, xj, crj)
         final = {k: np.asarray(v) for k, v in final.items()}
         ys = {k: np.asarray(v) for k, v in ys.items()}
+    if Tp != T:
+        def _cut(tree):
+            out = {}
+            for k, v in tree.items():
+                ax = _T_AXIS[k]
+                if ax is not None and v.ndim > ax and v.shape[ax] == Tp:
+                    out[k] = np.take(v, np.arange(T), axis=ax)
+                else:
+                    out[k] = v
+            return out
+        final, ys = _cut(final), _cut(ys)
     return final, ys, ("shard_map" if use_shard else "jit")
 
 
@@ -1269,6 +1553,37 @@ def run_compiled(cluster: _Cluster, policy: str, *, seed_blocks=None,
     return _summarize(cluster, st, final, ys, aux, backend)
 
 
+def prepare_compiled(cluster: _Cluster, policy: str, *,
+                     seed_blocks=None):
+    """Lower + jit once, return a zero-arg callable that reruns the hot
+    kernel on device-resident inputs.
+
+    ``run_compiled`` pays fresh-cell costs on every call (re-lowering,
+    host-side xs rebuild — including the (J, T, K) noise pre-gather);
+    the callable returned here pays only the kernel plus summary, which
+    is the compiled engine's warm steady-state and the number the
+    benchmark's warm-ratio gate compares against the serial stepper's
+    hot-cache reruns.  Single-device jit path only."""
+    reason = supports(cluster.cfg, policy)
+    if reason is not None:
+        raise ValueError(f"simcore cannot run this config: {reason}")
+    st, consts, xs, carry0, aux = _lower(cluster, policy, seed_blocks)
+    with enable_x64():
+        cj = {k: jnp.asarray(v) for k, v in consts.items()}
+        xj = {k: jnp.asarray(v) for k, v in xs.items()}
+        crj = {k: jnp.asarray(v) for k, v in carry0.items()}
+        fn = _get_fn(st, "jit", 1)
+
+    def run() -> Dict[str, np.ndarray]:
+        with enable_x64():
+            final, ys = fn(cj, xj, crj)
+            final_np = {k: np.asarray(v) for k, v in final.items()}
+            ys_np = {k: np.asarray(v) for k, v in ys.items()}
+        return _summarize(cluster, st, final_np, ys_np, aux, "jit")
+
+    return run
+
+
 def run_sim_compiled(cfg: SimConfig, policy: str = "perf_aware",
                      force_single: bool = False):
     """Compiled mirror of :func:`~repro.core.simulator.run_sim`."""
@@ -1326,15 +1641,15 @@ def fleet_throughput(n_requests: int = 1_000_000, n_nodes: int = 250,
               "speed_pre": speed, "cand_node": cand_node,
               "log_rbar_pre": log_rbar, "mean_rtt": mean_rtt,
               "key": jax.random.PRNGKey(seed)}
-    if not st.reactive:
-        perm, bstart, bend = _bucket_plan(node_of * A + app_of[None, :],
-                                          N * A)
-        consts.update(perm=perm, bstart=bstart, bend=bend)
     xs = {"j": np.arange(n_requests, dtype=np.int32), "app": req_app,
           "t": req_t}
     carry0 = {"busy": np.zeros((T, R))}
     if policy == "round_robin":
         carry0["cursor"] = np.zeros(T, np.int64)
+    _, need_live, _ = _count_flags(st)
+    if need_live:
+        carry0["cnt"] = np.zeros((A, T, N), np.int32)
+        carry0["counted"] = np.zeros((T, R), bool)
 
     t0 = time.perf_counter()
     final, ys, backend = _execute(st, consts, xs, carry0)

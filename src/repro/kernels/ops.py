@@ -12,6 +12,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.moe_gmm import gmm as _gmm_pallas
+from repro.kernels.segment_sum import segment_sum as _segsum_pallas
 from repro.kernels.ssd import ssd as _ssd_pallas
 
 
@@ -46,3 +47,11 @@ def gmm(x, w, *, use_pallas=False, interpret=None):
         interp = (not _on_tpu()) if interpret is None else interpret
         return _gmm_pallas(x, w, interpret=interp)
     return ref.gmm_ref(x, w)
+
+
+def segment_sum(values, seg_ids, n_segments, *, use_pallas=False,
+                interpret=None):
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _segsum_pallas(values, seg_ids, n_segments, interpret=interp)
+    return ref.segment_sum_ref(values, seg_ids, n_segments)

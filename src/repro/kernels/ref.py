@@ -76,3 +76,11 @@ def gmm_ref(x, w):
     """Grouped (expert-batched) matmul. x: (E, C, D); w: (E, D, F)."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+def segment_sum_ref(values, seg_ids, n_segments: int):
+    """Per-row segment sums: (T, R) values + int ids -> (T, n_segments)."""
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    return jax.vmap(
+        lambda v, s: jax.ops.segment_sum(v, s, num_segments=n_segments)
+    )(jnp.asarray(values), seg_ids)

@@ -1,0 +1,89 @@
+"""Per-row segment-sum Pallas kernel.
+
+``out[t, b] = sum_r values[t, r] * (seg_ids[t, r] == b)``
+
+The simulator core (``repro.core.simcore``) reduces replica occupancy
+to per-(node, app) buckets; each trial ``t`` carries its own placement,
+so the segment ids differ per row and a single one-hot matmul over the
+batch is impossible.  This kernel tiles the (T, R) grid and accumulates
+each tile's contribution as a chunked one-hot contraction into the
+(T, B) output — MXU-friendly on TPU, and exercised in interpret mode on
+the CPU CI container (see ``src/repro/kernels/README.md``).  On CPU the
+simulator's compute path stays the XLA sort-plan ``bucket_sum``; this
+kernel is the accelerator path plus the parity reference for it.
+
+Segment ids outside ``[0, n_segments)`` contribute nothing (the one-hot
+never matches), which the padding below relies on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_sum"]
+
+_LANE = 128          # TPU lane width: last dims padded to a multiple
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _seg_kernel(vals_ref, ids_ref, out_ref, *, n_pad: int, r_chunk: int):
+    vals = vals_ref[...]                       # (Tt, Rt)
+    ids = ids_ref[...].astype(jnp.int32)
+    Tt, Rt = vals.shape
+    # chunk the replica axis so the (Tt, r_chunk, n_pad) one-hot stays
+    # inside VMEM; 1-D iota is unsupported on TPU, broadcast instead
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (Tt, r_chunk, n_pad), 2)
+
+    def body(i, acc):
+        v = jax.lax.dynamic_slice(vals, (0, i * r_chunk), (Tt, r_chunk))
+        s = jax.lax.dynamic_slice(ids, (0, i * r_chunk), (Tt, r_chunk))
+        hot = (s[:, :, None] == iota_b).astype(vals.dtype)
+        return acc + (hot * v[:, :, None]).sum(axis=1)
+
+    acc = jax.lax.fori_loop(0, Rt // r_chunk, body,
+                            jnp.zeros((Tt, n_pad), vals.dtype))
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+    out_ref[...] += acc
+
+
+def segment_sum(values, seg_ids, n_segments: int, *, t_block: int = 8,
+                r_block: int = _LANE, r_chunk: int = 8, interpret=None):
+    """Per-row bucket sums: (T, R) values + (T, R) int ids -> (T, B).
+
+    ``interpret=None`` auto-selects interpret mode off-TPU (the repo's
+    kernel idiom, see ``repro.kernels.ops``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    values = jnp.asarray(values)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    if values.shape != seg_ids.shape or values.ndim != 2:
+        raise ValueError(f"values {values.shape} / seg_ids "
+                         f"{seg_ids.shape} must be matching (T, R)")
+    T, R = values.shape
+    Tp, Rp = _ceil_to(max(T, 1), t_block), _ceil_to(max(R, 1), r_block)
+    n_pad = _ceil_to(n_segments, _LANE)
+    if (Tp, Rp) != (T, R):
+        # pad with value 0 (id 0 then contributes nothing)
+        values = jnp.pad(values, ((0, Tp - T), (0, Rp - R)))
+        seg_ids = jnp.pad(seg_ids, ((0, Tp - T), (0, Rp - R)))
+    grid = (Tp // t_block, Rp // r_block)
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, n_pad=n_pad, r_chunk=r_chunk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t_block, r_block), lambda i, j: (i, j)),
+                  pl.BlockSpec((t_block, r_block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((t_block, n_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, n_pad), values.dtype),
+        interpret=interpret,
+    )(values, seg_ids)
+    return out[:T, :n_segments]

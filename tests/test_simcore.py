@@ -14,8 +14,9 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core.campaign import (SUMMARY_STATS, run_campaign_serial,
-                                 run_scenario)
+from repro.core.campaign import (DEFAULT_POLICIES, SUMMARY_STATS,
+                                 compiled_coverage, run_campaign,
+                                 run_campaign_serial, run_scenario)
 from repro.core.capacity import CapacityConfig
 from repro.core.scenarios import scenario_names
 from repro.core.simcore import (fleet_throughput, run_compiled,
@@ -190,20 +191,49 @@ print("SHARD_OK")
 """
 
 
-@pytest.mark.slow
-def test_shard_map_parity_subprocess():
-    """Real multi-device dispatch: 4 XLA host devices in a subprocess,
-    trial axis sharded, numerics still match the serial stepper."""
+_SHARD_UNEVEN_SNIPPET = """
+import numpy as np
+from repro.core.simulator import SimConfig, _build_cluster, run_sim
+from repro.core.simcore import run_compiled
+# 6 trials on a 4-device mesh: the dispatcher pads to 8 by replicating
+# the last trial and slices the outputs back — this used to silently
+# fall back to single-device jit
+cfg = SimConfig(n_trials=6, n_requests=40, seed=0)
+summary = run_compiled(_build_cluster(cfg), "perf_aware")
+assert summary["simcore_backend"] == "shard_map", summary["simcore_backend"]
+ref = run_sim(cfg, "perf_aware")
+for k in ("mean_rtt", "p99_rtt"):
+    assert np.asarray(summary[k]).shape == np.asarray(ref[k]).shape
+    np.testing.assert_allclose(summary[k], ref[k], rtol=1e-5, atol=1e-7)
+print("SHARD_OK")
+"""
+
+
+def _run_shard_subprocess(snippet):
     env = dict(os.environ,
                XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
                           + " --xla_force_host_platform_device_count=4"),
                PYTHONPATH=os.pathsep.join(
                    [os.path.join(os.path.dirname(__file__), "..", "src")]
                    + sys.path))
-    out = subprocess.run([sys.executable, "-c", _SHARD_SNIPPET], env=env,
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr
     assert "SHARD_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_shard_map_parity_subprocess():
+    """Real multi-device dispatch: 4 XLA host devices in a subprocess,
+    trial axis sharded, numerics still match the serial stepper."""
+    _run_shard_subprocess(_SHARD_SNIPPET)
+
+
+@pytest.mark.slow
+def test_shard_map_uneven_trials_subprocess():
+    """T=6 on a 4-device mesh: pad-and-mask keeps the shard_map path
+    (and its numerics) instead of falling back to single-device jit."""
+    _run_shard_subprocess(_SHARD_UNEVEN_SNIPPET)
 
 
 # ----------------------------------------------------------------------
@@ -231,22 +261,65 @@ def test_supports_rejects_unlowered_policy():
         del POLICIES[_Weird.name]
 
 
-def test_supports_rejects_churn_plus_capacity():
-    cfg = SimConfig(churn=(5.0, 10.0), capacity=CapacityConfig())
-    assert "churn + capacity" in supports(cfg, "least_conn")
+#: the only intentionally-unsupported rows left in the support matrix:
+#: policy-level rejections.  Every SimConfig feature combination is
+#: lowered; pin the reason strings so a wording change (which the
+#: campaign dispatcher and bench gate match on) is a loud failure.
+_REASON_UNKNOWN = "unknown policy"
+_REASON_UNLOWERED = "no in-kernel score lowering"
 
 
-def test_supports_rejects_closed_loop_capacity():
-    cfg = SimConfig(closed_loop=True, capacity=CapacityConfig())
-    assert "closed-loop + capacity" in supports(cfg, "perf_aware")
+@pytest.mark.parametrize("name", scenario_names())
+@pytest.mark.parametrize("policy", DEFAULT_POLICIES + ("oracle",))
+def test_supports_every_registered_scenario(name, policy):
+    """100% compiled coverage: no (registered scenario, default policy)
+    pair may fall back to the serial stepper under backend='auto'."""
+    from repro.core.scenarios import get_scenario
+    cfg = get_scenario(name).compile(seed=0)
+    assert supports(cfg, policy) is None
+
+
+def test_compiled_coverage_helper_empty():
+    assert compiled_coverage() == []
+
+
+def test_supports_formerly_rejected_combos():
+    """The PR-6 support matrix kicked these back to serial; they are
+    lowered now and must stay that way."""
+    assert supports(SimConfig(churn=(5.0, 10.0),
+                              capacity=CapacityConfig()),
+                    "least_conn") is None
+    assert supports(SimConfig(closed_loop=True,
+                              capacity=CapacityConfig()),
+                    "perf_aware") is None
+    assert supports(SimConfig(hedge_factor=1.5), "oracle") is None
+
+
+def _register_weird():
+    from repro.core.balancer import POLICIES, Policy
+
+    class _Weird(Policy):
+        name = "weird-test-only"
+        requires = ()
+        scan_lowered = False
+
+        def select(self, state):  # pragma: no cover
+            return 0
+
+    POLICIES[_Weird.name] = _Weird
+    return _Weird.name
 
 
 def test_backend_compiled_raises_on_unsupported():
-    with pytest.raises(ValueError, match="backend='compiled'"):
-        run_scenario("baseline", policies=["least_conn"],
-                     include_oracle=False, backend="compiled",
-                     churn=(5.0, 10.0), capacity=CapacityConfig(),
-                     **SMALL)
+    from repro.core.balancer import POLICIES
+    name = _register_weird()
+    try:
+        with pytest.raises(ValueError, match="backend='compiled'"):
+            run_scenario("baseline", policies=[name],
+                         include_oracle=False, backend="compiled",
+                         **SMALL)
+    finally:
+        del POLICIES[name]
 
 
 def test_unknown_backend_raises():
@@ -256,9 +329,62 @@ def test_unknown_backend_raises():
 
 
 def test_run_compiled_raises_on_unsupported():
-    cfg = SimConfig(churn=(5.0, 10.0), capacity=CapacityConfig())
-    with pytest.raises(ValueError, match="simcore cannot run"):
-        run_compiled(_build_cluster(cfg), "least_conn")
+    from repro.core.balancer import POLICIES
+    name = _register_weird()
+    try:
+        with pytest.raises(ValueError, match="simcore cannot run"):
+            run_compiled(_build_cluster(SimConfig()), name)
+    finally:
+        del POLICIES[name]
+
+
+# ----------------------------------------------------------------------
+# kernel cache: LRU-bounded across a campaign sweep
+def test_fn_cache_bounded_over_full_campaign():
+    """A full 19-scenario x default-policy sweep must stay inside the
+    LRU bound (the PR-6 cache grew one pinned entry per distinct
+    kernel, forever)."""
+    from repro.core import simcore
+    run_campaign(backend="auto", seeds=(0, 1), n_trials=2,
+                 n_requests=50)
+    stats = simcore.cache_stats()
+    assert stats["size"] <= stats["max"]
+    assert stats["misses"] >= 1
+
+
+def test_fn_cache_lru_eviction(monkeypatch):
+    from collections import OrderedDict
+
+    from repro.core import simcore
+    monkeypatch.setattr(simcore, "_FN_CACHE", OrderedDict())
+    monkeypatch.setattr(simcore, "_FN_CACHE_MAX", 2)
+    monkeypatch.setattr(simcore, "_FN_STATS",
+                        {"hits": 0, "misses": 0, "evictions": 0})
+    cfg = SimConfig(n_trials=2, n_requests=10, seed=0)
+    for pol in ("least_conn", "round_robin", "random"):
+        run_sim_compiled(cfg, pol, force_single=True)
+    stats = simcore.cache_stats()
+    assert stats["size"] <= 2
+    assert stats["misses"] == 3 and stats["evictions"] == 1
+    # most-recently-used survives: re-running it is a hit, not a miss
+    run_sim_compiled(cfg, "random", force_single=True)
+    assert simcore.cache_stats()["hits"] == 1
+
+
+# ----------------------------------------------------------------------
+# Pallas segment-sum backend: the count-resync / snapshot reductions
+# through the kernel (interpret mode on CPU) must match the XLA plan
+@pytest.mark.parametrize("kw", (dict(churn=(5.0, 10.0)),
+                                dict(prediction_lag_s=2.0)))
+def test_pallas_segsum_backend_parity(monkeypatch, kw):
+    from repro.core import simcore
+    cfg = SimConfig(n_trials=3, n_requests=60, arrival_rate=2.0, seed=0,
+                    **kw)
+    ref = run_sim(cfg, "perf_aware")
+    monkeypatch.setattr(simcore, "_SEGSUM_BACKEND", "pallas")
+    got = run_sim_compiled(cfg, "perf_aware", force_single=True)
+    for k in ("mean_rtt", "p99_rtt"):
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-5, atol=1e-7)
 
 
 # ----------------------------------------------------------------------
