@@ -37,6 +37,7 @@ from dataclasses import replace
 import numpy as np
 
 from repro.core.balancer import make_policy
+from repro.core.rng import rng_seed
 from repro.core.campaign import stack_clusters
 from repro.core.scenarios import get_scenario
 from repro.core.simulator import SimStepper, _build_cluster
@@ -62,9 +63,10 @@ def run_cell(name: str, autoscaler: str, seeds, policy: str = "perf_aware",
         cap = replace(cap, initial_replicas=spec.n_replicas_per_app)
     cfgs = [spec.compile(seed=s, capacity=cap, **overrides) for s in seeds]
     stacked = stack_clusters([_build_cluster(c) for c in cfgs])
-    pol = make_policy(policy, seed=cfgs[0].seed + 2,
+    pol = make_policy(policy, seed=rng_seed(cfgs[0].seed, "policy"),
                       hedge_factor=cfgs[0].hedge_factor,
-                      seed_blocks=[(c.seed + 2, c.n_trials) for c in cfgs])
+                      seed_blocks=[(rng_seed(c.seed, "policy"), c.n_trials)
+                                   for c in cfgs])
     s = SimStepper(stacked, pol).run()
     return {
         "p95_rtt": float(np.nanmean(s["p95_rtt"])),

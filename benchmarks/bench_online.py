@@ -43,6 +43,7 @@ import time
 import numpy as np
 
 from repro.core.balancer import make_policy
+from repro.core.rng import rng_seed
 from repro.core.campaign import stack_clusters
 from repro.core.scenarios import get_scenario, scenario_names
 from repro.core.simulator import SimStepper, _build_cluster
@@ -60,9 +61,10 @@ def run_cell(spec, policy: str, seeds, **overrides):
     telemetry)."""
     cfgs = [spec.compile(seed=s, **overrides) for s in seeds]
     stacked = stack_clusters([_build_cluster(c) for c in cfgs])
-    pol = make_policy(policy, seed=cfgs[0].seed + 2,
+    pol = make_policy(policy, seed=rng_seed(cfgs[0].seed, "policy"),
                       hedge_factor=cfgs[0].hedge_factor,
-                      seed_blocks=[(c.seed + 2, c.n_trials) for c in cfgs])
+                      seed_blocks=[(rng_seed(c.seed, "policy"), c.n_trials)
+                                   for c in cfgs])
     return SimStepper(stacked, pol).run()
 
 

@@ -42,6 +42,7 @@ import time
 import numpy as np
 
 from repro.core.balancer import make_policy
+from repro.core.rng import rng_seed
 from repro.core.campaign import (SUMMARY_STATS, compiled_coverage,
                                  stack_clusters)
 from repro.core.scenarios import get_scenario
@@ -65,8 +66,8 @@ def _stack(seeds, n_trials, **overrides):
     cfgs = [spec.compile(seed=s, n_trials=n_trials, **overrides)
             for s in seeds]
     stacked = stack_clusters([_build_cluster(c) for c in cfgs])
-    blocks = [(c.seed + 2, c.n_trials) for c in cfgs]
-    return stacked, blocks, cfgs[0].seed + 2
+    blocks = [(rng_seed(c.seed, "policy"), c.n_trials) for c in cfgs]
+    return stacked, blocks, rng_seed(cfgs[0].seed, "policy")
 
 
 def _drift(a, b) -> float:

@@ -15,8 +15,9 @@ def main() -> None:
                             bench_correlations, bench_covariability,
                             bench_kernels, bench_load_balancing,
                             bench_online, bench_overhead,
-                            bench_prediction_plane, bench_selection,
-                            bench_simcore, bench_state_scaling)
+                            bench_prediction_plane, bench_resilience,
+                            bench_selection, bench_simcore,
+                            bench_state_scaling)
     from benchmarks import roofline
 
     benches = [
@@ -33,6 +34,7 @@ def main() -> None:
         ("simcore", bench_simcore.run),
         ("online", bench_online.run),
         ("capacity", bench_capacity.run),
+        ("resilience", bench_resilience.run),
         ("table5", bench_covariability.run),
         ("kernels", bench_kernels.run),
     ]

@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.balancer import make_policy
+from repro.core.rng import rng_seed
 from repro.core.scenarios import ScenarioSpec, get_scenario, scenario_names
 from repro.core.simulator import SimStepper, _build_cluster, _Cluster, run_sim
 
@@ -47,7 +48,7 @@ DEFAULT_POLICIES = ("perf_aware", "least_conn", "round_robin", "random")
 #: capacity plane's (waste, shed, SLO) triple rides the same gate.
 SUMMARY_STATS = ("mean_rtt", "p50_rtt", "p95_rtt", "p99_rtt",
                  "cpu_s", "mem_s", "waste", "shed_rate",
-                 "slo_violation_s")
+                 "slo_violation_s", "goodput", "timeout_rate")
 
 
 def _resolve(scenario) -> ScenarioSpec:
@@ -95,6 +96,9 @@ def stack_clusters(clusters: Sequence[_Cluster]) -> _Cluster:
     imat_post = None if c0.imat_post is None else cat_imat("imat_post")
     accel_post = None if c0.accel_post is None else cat("accel_post")
     preempted = None if c0.preempted_node is None else cat("preempted_node")
+    gray_rep = None if c0.gray_rep is None else cat("gray_rep")
+    group_rep = None if c0.group_rep is None else cat("group_rep")
+    z_jitter = None if c0.z_jitter is None else cat("z_jitter")
     return _Cluster(
         cfg=replace(c0.cfg, n_trials=sum(trials)),
         app_of=c0.app_of, mean_rtt=c0.mean_rtt,
@@ -103,7 +107,8 @@ def stack_clusters(clusters: Sequence[_Cluster]) -> _Cluster:
         req_app=c0.req_app, req_t=c0.req_t,
         z_rtt=cat("z_rtt"), z_pred=cat("z_pred"), failed_node=failed,
         imat_post=imat_post, accel_post=accel_post,
-        mean_rtt_post=c0.mean_rtt_post, preempted_node=preempted)
+        mean_rtt_post=c0.mean_rtt_post, preempted_node=preempted,
+        gray_rep=gray_rep, group_rep=group_rep, z_jitter=z_jitter)
 
 
 @dataclass
@@ -230,14 +235,15 @@ def run_scenario(scenario, policies: Sequence[str] = DEFAULT_POLICIES,
     cfgs = [spec.compile(seed=s, **overrides) for s in seeds]
     stacked = stack_clusters([_build_cluster(c) for c in cfgs])
     trials = [c.n_trials for c in cfgs]
-    blocks = [(c.seed + 2, c.n_trials) for c in cfgs]
+    blocks = [(rng_seed(c.seed, "policy"), c.n_trials) for c in cfgs]
 
     wanted = list(policies)
     if include_oracle and "oracle" not in wanted:
         wanted.append("oracle")
     out: Dict[str, PolicyResult] = {}
     for pol_name in wanted:
-        summary = _run_stacked(stacked, pol_name, cfgs[0].seed + 2,
+        summary = _run_stacked(stacked, pol_name,
+                               rng_seed(cfgs[0].seed, "policy"),
                                blocks, backend)
         out[pol_name] = PolicyResult(
             scenario=spec.name, policy=pol_name, seeds=seeds,

@@ -113,17 +113,20 @@ class MembershipEvent:
     ``seq`` makes same-instant ordering deterministic."""
     t: float
     seq: int
-    kind: str = field(compare=False)   # churn | preempt_down | preempt_up | scale
+    #: churn | group_down | preempt_down | preempt_up | scale
+    kind: str = field(compare=False)
 
 
 def membership_timeline(horizon_s: float, *,
                         churn: Optional[Tuple[float, float]] = None,
                         capacity: Optional[CapacityConfig] = None,
-                        preempt: Optional[Tuple[float, float]] = None
-                        ) -> List[MembershipEvent]:
+                        preempt: Optional[Tuple[float, float]] = None,
+                        outage_group: Optional[Tuple[float, float, int]]
+                        = None) -> List[MembershipEvent]:
     """The exact pop order of the simulator's membership-event heap over
     ``[0, horizon_s]``: node churn, autoscaler epochs (self-rescheduling
-    every ``decide_every_s``), and the spot-preemption window, merged by
+    every ``decide_every_s``), the spot-preemption window, and the
+    resilience plane's correlated node-group outage, merged by
     ``(t, seq)`` exactly as the live heap would emit them.
 
     All membership-event *times* are data-independent (they depend only
@@ -144,6 +147,8 @@ def membership_timeline(horizon_s: float, *,
 
     if churn is not None:
         push(churn[0], "churn")
+    if outage_group is not None:
+        push(outage_group[0], "group_down")
     if capacity is not None:
         push(capacity.decide_every_s, "scale")
         if preempt is not None:

@@ -1,0 +1,184 @@
+"""Resilience plane: fault injection + client-side request semantics
+(DESIGN.md §14).
+
+Two halves, one config:
+
+* **Fault injection** — gray failures (a node serves every RTT at
+  ``slow_factor``x while the predictor's advertised view stays healthy),
+  correlated node-group outages (a contiguous node group drops for a
+  window, riding the membership-event timeline exactly like churn), and
+  metric-staleness storms (the prediction snapshot freezes for the
+  window, riding the PR-4 ``PeriodicRefresh`` outage hook).
+* **Client semantics** — per-request timeout, bounded retries with
+  exponential backoff + jitter, and a per-replica circuit breaker
+  (closed -> open -> half-open).  A timed-out attempt still OCCUPIES the
+  server for its full service time — the client gave up, the work did
+  not — which is the retry-amplification mechanism that tips an
+  overloaded fleet into metastable collapse
+  (``benchmarks/bench_resilience.py``).
+
+The same :class:`BreakerBoard` state machine backs the vectorised
+simulator path ((T, R) trials at once), the live
+:class:`~repro.serving.router.MorpheusRouter` (T=1), and — re-expressed
+as scan carries — the compiled kernel in :mod:`repro.core.simcore`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ResilienceConfig:
+    """Client-side request semantics + the fault timeline.
+
+    Frozen/hashable so it can ride ``SimConfig`` equality (the campaign
+    runner's stacked-cluster check) and the compiled kernel's static
+    cache key.
+    """
+    # -- client semantics ----------------------------------------------
+    #: per-request attempt timeout; None disables the client plane
+    #: (faults below can still be injected without it)
+    timeout_s: Optional[float] = None
+    #: additional attempts after the first (0 = timeout only)
+    max_retries: int = 0
+    backoff_base_s: float = 1.0
+    backoff_mult: float = 2.0
+    #: multiplicative jitter: backoff_i *= 1 + jitter * U[0,1)
+    backoff_jitter: float = 0.5
+    #: per-replica circuit breaker: trips after this many CONSECUTIVE
+    #: timeouts (None disables the breaker)
+    breaker_threshold: Optional[int] = None
+    #: open -> half-open probe delay, measured from when the client
+    #: learned of the tripping timeout
+    breaker_cooldown_s: float = 10.0
+    # -- fault timeline ------------------------------------------------
+    #: gray failure: (t_start_s, duration_s, slow_factor) — one node per
+    #: trial serves every RTT at slow_factor x while the prediction
+    #: basis keeps advertising the healthy value
+    gray: Optional[Tuple[float, float, float]] = None
+    #: correlated outage: (t_start_s, duration_s, n_nodes) — a
+    #: contiguous node group goes down for the window (churn's
+    #: busy-bump, group-wide)
+    outage_group: Optional[Tuple[float, float, int]] = None
+    #: metric-staleness storm: (t_start_s, duration_s) — the prediction
+    #: snapshot freezes for the window (PeriodicRefresh outage)
+    staleness: Optional[Tuple[float, float]] = None
+
+    def __post_init__(self):
+        if self.timeout_s is not None and self.timeout_s <= 0:
+            raise ValueError("timeout_s must be positive")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.timeout_s is None and self.max_retries > 0:
+            raise ValueError("retries need a timeout_s (an attempt only "
+                             "fails by timing out)")
+        if self.breaker_threshold is not None:
+            if self.timeout_s is None:
+                raise ValueError("a breaker needs a timeout_s (it trips "
+                                 "on consecutive timeouts)")
+            if self.breaker_threshold < 1:
+                raise ValueError("breaker_threshold must be >= 1")
+        if min(self.backoff_base_s, self.backoff_mult,
+               self.backoff_jitter, self.breaker_cooldown_s) < 0:
+            raise ValueError("backoff/cooldown knobs must be >= 0")
+        if self.gray is not None and (len(self.gray) != 3
+                                      or self.gray[1] <= 0
+                                      or self.gray[2] < 1.0):
+            raise ValueError("gray = (t_start_s, duration_s>0, "
+                             "slow_factor>=1)")
+        if self.outage_group is not None \
+                and (len(self.outage_group) != 3
+                     or self.outage_group[1] <= 0
+                     or int(self.outage_group[2]) < 1):
+            raise ValueError("outage_group = (t_start_s, duration_s>0, "
+                             "n_nodes>=1)")
+        if self.staleness is not None and (len(self.staleness) != 2
+                                           or self.staleness[1] <= 0):
+            raise ValueError("staleness = (t_start_s, duration_s>0)")
+
+    @property
+    def client_side(self) -> bool:
+        """True when the timeout/retry/breaker plane is armed."""
+        return self.timeout_s is not None
+
+    @property
+    def has_faults(self) -> bool:
+        return (self.gray is not None or self.outage_group is not None
+                or self.staleness is not None)
+
+
+def backoff_delay(res: ResilienceConfig, attempt: int, u) -> np.ndarray:
+    """Backoff before retry ``attempt`` (0-based index of the attempt
+    that just failed): ``base * mult^attempt * (1 + jitter * u)`` with
+    ``u ~ U[0, 1)`` pre-drawn from the fault stream."""
+    return (res.backoff_base_s * res.backoff_mult ** attempt
+            * (1.0 + res.backoff_jitter * np.asarray(u, float)))
+
+
+class BreakerBoard:
+    """Per-replica circuit breakers, vectorised over (trials, replicas).
+
+    States (per (t, r)):
+
+    * **closed** — not tripped; requests route normally, the consecutive
+      -timeout counter accumulates.
+    * **open** — ``tripped and t < open_until``: the replica is masked
+      out of candidate scoring entirely.
+    * **half-open** — ``tripped and t >= open_until``: routable again as
+      a probe; one success re-closes, one timeout re-trips immediately
+      (no need to re-reach the threshold).
+
+    A timeout is only learned at ``t_dispatch + timeout_s``, so a trip
+    opens until ``t_dispatch + timeout_s + cooldown_s``.  The compiled
+    kernel carries the same three arrays (``fail``/``open_until``/
+    ``tripped``) through the scan and mirrors this arithmetic
+    (``tests/test_resilience.py`` pins the FSM and the parity).
+    """
+
+    def __init__(self, n_replicas: int, threshold: int, cooldown_s: float,
+                 timeout_s: float, n_trials: int = 1):
+        self.thr = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.timeout_s = float(timeout_s)
+        self.fail = np.zeros((n_trials, n_replicas), np.int64)
+        self.open_until = np.zeros((n_trials, n_replicas))
+        self.tripped = np.zeros((n_trials, n_replicas), bool)
+        self.trips = 0                       # telemetry: total trip events
+
+    def open_mask(self, t) -> np.ndarray:
+        """(T, R) True where the breaker is OPEN (unroutable) at ``t``;
+        half-open replicas stay routable (the probe)."""
+        t = np.asarray(t, float)
+        if t.ndim == 1:
+            t = t[:, None]
+        return self.tripped & (t < self.open_until)
+
+    def record(self, t, picks: np.ndarray, success: np.ndarray,
+               timeout: np.ndarray):
+        """Commit one attempt's outcome per trial.
+
+        ``picks`` (T,) replica indices; ``success``/``timeout`` (T,)
+        disjoint masks (both False where the trial dispatched nothing —
+        fail-fast attempts never touch breaker state).
+        """
+        picks = np.asarray(picks)
+        t = np.broadcast_to(np.asarray(t, float), picks.shape)
+        s = np.flatnonzero(success)
+        self.fail[s, picks[s]] = 0
+        self.tripped[s, picks[s]] = False
+        m = np.flatnonzero(timeout)
+        if len(m) == 0:
+            return
+        pm = picks[m]
+        # a timed-out half-open probe re-trips without re-reaching the
+        # threshold; the consecutive counter keeps accumulating
+        was_half = self.tripped[m, pm] & (t[m] >= self.open_until[m, pm])
+        self.fail[m, pm] += 1
+        trip = (self.fail[m, pm] >= self.thr) | was_half
+        tm, pt = m[trip], pm[trip]
+        self.tripped[tm, pt] = True
+        self.open_until[tm, pt] = t[tm] + self.timeout_s + self.cooldown_s
+        self.trips += int(trip.sum())

@@ -25,6 +25,7 @@ from dataclasses import dataclass, fields, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.capacity import CapacityConfig
+from repro.core.resilience import ResilienceConfig
 from repro.core.simulator import APPS, ARRIVAL_PROCESSES, SimConfig
 
 
@@ -74,6 +75,8 @@ class ScenarioSpec:
     # capacity plane (core/capacity.py, DESIGN.md §12)
     capacity: Optional[CapacityConfig] = None
     preempt: Optional[Tuple[float, float]] = None
+    # resilience plane (core/resilience.py, DESIGN.md §14)
+    resilience: Optional[ResilienceConfig] = None
 
     def __post_init__(self):
         if self.arrival_process not in ARRIVAL_PROCESSES:
@@ -99,6 +102,12 @@ class ScenarioSpec:
             raise ValueError(f"{self.name}: preempt requires a capacity "
                              "config (the elastic replica set handles "
                              "the takeback)")
+        if self.resilience is not None and self.resilience.client_side \
+                and self.hedge_factor is not None:
+            raise ValueError(
+                f"{self.name}: hedge_factor and resilience timeouts are "
+                "mutually exclusive (a hedged duplicate has no attempt "
+                "identity for the timeout/breaker state machine)")
 
     @property
     def stream_seed(self) -> int:
@@ -326,6 +335,97 @@ register(ScenarioSpec(
                             rate_window_s=15.0, cooldown_s=10.0,
                             admission_limit_s=45.0),
     **_CAP))
+
+# ----------------------------------------------------------------------
+# resilience-plane scenarios (DESIGN.md §14).  Fault injection (gray
+# failure, correlated node-group outage, metric-staleness storm) plus
+# client-side request semantics (per-request timeout, bounded retries
+# with backoff + jitter, per-replica circuit breakers).  The retry-storm
+# pair is the metastable-collapse study benchmarks/bench_resilience.py
+# quantifies: naive retries keep an overloaded fleet saturated AFTER the
+# offered load recedes (goodput collapses), breakers + admission control
+# arrest the amplification.
+#
+# Design note (collapse arithmetic): with m retries every timed-out
+# request dispatches up to 1+m attempts, and a timed-out attempt still
+# occupies its server for the full service time.  At the ramp peak the
+# amplified load (1+m) x lambda x S crosses the fleet's capacity, the
+# queues pin every new attempt past the deadline, and — the metastable
+# part — the amplification keeps the queues pinned long AFTER the
+# offered load recedes to a level the fleet handled comfortably before
+# the peak.  Calibration (bench_resilience.py): baseline RTT p99
+# ~= 23 s sits just under the 25 s timeout (pre-ramp goodput ~= 0.99),
+# the 10x ramp over [30, 130] s builds a multi-timeout backlog, and the
+# post-recede window (t >= 160 s) is where naive retries stay collapsed
+# (goodput ~= 0.5) while breakers + admission recover to ~= 1.0.
+# (full default app mix ON PURPOSE: "upload"'s 20 s mean RTT sits just
+# under the 25 s deadline, so queueing delay pushes it over first — the
+# heavy app is the collapse's seed crystal)
+_RETRY_STORM = dict(
+    n_nodes=6, n_replicas_per_app=6, heterogeneity=0.15,
+    interference_strength=0.15, accuracy=0.85, n_trials=8,
+    arrival_process="ramp", arrival_params=(30.0, 80.0, 130.0, 10.0),
+    arrival_rate=0.6, n_requests=450)
+
+register(ScenarioSpec(
+    name="gray-failure",
+    description="One node per trial serves every RTT at 4x from t=40s "
+                "for 60s while its advertised metrics stay healthy: the "
+                "predictor keeps routing onto it (the paper's signals "
+                "cannot see a fail-slow fault), only the oracle avoids "
+                "it.",
+    n_requests=300,
+    resilience=ResilienceConfig(gray=(40.0, 60.0, 4.0))))
+
+register(ScenarioSpec(
+    name="staleness-storm",
+    description="The metric pipeline stalls from t=40s for 50s under "
+                "heavy interference: the occupancy snapshot freezes "
+                "(staleness storm on the PeriodicRefresh hook) and "
+                "predictions route on a dead view of the cluster.",
+    interference_strength=0.9, arrival_rate=2.5, n_requests=300,
+    prediction_lag_s=2.0,
+    resilience=ResilienceConfig(staleness=(40.0, 50.0))))
+
+register(ScenarioSpec(
+    name="correlated-outage",
+    description="A contiguous 2-node group drops at t=40s for 30s: "
+                "clients ride timeouts + 2 retries with breakers, and "
+                "the load concentrates on the surviving nodes.",
+    **_RETRY_STORM | dict(arrival_process="poisson", arrival_params=(),
+                          arrival_rate=0.8, n_requests=300),
+    resilience=ResilienceConfig(
+        timeout_s=25.0, max_retries=2, backoff_base_s=0.5,
+        breaker_threshold=3, breaker_cooldown_s=10.0,
+        outage_group=(40.0, 30.0, 2))))
+
+register(ScenarioSpec(
+    name="retry-storm",
+    description="Naive clients (25s timeout, 3 retries, no breaker) over "
+                "the 10x overload ramp: retry amplification keeps the "
+                "fleet saturated after the offered load recedes — "
+                "goodput stays collapsed at a load the fleet handled "
+                "comfortably before the peak (metastable failure).",
+    **_RETRY_STORM,
+    resilience=ResilienceConfig(timeout_s=25.0, max_retries=3,
+                                backoff_base_s=0.5, backoff_mult=2.0,
+                                backoff_jitter=0.5)))
+
+register(ScenarioSpec(
+    name="breaker-saves-retry-storm",
+    description="The same storm with per-replica circuit breakers and "
+                "admission control over a fixed full-size pool: breakers "
+                "fail fast instead of dispatching doomed attempts, "
+                "admission sheds the excess, and the fleet recovers as "
+                "the load recedes.",
+    **_RETRY_STORM,
+    capacity=CapacityConfig(autoscaler="fixed", min_replicas=6,
+                            decide_every_s=5.0, warmup_s=0.0,
+                            slo_target_s=15.0, admission_limit_s=25.0),
+    resilience=ResilienceConfig(timeout_s=25.0, max_retries=3,
+                                backoff_base_s=0.5, backoff_mult=2.0,
+                                backoff_jitter=0.5, breaker_threshold=3,
+                                breaker_cooldown_s=10.0)))
 
 register(ScenarioSpec(
     name="mixed-app-fleet",

@@ -79,13 +79,16 @@ except ImportError:             # pragma: no cover - newer jax
 
 from repro.core.balancer import BUSY_PENALTY, POLICIES
 from repro.core.capacity import CapacityConfig, membership_timeline
+from repro.core.resilience import ResilienceConfig
+from repro.core.rng import rng_seed
 from repro.core.simulator import SimConfig, _build_cluster, _Cluster, _Metrics
 from repro.monitoring.metrics import PeriodicRefresh
 
 __all__ = ["supports", "run_compiled", "run_sim_compiled",
            "fleet_throughput", "cache_stats"]
 
-_EV_KIND = {"scale": 0, "preempt_down": 1, "preempt_up": 2, "churn": 3}
+_EV_KIND = {"scale": 0, "preempt_down": 1, "preempt_up": 2, "churn": 3,
+            "group_down": 4}
 
 #: segment-sum backend for the from-scratch bucket reductions (count
 #: resyncs at churn, snapshot refreshes): None auto-selects the Pallas
@@ -131,6 +134,7 @@ class _Static:
     min_obs: int = 8
     min_count: int = 8
     native_noise: bool = False
+    resilience: Optional[ResilienceConfig] = None
 
     @property
     def hedging(self) -> bool:
@@ -139,6 +143,17 @@ class _Static:
     @property
     def fallback(self) -> bool:
         return self.closed_loop and self.fallback_threshold > 0
+
+    @property
+    def res_client(self) -> bool:
+        """Client-side timeout/retry/breaker plane armed (DESIGN.md
+        §14): the step lowers to the unrolled attempt loop."""
+        return self.resilience is not None and self.resilience.client_side
+
+    @property
+    def res_breaker(self) -> bool:
+        return self.resilience is not None \
+            and self.resilience.breaker_threshold is not None
 
 
 def supports(cfg: SimConfig, policy: str) -> Optional[str]:
@@ -165,7 +180,11 @@ def _static_for(cfg: SimConfig, policy: str) -> _Static:
     reactive = not hedging and not cls.requires
     needs_pred = hedging or "predicted" in cls.requires
     closed = bool(cfg.closed_loop and needs_pred)
-    outages = cfg.outage is not None
+    res = cfg.resilience
+    # a staleness storm is one more outage window on the PeriodicRefresh
+    # hook: it forces the snapshot carry exactly like a plane outage
+    outages = cfg.outage is not None \
+        or (res is not None and res.staleness is not None)
     snapshot = (cfg.prediction_lag_s > 0 or outages) \
         and (needs_pred or closed)
     return _Static(
@@ -180,7 +199,8 @@ def _static_for(cfg: SimConfig, policy: str) -> _Static:
         pending=cfg.capacity is not None and not needs_pred,
         fallback_threshold=cfg.fallback_threshold if closed else 0.0,
         obs_window=max(1, min(cfg.online_window, cfg.n_requests)),
-        acc_window=max(1, int(cfg.accuracy_window)))
+        acc_window=max(1, int(cfg.accuracy_window)),
+        resilience=cfg.resilience)
 
 
 def _count_flags(st: _Static) -> Tuple[bool, bool, bool]:
@@ -198,10 +218,13 @@ def _count_flags(st: _Static) -> Tuple[bool, bool, bool]:
 
 def _needs_plan(st: _Static) -> bool:
     """True when the kernel still performs a from-scratch bucket
-    reduction (count resync at the churn step; snapshot refresh without
-    a live count carry to copy from)."""
+    reduction (count resync at a busy-bump step — churn or a correlated
+    group outage; snapshot refresh without a live count carry to copy
+    from)."""
     _, need_live, need_snap = _count_flags(st)
-    return (need_live and st.churn is not None) \
+    group = st.resilience is not None \
+        and st.resilience.outage_group is not None
+    return (need_live and (st.churn is not None or group)) \
         or (need_snap and not need_live)
 
 
@@ -216,6 +239,10 @@ def _refresh_schedule(cfg: SimConfig, req_t: np.ndarray,
     if cfg.outage is not None:
         t0, duration = cfg.outage
         outages = ((t0, t0 + duration),)
+    res = cfg.resilience
+    if res is not None and res.staleness is not None:
+        s0, sdur = res.staleness
+        outages = outages + ((s0, s0 + sdur),)
     pr = PeriodicRefresh(cfg.prediction_lag_s, outages)
     out = np.zeros(len(req_t), bool)
     for j, now in enumerate(req_t):
@@ -406,18 +433,40 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
                 cluster.z_pred.transpose(1, 0, 2),
                 cand_idx[:, None, :], axis=2)                  # (J, T, K)
         if st.policy == "random":
-            xs["draw"] = _policy_draws(J, T, K, cfg.seed + 2, seed_blocks)
-    if st.churn is not None:
-        if st.capacity is None:
-            # no event walk to ride: churn stays a masked max-bump
-            xs["churnflag"] = req_t >= st.churn[0]
-        if need_live:
-            # one-hot flag at the churn step: the count carry resyncs
-            # from a full bucket reduction right after the bump
-            cf = req_t >= st.churn[0]
-            resync = cf.copy()
-            resync[1:] &= ~cf[:-1]
-            xs["resync"] = resync
+            xs["draw"] = _policy_draws(J, T, K,
+                                       rng_seed(cfg.seed, "policy"),
+                                       seed_blocks)
+    res = cfg.resilience
+    grp = None if res is None else res.outage_group
+    if st.churn is not None and st.capacity is None:
+        # no event walk to ride: churn stays a masked max-bump
+        xs["churnflag"] = req_t >= st.churn[0]
+    if grp is not None and st.capacity is None:
+        # ... and so does the correlated group outage
+        xs["gflag"] = req_t >= grp[0]
+    bumps = [st.churn[0]] if st.churn is not None else []
+    if grp is not None:
+        bumps.append(grp[0])
+    if bumps and need_live:
+        # one-hot flag at each busy-bump step: the count carry resyncs
+        # from a full bucket reduction right after the bump
+        resync = np.zeros(J, bool)
+        for t0 in bumps:
+            cf = req_t >= t0
+            edge = cf.copy()
+            edge[1:] &= ~cf[:-1]
+            resync |= edge
+        xs["resync"] = resync
+    if res is not None:
+        if res.gray is not None:
+            g0, gdur, _ = res.gray
+            consts["grayrep"] = np.asarray(cluster.gray_rep, bool)
+            xs["grayflag"] = (req_t >= g0) & (req_t < g0 + gdur)
+        if grp is not None:
+            consts["gdown"] = np.asarray(cluster.group_rep, bool)
+        if res.client_side and res.max_retries > 0:
+            xs["zj"] = np.ascontiguousarray(
+                cluster.z_jitter.transpose(1, 0, 2))       # (J, T, m)
     if st.drift:
         xs["driftflag"] = req_t >= cfg.t_drift
     if st.cold_start:
@@ -444,12 +493,19 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
     if need_snap:
         carry0["snap_cnt"] = np.zeros((A, T, N), np.int32)
         carry0["snap_counted"] = np.zeros((T, R), bool)
+    if st.res_breaker:
+        # per-replica breaker FSM as int/float/bool carries (closed /
+        # open / half-open — BreakerBoard's fail/open_until/tripped)
+        carry0["br_fail"] = np.zeros((T, R), np.int64)
+        carry0["br_open"] = np.zeros((T, R))
+        carry0["br_trip"] = np.zeros((T, R), bool)
 
     aux: Dict[str, object] = {"st": st}
     cap = st.capacity
     if cap is not None:
         events = membership_timeline(float(req_t[-1]), churn=cfg.churn,
-                                     capacity=cap, preempt=cfg.preempt)
+                                     capacity=cap, preempt=cfg.preempt,
+                                     outage_group=grp)
         ev_t = np.array([ev.t for ev in events])
         ev_kind = np.array([_EV_KIND[ev.kind] for ev in events], np.int32)
         ev_step = np.searchsorted(req_t, ev_t, side="left").astype(np.int32)
@@ -522,6 +578,8 @@ def _take_hi(elig, k):
 # kernel builder
 def _build_kernel(st: _Static):
     cap = st.capacity
+    res = st.resilience
+    grp = None if res is None else res.outage_group
     A, K, N = st.n_apps, st.k, st.n_nodes
     R = A * K
     PEN = BUSY_PENALTY
@@ -859,7 +917,8 @@ def _build_kernel(st: _Static):
                     bcv = s[1:]
                     t_ev = c["ev_t"][p]
                     rate = c["ev_rate"][p]
-                    if st.preempt or st.churn is not None:
+                    if st.preempt or st.churn is not None \
+                            or grp is not None:
                         ident = lambda s_: s_
                         branches = [
                             lambda s_: ev_scale(t_ev, rate, s_),
@@ -874,6 +933,13 @@ def _build_kernel(st: _Static):
                                             + st.churn[1]), s_[0]),)
                              + s_[1:])
                             if st.churn is not None else ident,
+                            # correlated outage: churn's busy-bump,
+                            # group-wide (DESIGN.md §14)
+                            (lambda s_: (jnp.where(
+                                c["gdown"],
+                                jnp.maximum(s_[0], grp[0] + grp[1]),
+                                s_[0]),) + s_[1:])
+                            if grp is not None else ident,
                         ]
                         bcv = lax.switch(c["ev_kind"][p], branches, bcv)
                     else:
@@ -912,6 +978,10 @@ def _build_kernel(st: _Static):
                 t_up = st.churn[0] + st.churn[1]
                 busy = jnp.where(x["churnflag"] & c["down"],
                                  jnp.maximum(busy, t_up), busy)
+            if grp is not None and cap is None:
+                busy = jnp.where(x["gflag"] & c["gdown"],
+                                 jnp.maximum(busy, grp[0] + grp[1]),
+                                 busy)
 
             served = jnp.ones((T,), bool)
             shed = jnp.zeros((T,), bool)
@@ -962,11 +1032,19 @@ def _build_kernel(st: _Static):
                 busy_c = sl(busy, a0)
                 wait_c = jnp.maximum(busy_c - now, 0.0)
 
+            # gray failure: (T, K) multiplier on the TRUE RTT inside the
+            # window; the prediction basis keeps the healthy view the
+            # replica still advertises (DESIGN.md §14)
+            graym = None
+            if res is not None and res.gray is not None:
+                graym = jnp.where(x["grayflag"] & sl(c["grayrep"], a0),
+                                  res.gray[2], 1.0)
+
             # incremental occupancy counts: resync once at the churn
             # bump, then expire completions amortized per step
             if need_live:
                 cnt, counted = cr["cnt"], cr["counted"]
-                if st.churn is not None:
+                if st.churn is not None or grp is not None:
                     cnt, counted = lax.cond(
                         x["resync"], lambda s: recount(busy, now),
                         lambda s: s, (cnt, counted))
@@ -997,7 +1075,7 @@ def _build_kernel(st: _Static):
             hmask = jnp.zeros((T,), bool)
             rtt2 = jnp.zeros((T,))
             predicted = None
-            if st.reactive:
+            if st.reactive and not st.res_client:
                 idle = busy_c <= now
                 if st.policy == "round_robin":
                     dist = jnp.mod(jnp.arange(K)[None, :]
@@ -1023,13 +1101,26 @@ def _build_kernel(st: _Static):
                                   picks[:, None])[:, 0]
                 if cap is not None:
                     rtt_pick = rtt_pick * coldm[trial, picks]
+                if graym is not None:
+                    rtt_pick = rtt_pick * graym[trial, picks]
             else:
                 # the full-K actual draw is needed only when it scores
                 # (oracle) or seeds the Eq. 12 basis; otherwise the
-                # pick-only draw after argmin replaces it
+                # pick-only draw after argmin replaces it.  The client
+                # plane is request-scoped (serial step_res draws the
+                # matrix once at arrival occupancy and every attempt
+                # gathers its pick's column), so it always needs the
+                # full row — from the count carry when one exists, from
+                # the mates table otherwise (snapshot / reactive
+                # configs; same sum reassociated).
                 actual = None
-                if full_actual:
-                    actual = rtt_full(a, drift_on, cnt, z)
+                if full_actual or st.res_client:
+                    if need_live:
+                        actual = rtt_full(a, drift_on, cnt, z)
+                    else:
+                        allk = jnp.broadcast_to(
+                            jnp.arange(K)[None, :], (T, K))
+                        actual = rtt_at(a, drift_on, busy, now, z, allk)
                     if cap is not None:
                         actual = actual * coldm
                 if st.closed_loop:
@@ -1136,6 +1227,201 @@ def _build_kernel(st: _Static):
                         zc = x["zp"]
                     eps = (1.0 - st.accuracy) * basis
                     predicted = basis + eps * zc
+                if graym is not None and actual is not None:
+                    # AFTER the prediction basis is fixed: the oracle /
+                    # served RTT see the gray truth, Eq. 12 keeps the
+                    # advertised (healthy) view
+                    actual = actual * graym
+
+                if st.res_client:
+                    # ---- client plane (DESIGN.md §14): statically
+                    # unrolled attempt loop, argmin for argmin with the
+                    # serial step_res.  The true-RTT matrix above is
+                    # request-scoped; occupancy feedback between
+                    # attempts flows through queue wait only, and every
+                    # dispatched attempt occupies its server for the
+                    # full service time whether or not the client is
+                    # still listening (retry amplification).
+                    timeout = res.timeout_s
+                    colK = jnp.arange(K)[None, :]
+                    if st.res_breaker:
+                        fail_c = sl(cr["br_fail"], a0)
+                        open_c = sl(cr["br_open"], a0)
+                        trip_c = sl(cr["br_trip"], a0)
+                    if st.policy == "round_robin":
+                        cursor = cr["cursor"]
+                    success = jnp.zeros((T,), bool)
+                    t_att = jnp.zeros((T,)) + now
+                    picks_fin = jnp.zeros((T,), jnp.int64)
+                    rtt_fin = jnp.zeros((T,))
+                    fin_fin = jnp.zeros((T,))
+                    disp_work = jnp.zeros((T,))
+                    n_att = jnp.zeros((T,))
+                    busy_c_i = busy_c
+                    for i in range(1 + res.max_retries):
+                        alive = ~success & ~shed
+                        mask = act_c if cap is not None \
+                            else jnp.ones((T, K), bool)
+                        if st.res_breaker:
+                            # open = tripped and still cooling; a
+                            # half-open probe stays routable
+                            mask = mask & ~(trip_c
+                                            & (t_att[:, None] < open_c))
+                        dispatch = alive & mask.any(1)
+                        wait_i = jnp.maximum(
+                            busy_c_i - t_att[:, None], 0.0)
+                        if st.policy in ("perf_aware", "oracle"):
+                            sc = wait_i + (predicted
+                                           if st.policy == "perf_aware"
+                                           else actual)
+                        elif st.policy == "least_conn":
+                            sc = busy_c_i - t_att[:, None]
+                        elif st.policy == "round_robin":
+                            dist = jnp.mod(colK - cursor[:, None],
+                                           K).astype(jnp.float64)
+                            sc = jnp.where(busy_c_i <= t_att[:, None],
+                                           dist, PEN + wait_i)
+                        else:                            # random
+                            sc = jnp.where(busy_c_i <= t_att[:, None],
+                                           x["draw"], PEN + wait_i)
+                        picks = jnp.argmin(
+                            jnp.where(mask, sc, jnp.inf), axis=1)
+                        rtt_i = actual[trial, picks]
+                        b_pick = busy_c_i[trial, picks]
+                        resp_i = jnp.maximum(b_pick - t_att, 0.0) + rtt_i
+                        ok_i = dispatch & (resp_i <= timeout)
+                        tmo_i = dispatch & ~ok_i
+                        # the server does the work whether or not the
+                        # client waited for the answer
+                        finish_i = jnp.maximum(t_att, b_pick) + rtt_i
+                        selp = colK == picks[:, None]
+                        busy_c_i = jnp.where(selp & dispatch[:, None],
+                                             finish_i[:, None], busy_c_i)
+                        disp_work = disp_work + jnp.where(dispatch,
+                                                          rtt_i, 0.0)
+                        n_att = n_att + dispatch
+                        if st.policy == "round_robin":
+                            cursor = jnp.where(dispatch, (picks + 1) % K,
+                                               cursor)
+                        if need_live:
+                            nodes_row = per_app("cand_node", a)
+                            np1 = nodes_row[trial, picks]
+                            r1 = a0 + picks
+                            add1 = dispatch & ~counted[trial, r1]
+                            cnt = cnt.at[a, trial, np1].add(
+                                add1.astype(cnt.dtype))
+                            counted = counted.at[
+                                trial, jnp.where(dispatch, r1, R)].set(
+                                    True, mode="drop")
+                        if st.res_breaker:
+                            # BreakerBoard.record: success resets, a
+                            # timeout increments and trips at the
+                            # threshold — or instantly on a half-open
+                            # probe (pre-update state decides)
+                            was_half = trip_c \
+                                & (t_att[:, None] >= open_c)
+                            okm = selp & ok_i[:, None]
+                            tm = selp & tmo_i[:, None]
+                            fail_c = jnp.where(okm, 0, fail_c + tm)
+                            tripped_now = tm & (
+                                (fail_c >= res.breaker_threshold)
+                                | was_half)
+                            trip_c = jnp.where(okm, False,
+                                               trip_c | tripped_now)
+                            open_c = jnp.where(
+                                tripped_now,
+                                t_att[:, None] + timeout
+                                + res.breaker_cooldown_s, open_c)
+                        picks_fin = jnp.where(ok_i, picks, picks_fin)
+                        rtt_fin = jnp.where(ok_i, rtt_i, rtt_fin)
+                        fin_fin = jnp.where(ok_i, t_att + resp_i,
+                                            fin_fin)
+                        success = success | ok_i
+                        if i < res.max_retries:
+                            # a failed DISPATCH is learned only at the
+                            # timeout; a fail-fast attempt (breaker open
+                            # / replica set drained) goes straight to
+                            # backoff — the asymmetry that lets breakers
+                            # arrest retry storms
+                            delay = res.backoff_base_s \
+                                * res.backoff_mult ** i \
+                                * (1.0 + res.backoff_jitter
+                                   * x["zj"][:, i])
+                            t_att = jnp.where(dispatch,
+                                              t_att + timeout + delay,
+                                              t_att + delay)
+                    busy = unsl(busy, busy_c_i, a0)
+                    ncr["busy"] = busy
+                    if st.policy == "round_robin":
+                        ncr["cursor"] = cursor
+                    if st.res_breaker:
+                        ncr["br_fail"] = unsl(cr["br_fail"], fail_c, a0)
+                        ncr["br_open"] = unsl(cr["br_open"], open_c, a0)
+                        ncr["br_trip"] = unsl(cr["br_trip"], trip_c, a0)
+                    if need_live:
+                        ncr["cnt"] = cnt
+                        ncr["counted"] = counted
+                    timed_out = ~success & ~shed
+                    rep = a0 + picks_fin
+                    resp = jnp.where(success, fin_fin - now, jnp.nan)
+                    if st.closed_loop:
+                        # only completed requests train the predictor or
+                        # count against rolling accuracy — a timed-out
+                        # request has no observed RTT
+                        fin_obs = jnp.where(success, fin_fin, jnp.inf)
+                        slot = jnp.mod(j, Wn)
+                        ncr["obs_X"] = cr["obs_X"].at[slot].set(
+                            X[trial, picks_fin])
+                        ncr["obs_y"] = cr["obs_y"].at[slot].set(rtt_fin)
+                        ncr["obs_fin"] = cr["obs_fin"].at[slot].set(
+                            fin_obs)
+                        ncr["obs_app"] = cr["obs_app"].at[slot].set(a)
+                        ncr["obs_valid"] = cr["obs_valid"].at[slot].set(
+                            True)
+                        if st.fallback:
+                            perr = jnp.abs(fleet_pred[trial, picks_fin]
+                                           - rtt_fin) \
+                                / jnp.maximum(rtt_fin, 1e-9)
+                            ncr["pd_err"] = cr["pd_err"].at[j].set(perr)
+                            ncr["pd_fin"] = cr["pd_fin"].at[j].set(
+                                fin_obs)
+                            ncr["pd_done"] = ncr["pd_done"].at[j].set(
+                                ~success)
+                    if cap is not None:
+                        ok_r = active[trial, rep] | ~success
+                        ncr["routed_inactive"] = cr["routed_inactive"] \
+                            + (~ok_r).sum()
+                        if predicted is not None:
+                            pred_src = fleet_pred if st.closed_loop \
+                                else predicted
+                            pred_pick = pred_src[trial, picks_fin]
+                            cur = col(s_hat, a)
+                            upd = (1.0 - al) * cur + al * pred_pick
+                            s_hat = set_col(
+                                s_hat, jnp.where(success, upd, cur), a)
+                        elif st.pending:
+                            fin_eff = jnp.where(success, fin_fin,
+                                                jnp.inf)
+                            ncr["pend_rtt"] = cr["pend_rtt"].at[j].set(
+                                rtt_fin)
+                            ncr["pend_fin"] = cr["pend_fin"].at[j].set(
+                                fin_eff)
+                        ncr.update(active=active, allowed=allowed,
+                                   warm=warm, paid=paid, prov=prov,
+                                   last_t=last_t, s_hat=s_hat,
+                                   last_scale=last_scale,
+                                   util_sum=util_sum, ev_ptr=ptr,
+                                   s_ups=s_ups, s_dns=s_dns,
+                                   wakeups=wakeups)
+                        if st.pending:
+                            ncr["folded"] = folded
+                    ys = {"resp": resp, "rtt": rtt_fin,
+                          "rep": rep.astype(jnp.int32), "shed": shed,
+                          "hmask": hmask, "rtt2": rtt2,
+                          "tout": timed_out, "att": n_att,
+                          "bwork": disp_work}
+                    return ncr, ys
+
                 sig = predicted if st.policy == "perf_aware" else actual
                 sc = wait_c + sig
                 sc_m = jnp.where(act_c, sc, jnp.inf) \
@@ -1148,6 +1434,8 @@ def _build_kernel(st: _Static):
                                       picks[:, None])[:, 0]
                     if cap is not None:
                         rtt_pick = rtt_pick * coldm[trial, picks]
+                    if graym is not None:
+                        rtt_pick = rtt_pick * graym[trial, picks]
                 if st.hedging:
                     s2 = sc_m.at[trial, picks].set(jnp.inf)
                     second = jnp.argmin(s2, axis=1)
@@ -1179,6 +1467,8 @@ def _build_kernel(st: _Static):
                                   second[:, None])[:, 0]
                     if cap is not None:
                         rtt2 = rtt2 * coldm[trial, second]
+                    if graym is not None:
+                        rtt2 = rtt2 * graym[trial, second]
                 b2 = busy_c[trial, second]
                 finish2 = jnp.maximum(now, b2) + rtt2
                 resp = jnp.where(hmask, jnp.minimum(finish, finish2),
@@ -1280,19 +1570,23 @@ _T_AXIS = {
     # consts
     "node_of": 0, "down": 0, "hit": 0, "perm": 0, "bstart": 0, "bend": 0,
     "na_key": 0, "mate_idx": 0, "mate_app": 0, "mate_pad": 0,
+    "grayrep": 0, "gdown": 0,
     "imat_pre": 1, "imat_post": 1,
     "speed_pre": 1, "speed_post": 1, "cand_node": 1, "log_rbar_pre": None,
     "log_rbar_post": None, "mean_rtt": None, "app_of": None,
     "req_app": None, "ev_t": None, "ev_kind": None, "ev_step": None,
     "ev_rate": None, "key": None,
     # xs
-    "j": None, "app": None, "t": None, "z": 1, "zp": 1, "draw": 1,
+    "j": None, "app": None, "t": None, "z": 1, "zp": 1, "draw": 1, "zj": 1,
     "refresh": None, "coldflag": None, "driftflag": None,
-    "churnflag": None, "resync": None, "retrain": None,
+    "churnflag": None, "gflag": None, "grayflag": None, "resync": None,
+    "retrain": None,
     # carry / ys
     "busy": 0, "cursor": 0, "snap": 0,
     "cnt": 1, "counted": 0, "snap_cnt": 1, "snap_counted": 0,
+    "br_fail": 0, "br_open": 0, "br_trip": 0,
     "resp": 1, "rtt": 1, "rep": 1, "shed": 1, "hmask": 1, "rtt2": 1,
+    "tout": 1, "att": 1, "bwork": 1,
 }
 
 
@@ -1358,8 +1652,14 @@ def _get_fn(st: _Static, mode: str, ndev: int, trees=None):
     return fn
 
 
-_YS_KEYS = {"resp": None, "rtt": None, "rep": None, "shed": None,
+def _ys_keys(st: _Static) -> Dict[str, None]:
+    """Per-step output keys the kernel emits for this specialisation
+    (the shard-map out_specs need them before tracing)."""
+    keys = {"resp": None, "rtt": None, "rep": None, "shed": None,
             "hmask": None, "rtt2": None}
+    if st.res_client:
+        keys.update(tout=None, att=None, bwork=None)
+    return keys
 
 
 def _pad_trials(tree, T, Tp):
@@ -1395,7 +1695,7 @@ def _execute(st, consts, xs, carry0, force_single=False):
         xj = {k: jnp.asarray(v) for k, v in xs.items()}
         crj = {k: jnp.asarray(v) for k, v in carry0.items()}
         if use_shard:
-            fn = _get_fn(st, "shard", ndev, (cj, xj, crj, _YS_KEYS))
+            fn = _get_fn(st, "shard", ndev, (cj, xj, crj, _ys_keys(st)))
         else:
             fn = _get_fn(st, "jit", 1)
         final, ys = fn(cj, xj, crj)
@@ -1519,6 +1819,23 @@ def _summarize(cluster: _Cluster, st: _Static, final, ys, aux,
         over = resp - m.slo
     m.slo_violation_s = np.where(served, np.maximum(over, 0.0),
                                  0.0).sum(axis=1)
+    if st.res_client:
+        # client-plane accounting (serial step_res booked the successful
+        # attempt's work in add() and every other dispatched attempt as
+        # extra): total dispatched work IS the busy/cpu/mem integral,
+        # the shortfall vs the served RTT is the wasted work
+        tout = ys["tout"].T
+        bwork = ys["bwork"].T                          # (T, J)
+        ok = served & ~tout
+        m.timeout = tout
+        m.chosen = np.where(shed | tout, -1, rep)
+        m.busy_s = bwork.sum(axis=1)
+        m.cpu_s = (cpu_a * bwork).sum(axis=1)
+        m.mem_s = (mem_a * bwork).sum(axis=1)
+        m.wasted_s = (bwork - np.where(ok, rtt, 0.0)).sum(axis=1)
+        m.attempts = ys["att"].T.sum(axis=1)
+        m.slo_violation_s = np.where(ok, np.maximum(over, 0.0),
+                                     0.0).sum(axis=1)
     m.n_hedged = int(hmask.sum())
     m.hedged = hmask.sum(axis=1).astype(np.int64)
     m.n_fallback = int(final.get("n_fallback", 0))

@@ -73,11 +73,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.balancer import ClusterState, PerfAware, POLICIES, make_policy
+from repro.core.balancer import (BUSY_PENALTY, ClusterState, PerfAware,
+                                 POLICIES, make_policy)
 from repro.core.capacity import (CapacityConfig, CapacityController,
                                  DEFAULT_SLO_S, MembershipEvent,
                                  membership_timeline)
 from repro.core.online import OnlineFleet
+from repro.core.resilience import (backoff_delay, BreakerBoard,
+                                   ResilienceConfig)
+from repro.core.rng import rng_seed, rng_stream
 from repro.monitoring.metrics import PeriodicRefresh
 
 # SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
@@ -148,6 +152,11 @@ class SimConfig:
     #: spot preemption: (t_start_s, duration_s) — one node per trial is
     #: reclaimed for the window (requires ``capacity``)
     preempt: Optional[Tuple[float, float]] = None
+    # -- resilience plane (core/resilience.py, DESIGN.md §14) -----------
+    #: fault timeline (gray failure / correlated outage / staleness
+    #: storm) + client-side timeout / retry / circuit-breaker semantics;
+    #: None keeps every earlier scenario bit-identical
+    resilience: Optional[ResilienceConfig] = None
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -253,6 +262,11 @@ class _Cluster:
     accel_post: Optional[np.ndarray] = None    # post-drift node speeds
     mean_rtt_post: Optional[np.ndarray] = None  # post-drift app means
     preempted_node: Optional[np.ndarray] = None  # (T,) spot-preempt target
+    # resilience plane (DESIGN.md §14): replicas on the gray node / in
+    # the correlated-outage group, and the pre-drawn backoff jitter
+    gray_rep: Optional[np.ndarray] = None      # (T, R) bool
+    group_rep: Optional[np.ndarray] = None     # (T, R) bool
+    z_jitter: Optional[np.ndarray] = None      # (T, J, max_retries) U[0,1)
 
     def __post_init__(self):
         self._prep: Dict[Tuple[int, bool], _AppPrep] = {}
@@ -355,7 +369,7 @@ class _Cluster:
 def _build_cluster(cfg: SimConfig) -> _Cluster:
     """Topology + request stream; same RNG order as the seed simulator so
     the default scenarios stay statistically unchanged."""
-    rng = np.random.default_rng(cfg.seed)
+    rng = rng_stream(cfg.seed, "topology")
     T = cfg.n_trials
     A = len(cfg.apps)
     R = A * cfg.n_replicas_per_app
@@ -373,35 +387,58 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
     # request stream: same per policy for paired comparison.  With
     # stream_seed set, arrivals come from their own generator so configs
     # differing only in `seed` share one stream (campaign lockstep);
-    # (salt, seed) tuples keep the streams independent of the topology
-    # and noise generators even when the integer seeds collide.
+    # the named streams keep every consumer independent even when the
+    # integer seeds collide (core/rng.py pins the legacy identities).
     if cfg.stream_seed is None:
-        stream_rng = noise_rng = np.random.default_rng(cfg.seed + 1)
+        stream_rng = noise_rng = rng_stream(cfg.seed, "noise")
     else:
-        stream_rng = np.random.default_rng((17, cfg.stream_seed))
-        noise_rng = np.random.default_rng((29, cfg.seed))
+        stream_rng = rng_stream(cfg.stream_seed, "arrival")
+        noise_rng = rng_stream(cfg.seed, "noise_streamed")
     req_app = stream_rng.integers(0, A, size=cfg.n_requests)
     req_t = _arrival_times(cfg, stream_rng)
     z_rtt = noise_rng.standard_normal((T, cfg.n_requests))
     z_pred = noise_rng.standard_normal((T, cfg.n_requests, R))
     failed_node = None
     if cfg.churn is not None:
-        failed_node = np.random.default_rng(cfg.seed + 3).integers(
+        failed_node = rng_stream(cfg.seed, "churn").integers(
             0, cfg.n_nodes, size=T)
     preempted_node = None
     if cfg.preempt is not None:
         if cfg.capacity is None:
             raise ValueError("preempt requires a CapacityConfig (the "
                              "elastic replica set handles the takeback)")
-        preempted_node = np.random.default_rng((37, cfg.seed)).integers(
+        preempted_node = rng_stream(cfg.seed, "preempt").integers(
             0, cfg.n_nodes, size=T)
+    # resilience plane (DESIGN.md §14): one "fault" stream, fixed draw
+    # order (gray target -> outage-group start -> backoff jitter) so
+    # adding a later fault never moves an earlier one
+    gray_rep = group_rep = z_jitter = None
+    res = cfg.resilience
+    if res is not None:
+        if cfg.hedge_factor is not None and res.client_side:
+            raise ValueError(
+                "hedge_factor and resilience timeouts are mutually "
+                "exclusive (a hedged duplicate has no attempt identity "
+                "for the timeout/breaker state machine)")
+        fault_rng = rng_stream(cfg.seed, "fault")
+        if res.gray is not None:
+            gray_node = fault_rng.integers(0, cfg.n_nodes, size=T)
+            gray_rep = node_of == gray_node[:, None]
+        if res.outage_group is not None:
+            n_down = min(int(res.outage_group[2]), cfg.n_nodes)
+            start = fault_rng.integers(0, cfg.n_nodes, size=T)
+            off = (node_of - start[:, None]) % cfg.n_nodes
+            group_rep = off < n_down     # contiguous group, wrap mod N
+        if res.client_side:
+            z_jitter = fault_rng.random((T, cfg.n_requests,
+                                         res.max_retries))
     mean_rtt = np.array([APPS[a][0] for a in cfg.apps])
     # post-drift regime: redrawn interference mix, reshuffled node
     # speeds, rescaled app means — all from drift-salted generators so
     # the pre-drift draws (and every non-drift config) stay untouched
     imat_post = accel_post = mean_rtt_post = None
     if cfg.t_drift is not None:
-        drift_rng = np.random.default_rng((31, cfg.seed))
+        drift_rng = rng_stream(cfg.seed, "drift")
         if cfg.drift_interference is not None:
             imat_post = _apply_interference_profile(
                 _interference_matrix(cfg.apps, cfg.drift_interference,
@@ -424,7 +461,8 @@ def _build_cluster(cfg: SimConfig) -> _Cluster:
         req_app=req_app, req_t=req_t, z_rtt=z_rtt, z_pred=z_pred,
         failed_node=failed_node, imat_post=imat_post,
         accel_post=accel_post, mean_rtt_post=mean_rtt_post,
-        preempted_node=preempted_node)
+        preempted_node=preempted_node,
+        gray_rep=gray_rep, group_rep=group_rep, z_jitter=z_jitter)
 
 
 class _Metrics:
@@ -432,10 +470,12 @@ class _Metrics:
     the per-app breakdown), resource-seconds, assignments, and the
     capacity plane's waste / shed / SLO accounting (DESIGN.md §12).
 
-    Shed requests carry NaN in the RTT matrix and -1 in ``chosen``;
-    RTT stats then become nan-aware (the guard is the CONFIG — capacity
-    with admission control enabled — not the data, so batched and
-    serial campaign runs always take the same code path).
+    Shed and timed-out requests carry NaN in the RTT matrix and -1 in
+    ``chosen``; RTT stats then become nan-aware.  The guard is the
+    CONFIG — *can this config drop a request at all* (capacity with
+    admission control, OR a resilience plane with a client timeout) —
+    never the data, so batched and serial campaign runs always take the
+    same code path even when a particular seed happens to shed nothing.
     """
 
     def __init__(self, cfg: SimConfig):
@@ -452,27 +492,41 @@ class _Metrics:
         # accounting SLO defaults to DEFAULT_SLO_S)
         self.slo = cfg.capacity.slo_target_s if cfg.capacity is not None \
             else DEFAULT_SLO_S
-        self._nan_stats = cfg.capacity is not None \
+        can_shed = cfg.capacity is not None \
             and cfg.capacity.admission_limit_s is not None
+        can_timeout = cfg.resilience is not None \
+            and cfg.resilience.client_side
+        self._nan_stats = can_shed or can_timeout
         self.busy_s = np.zeros(T)           # replica-seconds of service
         self.slo_violation_s = np.zeros(T)  # response time above the SLO
         self.shed = np.zeros((T, J), bool)
         self.n_fallback = 0                 # least_conn-fallback routings
+        # resilience-plane accounting (DESIGN.md §14)
+        self.timeout = np.zeros((T, J), bool)  # all attempts timed out
+        self.attempts = np.zeros(T)            # dispatched attempts
+        self.wasted_s = np.zeros(T)            # timed-out attempts' work
 
     def add(self, j: int, response: np.ndarray, cpu: np.ndarray,
             mem: np.ndarray, rep: np.ndarray, rtt: np.ndarray,
-            shed: Optional[np.ndarray] = None):
+            shed: Optional[np.ndarray] = None,
+            timeout: Optional[np.ndarray] = None):
         self.rtts[:, j] = response
         self.cpu_s += cpu
         self.mem_s += mem
-        if shed is None:
+        if shed is None and timeout is None:
             self.chosen[:, j] = rep
             self.busy_s += rtt
             self.slo_violation_s += np.maximum(response - self.slo, 0.0)
         else:
-            served = ~shed
-            self.chosen[:, j] = np.where(shed, -1, rep)
-            self.shed[:, j] = shed
+            fail = np.zeros(len(response), bool)
+            if shed is not None:
+                self.shed[:, j] = shed
+                fail |= shed
+            if timeout is not None:
+                self.timeout[:, j] = timeout
+                fail |= timeout
+            served = ~fail
+            self.chosen[:, j] = np.where(fail, -1, rep)
             self.busy_s += np.where(served, rtt, 0.0)
             self.slo_violation_s += np.where(
                 served, np.maximum(response - self.slo, 0.0), 0.0)
@@ -524,6 +578,14 @@ class _Metrics:
                "n_shed": int(self.shed.sum()),
                "slo_violation_s": self.slo_violation_s,
                "n_fallback": self.n_fallback,
+               # resilience-plane accounting (DESIGN.md §14): goodput is
+               # the fraction of requests that completed at all — shed
+               # and timed-out requests both count against it
+               "goodput": 1.0 - (self.shed | self.timeout).mean(axis=1),
+               "timeout_rate": self.timeout.mean(axis=1),
+               "n_timeouts": int(self.timeout.sum()),
+               "attempts_per_req": self.attempts / self.rtts.shape[1],
+               "wasted_work_s": self.wasted_s,
                # raw per-request views (windowed analyses, e.g. the
                # post-drift recovery metric in benchmarks/bench_online)
                "rtts": self.rtts, "req_t": cluster.req_t}
@@ -576,13 +638,27 @@ class SimStepper:
         # stale-prediction state: the predictor's occupancy snapshot
         # refreshes on the plane's periodic-collection cadence (shared
         # PeriodicRefresh), not per request; an outage freezes it for
-        # the whole window regardless of the cadence
+        # the whole window regardless of the cadence.  A resilience
+        # staleness storm is one more outage window on the same hook
+        # (with lag 0 the snapshot is live outside the storm and frozen
+        # inside it).
+        res = cfg.resilience
         outages = ()
         if cfg.outage is not None:
             t0, duration = cfg.outage
             outages = ((t0, t0 + duration),)
+        if res is not None and res.staleness is not None:
+            s0, sdur = res.staleness
+            outages = outages + ((s0, s0 + sdur),)
         self.snapshot = PeriodicRefresh(cfg.prediction_lag_s, outages) \
             if (cfg.prediction_lag_s > 0 or outages) else None
+        # resilience plane (DESIGN.md §14)
+        self.res = res
+        self.breaker: Optional[BreakerBoard] = None
+        if res is not None and res.breaker_threshold is not None:
+            self.breaker = BreakerBoard(
+                len(cluster.app_of), res.breaker_threshold,
+                res.breaker_cooldown_s, res.timeout_s, n_trials=T)
         self.capacity: Optional[CapacityController] = None
         if cfg.capacity is not None:
             self.capacity = CapacityController(
@@ -598,7 +674,8 @@ class SimStepper:
         # per-step updates, DESIGN.md §13)
         self._timeline: List[MembershipEvent] = membership_timeline(
             float(cluster.req_t[-1]), churn=cfg.churn,
-            capacity=cfg.capacity, preempt=cfg.preempt)
+            capacity=cfg.capacity, preempt=cfg.preempt,
+            outage_group=None if res is None else res.outage_group)
         self._ev_ptr = 0
 
     def _advance_membership(self, now: float):
@@ -618,10 +695,31 @@ class SimStepper:
                     self.busy_until)
             elif ev.kind == "scale":
                 self.capacity.decide(ev.t, self.busy_until)
+            elif ev.kind == "group_down":
+                # correlated outage: the whole node group drops at once
+                # (churn's busy-bump, group-wide — DESIGN.md §14)
+                g0, gdur, _ = self.res.outage_group
+                self.busy_until = np.where(
+                    self.cluster.group_rep,
+                    np.maximum(self.busy_until, g0 + gdur),
+                    self.busy_until)
             elif ev.kind == "preempt_down":
                 self.capacity.preempt(ev.t, self.busy_until)
             elif ev.kind == "preempt_up":
                 self.capacity.restore(ev.t)
+
+    def _gray_mult(self, now: float,
+                   candidates: np.ndarray) -> Optional[np.ndarray]:
+        """(T, C) gray-failure RTT multiplier inside the gray window,
+        else None.  Applied to the TRUE RTT only — the prediction basis
+        keeps the healthy view the replica still advertises."""
+        res = self.res
+        if res is None or res.gray is None:
+            return None
+        g0, gdur, gslow = res.gray
+        if not g0 <= now < g0 + gdur:
+            return None
+        return np.where(self.cluster.gray_rep[:, candidates], gslow, 1.0)
 
     def step(self, j: int):
         cluster, cfg = self.cluster, self.cfg
@@ -645,6 +743,7 @@ class SimStepper:
             active = capacity.active_for(candidates)
             cold = capacity.cold_mult(candidates, now)
 
+        graym = self._gray_mult(now, candidates)
         predicted = fleet_X = fleet_pred = None
         if self.reactive:
             state = ClusterState(now=now,
@@ -655,6 +754,8 @@ class SimStepper:
             rtt = cluster.rtt_draw_at(j, a, busy_until, now, picks)
             if cold is not None:
                 rtt = rtt * cold[trial, picks]
+            if graym is not None:
+                rtt = rtt * graym[trial, picks]
         else:
             actual = cluster.rtt_draw(j, a, busy_until, now)
             if cold is not None:
@@ -700,6 +801,12 @@ class SimStepper:
                     pred_basis = pred_basis * cold
                 eps = (1.0 - cfg.accuracy) * pred_basis
                 predicted = pred_basis + eps * prep.z_pred[:, j, :]
+            if graym is not None:
+                # AFTER the prediction basis is fixed: the multiply makes
+                # a fresh array, so a ``pred_basis is actual`` alias keeps
+                # the healthy view while the oracle / served RTT see the
+                # gray truth
+                actual = actual * graym
 
             state = ClusterState(now=now,
                                  busy_until=busy_until[:, candidates],
@@ -773,9 +880,208 @@ class SimStepper:
         return (np.where(served, response, np.nan),
                 np.where(served, cpu, 0.0), np.where(served, mem, 0.0))
 
+    def step_res(self, j: int):
+        """One request under the client-side resilience plane
+        (DESIGN.md §14): per-request timeout, bounded retries with
+        exponential backoff + jitter, per-replica circuit breaker.  A
+        statically unrolled attempt loop (1 + max_retries) replaces
+        :meth:`step`'s single dispatch.
+
+        RTT noise and the interference snapshot are REQUEST-scoped: the
+        true-RTT matrix is drawn once at arrival occupancy and each
+        attempt gathers its pick's column; occupancy feedback between
+        attempts flows through queue wait only.  A dispatched attempt
+        occupies the server for its full service time whether or not
+        the client waits for the answer — the retry-amplification
+        mechanism.  The compiled kernel lowers the identical unroll
+        (``tests/test_resilience.py`` pins the parity).
+        """
+        cluster, cfg, res = self.cluster, self.cfg, self.res
+        a = int(cluster.req_app[j])
+        now = float(cluster.req_t[j])
+
+        self._advance_membership(now)
+        busy_until, trial = self.busy_until, self.trial
+        T = len(trial)
+
+        prep = cluster.app_prep(a)
+        candidates = prep.candidates
+        C = len(candidates)
+
+        # capacity plane: admission is evaluated ONCE at arrival — a
+        # shed request never dispatches an attempt
+        capacity = self.capacity
+        active = cold = shed = None
+        if capacity is not None:
+            capacity.wake(a, now)
+            shed = capacity.shed_mask(candidates, busy_until, now)
+            active = capacity.active_for(candidates)
+            cold = capacity.cold_mult(candidates, now)
+
+        # the once-per-request true-RTT matrix at ARRIVAL occupancy
+        actual = cluster.rtt_draw(j, a, busy_until, now)
+        if cold is not None:
+            actual = actual * cold
+        pol = self.pol
+        predicted = fleet_X = fleet_pred = None
+        if self.fleet is not None:
+            self.fleet.fold_pending(now)
+            self.fleet.maybe_retrain(now)
+            stale_busy = busy_until
+            if self.snapshot is not None:
+                stale_busy = self.snapshot.get(now, busy_until.copy)
+            fleet_X = self.fleet.features(a, candidates, stale_busy, now)
+            fleet_pred = self.fleet.predict(a, fleet_X)
+            predicted = fleet_pred
+            if cfg.fallback_threshold > 0:
+                ok = self.fleet.viable(a, cfg.fallback_threshold)
+                predicted = np.where(ok[:, None], fleet_pred, 0.0)
+                self.metrics.n_fallback += int((~ok).sum())
+        elif self.needs_pred:
+            if now < cfg.cold_start_s:
+                pred_basis = np.broadcast_to(cluster.mean_rtt[a],
+                                             actual.shape).copy()
+            elif self.snapshot is not None:
+                stale_busy = self.snapshot.get(now, busy_until.copy)
+                pred_basis = cluster.rtt_draw(j, a, stale_busy, now)
+            else:
+                pred_basis = actual
+            if cold is not None and pred_basis is not actual:
+                pred_basis = pred_basis * cold
+            eps = (1.0 - cfg.accuracy) * pred_basis
+            predicted = pred_basis + eps * prep.z_pred[:, j, :]
+        graym = self._gray_mult(now, candidates)
+        if graym is not None:
+            actual = actual * graym   # fresh array: the prediction
+            # basis above keeps the healthy (advertised) view
+
+        # the rng-consuming scoring inputs are drawn ONCE per request
+        # (same draw counts as the non-resilient path, so the campaign's
+        # seed_blocks replay stays exact); retries rescore statelessly
+        # at their own per-trial attempt times
+        draws = None
+        if pol.name == "random":
+            if pol._blocks is not None:
+                draws = np.concatenate(
+                    [rng.random((n, C)) for rng, n in pol._blocks],
+                    axis=0)
+            else:
+                draws = pol.rng.random((T, C))
+        cursor = None
+        if pol.name == "round_robin":
+            pol._ensure(T)
+            cursor = pol._cursor
+
+        timeout = res.timeout_s
+        shed_m = np.zeros(T, bool) if shed is None else shed
+        success = np.zeros(T, bool)
+        t_att = np.full(T, now)
+        rep_fin = np.zeros(T, np.int64)
+        picks_fin = np.zeros(T, np.int64)
+        rtt_fin = np.zeros(T)
+        fin_fin = np.zeros(T)
+        disp_work = np.zeros(T)        # ALL dispatched service time
+        n_att = np.zeros(T)
+
+        for i in range(1 + res.max_retries):
+            alive = ~success & ~shed_m
+            if not alive.any():
+                break
+            mask = np.ones((T, C), bool) if active is None \
+                else active.copy()
+            if self.breaker is not None:
+                mask &= ~self.breaker.open_mask(t_att)[:, candidates]
+            dispatch = alive & mask.any(axis=1)
+
+            busy_c = busy_until[:, candidates]
+            wait = np.maximum(busy_c - t_att[:, None], 0.0)
+            if pol.name in ("perf_aware", "oracle"):
+                sc = wait + (actual if pol.name == "oracle"
+                             else predicted)
+            elif pol.name == "least_conn":
+                sc = busy_c - t_att[:, None]
+            elif pol.name == "round_robin":
+                dist = (np.arange(C)[None, :] - cursor[:, None]) % C
+                sc = np.where(busy_c <= t_att[:, None],
+                              dist.astype(float), BUSY_PENALTY + wait)
+            else:   # random
+                sc = np.where(busy_c <= t_att[:, None], draws,
+                              BUSY_PENALTY + wait)
+            picks = np.argmin(np.where(mask, sc, np.inf), axis=1)
+            rep = candidates[picks]
+            rtt_i = actual[trial, picks]
+            b_pick = busy_until[trial, rep]
+            resp_i = np.maximum(b_pick - t_att, 0.0) + rtt_i
+            ok_i = dispatch & (resp_i <= timeout)
+            tmo_i = dispatch & ~ok_i
+
+            # the server does the work whether or not the client is
+            # still listening
+            finish_i = np.maximum(t_att, b_pick) + rtt_i
+            d = np.flatnonzero(dispatch)
+            busy_until[d, rep[d]] = finish_i[d]
+            disp_work += np.where(dispatch, rtt_i, 0.0)
+            n_att += dispatch
+            if cursor is not None:
+                cursor = np.where(dispatch, (picks + 1) % C, cursor)
+            if self.breaker is not None:
+                self.breaker.record(t_att, rep, ok_i, tmo_i)
+
+            ok = np.flatnonzero(ok_i)
+            rep_fin[ok] = rep[ok]
+            picks_fin[ok] = picks[ok]
+            rtt_fin[ok] = rtt_i[ok]
+            fin_fin[ok] = t_att[ok] + resp_i[ok]
+            success |= ok_i
+
+            if i < res.max_retries:
+                delay = backoff_delay(res, i, cluster.z_jitter[:, j, i])
+                # a failed DISPATCH is learned only at the timeout; a
+                # fail-fast attempt (no routable candidate — breaker
+                # open or replica set drained) goes straight to backoff.
+                # That asymmetry is why breakers arrest retry storms.
+                t_att = np.where(dispatch, t_att + timeout + delay,
+                                 t_att + delay)
+        if cursor is not None:
+            pol._cursor = cursor
+
+        timed_out = ~success & ~shed_m
+        response = np.where(success, fin_fin - now, np.nan)
+        if self.fleet is not None:
+            # only completed requests train the predictor or count
+            # against rolling accuracy — a timed-out request has no
+            # observed RTT (DESIGN.md §14)
+            self.fleet.observe(a, fleet_X[trial, picks_fin], rtt_fin,
+                               fin_fin, fleet_pred[trial, picks_fin],
+                               served=success)
+        if capacity is not None:
+            capacity.check_routed(rep_fin, success)
+            if fleet_pred is not None:
+                capacity.note_prediction(a, fleet_pred[trial, picks_fin],
+                                         success)
+            elif predicted is not None:
+                capacity.note_prediction(a, predicted[trial, picks_fin],
+                                         success)
+            else:
+                capacity.note_completion(a, rtt_fin, fin_fin, success)
+        cpu = np.where(success, cluster.cpu_req[a] * rtt_fin, 0.0)
+        mem = np.where(success, cluster.mem_req[a] * rtt_fin, 0.0)
+        self.metrics.add(j, response, cpu, mem, rep_fin, rtt_fin,
+                         shed=shed, timeout=timed_out)
+        # all dispatched-but-timed-out attempts still burned server time
+        # (add() booked only the successful attempt's work)
+        extra = disp_work - np.where(success, rtt_fin, 0.0)
+        self.metrics.busy_s += extra
+        self.metrics.cpu_s += cluster.cpu_req[a] * extra
+        self.metrics.mem_s += cluster.mem_req[a] * extra
+        self.metrics.wasted_s += extra
+        self.metrics.attempts += n_att
+
     def run(self) -> Dict[str, np.ndarray]:
+        step = self.step_res if (self.res is not None
+                                 and self.res.client_side) else self.step
         for j in range(self.cfg.n_requests):
-            self.step(j)
+            step(j)
         summary = self.metrics.summary(self.cluster, self.busy_until,
                                        self.capacity)
         if self.fleet is not None:
@@ -792,7 +1098,7 @@ def run_sim(cfg: SimConfig, policy: str = "perf_aware"):
     assignment matrix, and the hedged-request count.
     """
     cluster = _build_cluster(cfg)
-    pol = make_policy(policy, seed=cfg.seed + 2,
+    pol = make_policy(policy, seed=rng_seed(cfg.seed, "policy"),
                       hedge_factor=cfg.hedge_factor)
     return SimStepper(cluster, pol).run()
 

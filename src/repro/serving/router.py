@@ -34,10 +34,22 @@ policy's ClusterState (they still serve their queues), the admission
 hook sheds requests the active set cannot bound (``route`` returns
 -1), and ``pool.ledger()`` reports the serving-side (provisioned,
 busy, waste, shed) accounting.
+
+And it mirrors the resilience plane (DESIGN.md §14): with a
+:class:`~repro.core.resilience.ResilienceConfig` the router applies the
+same client-side rules the simulator's ``step_res`` uses — replicas
+whose circuit breaker is OPEN are masked out of candidate scoring
+(half-open probes stay routable), a completed request whose measured
+RTT exceeds ``timeout_s`` counts as a client timeout (the server still
+did the work), timed-out attempts feed the shared
+:class:`~repro.core.resilience.BreakerBoard` (T=1) and are retried
+through ``route`` while attempts remain, and — the tracker hygiene rule
+— timed-out requests NEVER enter the rolling-accuracy reconciliation:
+a blown deadline says nothing about how wrong the prediction was.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,6 +58,7 @@ from repro.core.capacity import CapacityConfig, EnginePool
 from repro.core.knowledge import KnowledgeBase
 from repro.core.online import RollingAccuracy
 from repro.core.prediction_plane import PredictionPlane
+from repro.core.resilience import BreakerBoard, ResilienceConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -57,7 +70,13 @@ class MorpheusRouter:
                  hedge_factor: Optional[float] = None, seed: int = 0,
                  fallback_threshold: float = 0.0,
                  accuracy_window: int = 40,
-                 capacity: Optional[CapacityConfig] = None):
+                 capacity: Optional[CapacityConfig] = None,
+                 resilience: Optional[ResilienceConfig] = None):
+        if hedge_factor is not None and resilience is not None \
+                and resilience.client_side:
+            raise ValueError("hedging and client-side resilience (timeout/"
+                             "retry) are mutually exclusive — same rule as "
+                             "the simulator")
         self.replicas = list(replicas)
         self.policy_name = policy
         self.policy = make_policy(policy, seed=seed, hedge_factor=hedge_factor)
@@ -80,6 +99,19 @@ class MorpheusRouter:
         self.pool = None if capacity is None \
             else EnginePool(self.replicas, capacity)
         self.shed: List[Request] = []         # admission-rejected requests
+        # resilience plane (DESIGN.md §14): T=1 breaker board + the
+        # timeout/retry ledger drained by _settle_resilience()
+        self.resilience = resilience
+        self.breaker = None
+        if resilience is not None and resilience.breaker_threshold is not None:
+            self.breaker = BreakerBoard(
+                len(self.replicas), resilience.breaker_threshold,
+                resilience.breaker_cooldown_s, resilience.timeout_s)
+        self.timeouts: List[Request] = []     # exhausted every attempt
+        self.retries = 0                      # re-entries through route()
+        self._attempt: Dict[int, int] = {}    # rid -> retries already issued
+        self._res_pending: List[Tuple[Request, int]] = []
+        self._timeout_ids: set = set()        # attempt objects that timed out
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
@@ -182,6 +214,19 @@ class MorpheusRouter:
         # back — otherwise the tracker would never see a retrained
         # fleet recover and the fallback would be permanent
         state = self.cluster_state(needs_pred=use_pred)
+        if self.breaker is not None:
+            # OPEN breakers leave candidate scoring entirely; half-open
+            # probes stay routable.  When everything is open the request
+            # routes anyway (failing fast would starve the probes).
+            now = self.replicas[0].clock.now() if self.replicas else 0.0
+            open_m = self.breaker.open_mask(np.array([now]))
+            if not open_m.all():
+                act = ~open_m if state.active is None \
+                    else state.active & ~open_m
+                state = ClusterState(now=state.now,
+                                     busy_until=state.busy_until,
+                                     queue_depth=state.queue_depth,
+                                     predicted=state.predicted, active=act)
         if fell_back:
             self.fallbacks += 1
             reactive = ClusterState(
@@ -193,6 +238,9 @@ class MorpheusRouter:
             i = int(self.policy.pick(state)[0])
         self.replicas[i].submit(req)
         self.routed.append(i)
+        if self.resilience is not None and self.resilience.client_side:
+            self._attempt.setdefault(req.rid, 0)
+            self._res_pending.append((req, i))
         if use_pred and state.predicted is not None \
                 and np.isfinite(state.predicted[0, i]):
             # predicted COMPLETION (queue-wait estimate + service RTT):
@@ -226,23 +274,35 @@ class MorpheusRouter:
         Completed requests also settle the rolling accuracy tracker:
         each routed prediction is compared against the measured RTT, so
         the fallback rule sees prediction quality as it actually
-        happened."""
+        happened.
+
+        With a client-side resilience plane each serve round is followed
+        by a settlement pass: attempts whose measured RTT blew
+        ``timeout_s`` are retried through ``route`` (retry re-entry is
+        real load) and the loop continues until no retry was issued.
+        Timed-out attempts are dropped from the finished list — the
+        request either reappears as a successful retry or lands in
+        ``self.timeouts``."""
         finished: List[Request] = []
-        progress = True
-        while progress:
-            progress = False
-            for rep in self.replicas:
-                out = rep.step_wave()
-                if out:
-                    finished.extend(out)
-                    progress = True
+        while True:
+            progress = True
+            while progress:
+                progress = False
+                for rep in self.replicas:
+                    out = rep.step_wave()
+                    if out:
+                        finished.extend(out)
+                        progress = True
+            if not self._settle_resilience():
+                break
         dup_ids = {id(d) for _, d in self._hedge_pairs}
         for primary, dup in self._hedge_pairs:
             if dup.t_done is not None and (
                     primary.t_done is None or dup.t_done < primary.t_done):
                 primary.t_done = dup.t_done
                 primary.output = dup.output
-        finished = [r for r in finished if id(r) not in dup_ids]
+        finished = [r for r in finished if id(r) not in dup_ids
+                    and id(r) not in self._timeout_ids]
         self._hedge_pairs.clear()
         still_inflight = []
         for req, i, pred in self._inflight:
@@ -250,10 +310,58 @@ class MorpheusRouter:
             if rtt is None:
                 still_inflight.append((req, i, pred))
                 continue
+            if id(req) in self._timeout_ids:
+                # the client gave up on this attempt: its measured RTT
+                # says nothing about prediction quality, so the rolling
+                # accuracy tracker never sees it (DESIGN.md §14)
+                continue
             err = np.zeros(len(self.replicas))
             mask = np.zeros(len(self.replicas), bool)
             err[i] = abs(pred - rtt) / max(rtt, 1e-9)
             mask[i] = True
             self.accuracy.update(err, mask)
         self._inflight = still_inflight
+        self._timeout_ids.clear()
         return finished
+
+    def _settle_resilience(self) -> bool:
+        """Classify completed attempts (DESIGN.md §14).
+
+        A measured RTT above ``timeout_s`` means the CLIENT gave up —
+        the server still did the full work (the wave already ran), which
+        is exactly the wasted-work half of retry amplification.  Each
+        verdict feeds the breaker at the attempt's DISPATCH time (the
+        client learns of a timeout ``timeout_s`` after dispatch, which
+        is what ``BreakerBoard.record`` encodes), and a timed-out
+        request re-enters ``route`` while attempts remain.  Returns True
+        when at least one retry was issued (the drain loop must serve
+        another round)."""
+        res = self.resilience
+        if res is None or not res.client_side:
+            return False
+        still: List[Tuple[Request, int]] = []
+        retried = False
+        for req, i in self._res_pending:
+            if req.t_done is None:
+                still.append((req, i))
+                continue
+            timed_out = bool(req.rtt > res.timeout_s)
+            if self.breaker is not None:
+                self.breaker.record(
+                    np.array([req.t_enqueue]), np.array([i]),
+                    np.array([not timed_out]), np.array([timed_out]))
+            if not timed_out:
+                continue
+            self._timeout_ids.add(id(req))
+            attempt = self._attempt.get(req.rid, 0)
+            if attempt < res.max_retries:
+                self._attempt[req.rid] = attempt + 1
+                self.retries += 1
+                retry = Request(rid=req.rid, tokens=req.tokens,
+                                max_new_tokens=req.max_new_tokens)
+                if self.route(retry) >= 0:
+                    retried = True
+            else:
+                self.timeouts.append(req)
+        self._res_pending = still
+        return retried

@@ -1,0 +1,311 @@
+"""Resilience plane (DESIGN.md §14): fault injection, client-side
+timeout/retry/breaker semantics, the serial/compiled parity through the
+fault windows, and the serving-router mirror.
+
+The registry-wide gate in ``tests/test_simcore.py`` already pins
+compiled == serial for every registered resilience scenario on the
+shrunken horizon; the crossing tests here compress the fault windows so
+window START and END both land inside the run.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import make_policy
+from repro.core.campaign import SUMMARY_STATS, run_scenario
+from repro.core.resilience import (BreakerBoard, ResilienceConfig,
+                                   backoff_delay)
+from repro.core.rng import rng_seed, rng_stream
+from repro.core.simulator import (SimConfig, SimStepper, _build_cluster,
+                                  run_sim)
+
+SMALL = dict(seeds=(0, 1, 2), n_trials=3, n_requests=80)
+STATS = SUMMARY_STATS + ("hedged",)
+
+
+def assert_parity(compiled, serial, label, rtol=1e-5):
+    for pol in serial:
+        for k in STATS:
+            a = np.asarray(compiled[pol].per_seed[k], float)
+            b = np.asarray(serial[pol].per_seed[k], float)
+            both_nan = np.isnan(a) & np.isnan(b)
+            np.testing.assert_allclose(
+                np.where(both_nan, 0.0, a), np.where(both_nan, 0.0, b),
+                rtol=rtol, atol=1e-7, err_msg=f"{label}/{pol}/{k}")
+
+
+# ----------------------------------------------------------------------
+# config validation
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ResilienceConfig(max_retries=2)            # retries need a timeout
+    with pytest.raises(ValueError):
+        ResilienceConfig(breaker_threshold=3)      # breaker needs a timeout
+    with pytest.raises(ValueError):
+        ResilienceConfig(timeout_s=-1.0)
+    with pytest.raises(ValueError):
+        ResilienceConfig(gray=(10.0, 5.0, 0.5))    # slow_factor < 1
+    with pytest.raises(ValueError):
+        ResilienceConfig(outage_group=(10.0, 0.0, 2))
+    cfg = ResilienceConfig(timeout_s=5.0, max_retries=2)
+    assert cfg.client_side and not cfg.has_faults
+
+
+def test_hedge_and_client_resilience_are_exclusive():
+    cfg = SimConfig(n_requests=10, hedge_factor=1.5,
+                    resilience=ResilienceConfig(timeout_s=5.0))
+    with pytest.raises(ValueError):
+        _build_cluster(cfg)
+
+
+# ----------------------------------------------------------------------
+# breaker FSM: closed -> open -> half-open -> (re-close | re-trip)
+def test_breaker_fsm_full_cycle():
+    b = BreakerBoard(n_replicas=2, threshold=2, cooldown_s=5.0,
+                     timeout_s=1.0)
+    t0 = np.array([10.0])
+    pick = np.array([0])
+    yes, no = np.array([True]), np.array([False])
+    # one timeout: below threshold, still closed
+    b.record(t0, pick, success=no, timeout=yes)
+    assert not b.open_mask(t0).any() and b.trips == 0
+    # second consecutive timeout: trips, open until t+timeout+cooldown
+    b.record(t0, pick, success=no, timeout=yes)
+    assert b.trips == 1
+    assert b.open_mask(np.array([15.9]))[0, 0]          # still open
+    assert not b.open_mask(np.array([15.9]))[0, 1]      # replica 1 untouched
+    # half-open at t >= open_until: routable again (the probe)
+    assert not b.open_mask(np.array([16.0])).any()
+    # a half-open SUCCESS re-closes and resets the counter
+    b.record(np.array([16.0]), pick, success=yes, timeout=no)
+    assert not b.tripped[0, 0] and b.fail[0, 0] == 0
+    # climbing back to the threshold trips again...
+    b.record(np.array([20.0]), pick, success=no, timeout=yes)
+    b.record(np.array([20.0]), pick, success=no, timeout=yes)
+    assert b.trips == 2
+    # ...and a half-open TIMEOUT re-trips on a single failure
+    b.record(np.array([26.0]), pick, success=no, timeout=yes)
+    assert b.trips == 3
+    assert b.open_mask(np.array([31.9]))[0, 0]
+    # no-dispatch attempts (both masks False) never touch breaker state
+    fail_before = b.fail.copy()
+    b.record(np.array([40.0]), pick, success=no, timeout=no)
+    assert (b.fail == fail_before).all()
+
+
+# ----------------------------------------------------------------------
+# retry/backoff bounds under fuzzed knobs
+def test_backoff_bounds_fuzzed():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        base = float(rng.uniform(0.01, 3.0))
+        mult = float(rng.uniform(1.0, 4.0))
+        jit = float(rng.uniform(0.0, 1.0))
+        res = ResilienceConfig(timeout_s=5.0, max_retries=4,
+                               backoff_base_s=base, backoff_mult=mult,
+                               backoff_jitter=jit)
+        for attempt in range(4):
+            u = rng.random(16)
+            d = backoff_delay(res, attempt, u)
+            lo = base * mult ** attempt
+            assert (d >= lo - 1e-12).all()
+            assert (d <= lo * (1.0 + jit) + 1e-12).all()
+
+
+def _res_cfg(**kw):
+    base = dict(n_nodes=4, n_replicas_per_app=4, n_trials=4,
+                n_requests=120, arrival_rate=3.0, accuracy=0.85, seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_attempt_count_bounded_by_retry_budget():
+    # without a breaker every request dispatches at least one attempt
+    res = ResilienceConfig(timeout_s=4.0, max_retries=2, backoff_base_s=0.2)
+    out = run_sim(_res_cfg(arrival_rate=6.0, resilience=res), "least_conn")
+    per_req = out["attempts_per_req"]
+    assert (per_req >= 1.0 - 1e-12).all()
+    assert (per_req <= 1 + res.max_retries + 1e-12).all()
+    # with breakers, open boards fail fast: attempts can drop BELOW one
+    # per request (the whole point), but never exceed the budget
+    res_b = ResilienceConfig(timeout_s=4.0, max_retries=2,
+                             backoff_base_s=0.2, breaker_threshold=3)
+    out_b = run_sim(_res_cfg(arrival_rate=6.0, resilience=res_b),
+                    "least_conn")
+    per_req_b = out_b["attempts_per_req"]
+    assert (per_req_b <= 1 + res_b.max_retries + 1e-12).all()
+    assert per_req_b.mean() < per_req.mean()    # fail-fast saves dispatches
+    out = out_b
+    # timed-out requests: no serving replica, NaN response
+    assert out["n_timeouts"] > 0
+    tout = out["chosen"] == -1
+    assert np.isnan(out["rtts"][tout]).all()
+    assert np.isfinite(out["rtts"][~tout]).all()
+
+
+# ----------------------------------------------------------------------
+# property: a correlated-outage group serves nothing inside its window
+def test_outage_window_non_service():
+    g0, gdur = 8.0, 10.0
+    res = ResilienceConfig(outage_group=(g0, gdur, 2))
+    cfg = _res_cfg(n_nodes=6, n_replicas_per_app=6, n_requests=150,
+                   resilience=res)
+    cluster = _build_cluster(cfg)
+    pol = make_policy("least_conn", seed=rng_seed(cfg.seed, "policy"))
+    out = SimStepper(cluster, pol).run()
+    assert cluster.group_rep.sum(axis=1).min() >= 2   # >= 2 replicas down
+    t, chosen, rtts = out["req_t"], out["chosen"], out["rtts"]
+    in_win = (t >= g0) & (t < g0 + gdur)
+    assert in_win.any()
+    for tr in range(cfg.n_trials):
+        on_group = cluster.group_rep[tr][chosen[tr]] & in_win
+        if not on_group.any():
+            continue
+        # a downed replica cannot START serving before the window ends:
+        # every in-window request routed onto the group finishes after it
+        finish = t[on_group] + rtts[tr][on_group]
+        assert (finish >= g0 + gdur - 1e-9).all()
+
+
+# ----------------------------------------------------------------------
+# all-timeout slices keep NaN-safe stats (no RuntimeWarning escapes)
+def test_all_timeout_slice_nan_stats():
+    res = ResilienceConfig(timeout_s=1e-3, max_retries=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        out = run_sim(_res_cfg(n_requests=40, resilience=res), "random")
+    np.testing.assert_allclose(out["timeout_rate"], 1.0)
+    np.testing.assert_allclose(out["goodput"], 0.0)
+    assert np.isnan(out["mean_rtt"]).all()
+    assert np.isnan(out["p99_rtt"]).all()
+    assert (out["chosen"] == -1).all()
+    # the work still happened: dispatched attempts burn busy-seconds
+    assert (out["busy_s"] > 0).all()
+    assert (out["wasted_work_s"] > 0).all()
+
+
+# ----------------------------------------------------------------------
+# rng streams: legacy identities pinned, new streams collision-free
+def test_rng_legacy_stream_mapping():
+    assert rng_seed(5, "topology") == 5
+    assert rng_seed(5, "noise") == 6
+    assert rng_seed(5, "policy") == 7
+    assert rng_seed(5, "churn") == 8
+    assert rng_seed(5, "arrival") == (17, 5)
+    assert rng_seed(5, "preempt") == (37, 5)
+    # new hashed streams are tuples clear of the legacy salts
+    fault = rng_seed(5, "fault")
+    assert isinstance(fault, tuple) and fault[1] == 5
+    assert fault[0] not in (17, 29, 31, 37)
+    a = rng_stream(0, "fault").random(8)
+    b = rng_stream(0, "noise").random(8)
+    assert not np.allclose(a, b)
+
+
+# ----------------------------------------------------------------------
+# compiled-vs-serial parity THROUGH the fault windows (start and end
+# both inside the horizon); the registry-wide test in test_simcore.py
+# covers the registered window placement
+_CROSS = {
+    "gray-failure": ResilienceConfig(gray=(8.0, 12.0, 4.0)),
+    "staleness-storm": ResilienceConfig(staleness=(8.0, 10.0)),
+    "correlated-outage": ResilienceConfig(
+        timeout_s=10.0, max_retries=2, backoff_base_s=0.5,
+        breaker_threshold=3, breaker_cooldown_s=5.0,
+        outage_group=(8.0, 8.0, 4)),
+    "retry-storm": ResilienceConfig(
+        timeout_s=6.0, max_retries=3, backoff_base_s=0.5,
+        backoff_mult=2.0, backoff_jitter=0.5),
+    "breaker-saves-retry-storm": ResilienceConfig(
+        timeout_s=6.0, max_retries=3, backoff_base_s=0.5,
+        breaker_threshold=3, breaker_cooldown_s=5.0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_CROSS))
+def test_fault_crossing_compiled_matches_serial(name):
+    kw = dict(arrival_process="poisson", arrival_params=(),
+              arrival_rate=2.5, resilience=_CROSS[name], **SMALL)
+    serial = run_scenario(name, backend="serial", **kw)
+    compiled = run_scenario(name, backend="auto", **kw)
+    assert_parity(compiled, serial, name)
+
+
+# ----------------------------------------------------------------------
+# serving-router mirror (T=1): breaker masking, retry re-entry, and the
+# tracker-hygiene rule
+@pytest.fixture(scope="module")
+def tiny_setup():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    cfg = get_config("deepseek-67b", smoke=True).resolve(tp=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _router(tiny_setup, slowdowns, res, policy="round_robin"):
+    from repro.monitoring.metrics import SimClock
+    from repro.serving.engine import ServingEngine
+    from repro.serving.router import MorpheusRouter
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock, slowdown=s)
+            for i, s in enumerate(slowdowns)]
+    return MorpheusRouter(reps, policy=policy, resilience=res)
+
+
+def _req(rid, rng):
+    from repro.serving.engine import Request
+    return Request(rid=rid, tokens=rng.integers(0, 100, size=8),
+                   max_new_tokens=4)
+
+
+def test_router_retries_and_breaker_mask(tiny_setup):
+    rng = np.random.default_rng(0)
+    res = ResilienceConfig(timeout_s=2.0, max_retries=2,
+                           breaker_threshold=1, breaker_cooldown_s=1e3)
+    r = _router(tiny_setup, [0.0, 5.0], res)
+    for i in range(4):
+        r.route(_req(i, rng))
+    finished = r.drain()
+    # the slow replica blows the timeout -> retries re-enter route(),
+    # the breaker trips, and every finished request beat the deadline
+    assert r.retries > 0 and r.breaker.trips >= 1
+    assert all(f.rtt <= res.timeout_s for f in finished)
+    # while OPEN the slow replica leaves candidate scoring entirely
+    before = len(r.routed)
+    for i in range(10, 14):
+        r.route(_req(i, rng))
+    assert all(j == 0 for j in r.routed[before:])
+
+
+def test_router_exhausted_retries_land_in_timeouts(tiny_setup):
+    rng = np.random.default_rng(1)
+    res = ResilienceConfig(timeout_s=0.5, max_retries=1)
+    r = _router(tiny_setup, [5.0], res)
+    r.route(_req(0, rng))
+    finished = r.drain()
+    assert finished == []                 # both attempts blew the deadline
+    assert len(r.timeouts) == 1 and r.retries == 1
+
+
+def test_router_timed_out_requests_skip_accuracy_tracker(tiny_setup):
+    rng = np.random.default_rng(2)
+    res = ResilienceConfig(timeout_s=0.5, max_retries=0)
+    r = _router(tiny_setup, [5.0], res, policy="perf_aware")
+    r.route(_req(0, rng))
+    r.drain()
+    # the blown deadline says nothing about prediction quality: the
+    # rolling-accuracy tracker never sees the request
+    assert r.accuracy.count.sum() == 0
+    assert len(r.timeouts) == 1
+
+
+def test_router_hedge_resilience_ban():
+    from repro.serving.router import MorpheusRouter
+    with pytest.raises(ValueError):
+        MorpheusRouter([], hedge_factor=1.5,
+                       resilience=ResilienceConfig(timeout_s=5.0))
