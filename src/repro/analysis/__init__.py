@@ -1,0 +1,19 @@
+"""Static contract linter for the dual-backend simulator core.
+
+Three rule families (DESIGN.md §15): parity contracts
+(:mod:`~repro.analysis.contracts`), kernel purity / recompile audit
+(:mod:`~repro.analysis.jaxpr_audit`), and the rng-stream audit
+(:mod:`~repro.analysis.rng_audit`).  Run via ``python -m repro.analysis``;
+CI gates on the exit status (non-baselined error findings fail).
+"""
+from repro.analysis.baseline import (BaselineEntry, MatchResult,
+                                     load_baseline, match)
+from repro.analysis.findings import ERROR, INFO, SEVERITIES, WARNING, Finding
+from repro.analysis.registry import (RULES, AnalysisContext, Rule,
+                                     load_rules, rule, run_rules)
+
+__all__ = [
+    "AnalysisContext", "BaselineEntry", "ERROR", "Finding", "INFO",
+    "MatchResult", "RULES", "Rule", "SEVERITIES", "WARNING",
+    "load_baseline", "load_rules", "match", "rule", "run_rules",
+]

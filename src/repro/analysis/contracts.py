@@ -1,0 +1,245 @@
+"""Parity contracts: every config knob must reach both backends.
+
+The dual-backend core lowers one semantics twice — the serial
+``SimStepper`` and the compiled ``lax.scan`` kernel — and the scenario
+parity gate only catches a divergence *dynamically*, if some registered
+scenario happens to exercise the knob.  This rule family closes the
+static side: AST-extract every dataclass field of ``SimConfig``,
+``CapacityConfig`` and ``ResilienceConfig`` and verify each is read by
+both the serial path and the compiled path (or is explicitly declared
+serial-only in :data:`SERIAL_ONLY` with a justification).
+
+Read extraction is a deliberate over-approximation: any ``<expr>.field``
+load of a matching attribute name inside a scope counts as a read of
+that config field, regardless of the receiver's type.  That keeps the
+pass dependency-free and immune to aliasing (``cfg``, ``self.cfg``,
+``cluster.cfg``, ``st.capacity``...), at the cost of missing a
+violation only when an *unrelated* object in the same scope happens to
+share the field name — acceptable for this codebase, where config field
+names are distinctive.  Reads inside the config class's own body
+(properties, ``__post_init__``) are classified *shared*: both backends
+call those properties, so property-mediated fields count as covered.
+
+Scopes: each analyzed module carries a default scope plus per-symbol
+overrides.  ``shared`` helpers (``_build_cluster``,
+``membership_timeline``, the ``_Metrics`` summary...) are imported by
+``simcore`` and therefore satisfy both sides at once.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.analysis.findings import ERROR, Finding
+from repro.analysis.registry import AnalysisContext, rule
+
+SHARED, SERIAL, COMPILED = "shared", "serial", "compiled"
+
+
+@dataclass(frozen=True)
+class ModuleScope:
+    """One analyzed module: default scope + per-top-level-symbol
+    overrides (function or class name -> scope)."""
+    path: str
+    default: str
+    overrides: Mapping[str, str] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class ContractSpec:
+    """Everything the parity rule needs, injectable for fixture tests."""
+    config_classes: Mapping[str, str]        # class name -> module path
+    scopes: Tuple[ModuleScope, ...]
+    serial_only: Mapping[str, str] = field(default_factory=dict)
+    # ScenarioSpec mapping rule inputs (None disables that rule)
+    scenario_module: Optional[str] = None
+    scenario_class: str = "ScenarioSpec"
+    scenario_target: str = "SimConfig"   # the config compile() maps onto
+    scenario_extra: Tuple[str, ...] = ("name", "description")
+
+
+#: Fields allowed to be serial-only, with a justification each
+#: (mirrors ``supports()``: the kernel currently rejects nothing by
+#: config, so this is empty — an entry here must also be rejected by
+#: ``supports()`` or documented in DESIGN.md §15).
+SERIAL_ONLY: Dict[str, str] = {}
+
+DEFAULT_SPEC = ContractSpec(
+    config_classes={
+        "SimConfig": "src/repro/core/simulator.py",
+        "CapacityConfig": "src/repro/core/capacity.py",
+        "ResilienceConfig": "src/repro/core/resilience.py",
+    },
+    scopes=(
+        ModuleScope("src/repro/core/simulator.py", SERIAL, {
+            # helpers simcore imports — one read here covers both sides
+            "_build_cluster": SHARED, "_arrival_times": SHARED,
+            "_rate_factor": SHARED, "_interference_matrix": SHARED,
+            "_apply_interference_profile": SHARED, "_Cluster": SHARED,
+            "_AppPrep": SHARED, "_Metrics": SHARED,
+            # the config class body itself (properties) is shared
+            "SimConfig": SHARED,
+        }),
+        ModuleScope("src/repro/core/capacity.py", SERIAL, {
+            "membership_timeline": SHARED, "MembershipEvent": SHARED,
+            "CapacityConfig": SHARED,
+        }),
+        ModuleScope("src/repro/core/resilience.py", SERIAL, {
+            "ResilienceConfig": SHARED,
+        }),
+        ModuleScope("src/repro/core/online.py", SERIAL, {}),
+        ModuleScope("src/repro/core/simcore.py", COMPILED, {}),
+    ),
+    serial_only=SERIAL_ONLY,
+    scenario_module="src/repro/core/scenarios.py",
+)
+
+
+def dataclass_fields(tree: ast.Module, class_name: str) -> List[str]:
+    """Annotated field names of a (data)class, in declaration order.
+    Underscore-prefixed and ClassVar annotations are skipped."""
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            out = []
+            for stmt in node.body:
+                if not isinstance(stmt, ast.AnnAssign):
+                    continue
+                if not isinstance(stmt.target, ast.Name):
+                    continue
+                name = stmt.target.id
+                if name.startswith("_"):
+                    continue
+                ann = ast.unparse(stmt.annotation)
+                if "ClassVar" in ann:
+                    continue
+                out.append(name)
+            return out
+    raise KeyError(f"class {class_name} not found")
+
+
+def _attr_loads(node: ast.AST) -> List[Tuple[str, int]]:
+    """All ``<expr>.attr`` loads under ``node`` as (attr, line)."""
+    return [(n.attr, n.lineno) for n in ast.walk(node)
+            if isinstance(n, ast.Attribute)
+            and isinstance(n.ctx, ast.Load)]
+
+
+def collect_reads(ctx: AnalysisContext, scopes: Sequence[ModuleScope],
+                  ) -> Dict[str, Dict[str, List[Tuple[str, int]]]]:
+    """field name -> scope -> [(path, line), ...] over all modules."""
+    reads: Dict[str, Dict[str, List[Tuple[str, int]]]] = {}
+
+    def record(attr: str, scope: str, path: str, line: int):
+        reads.setdefault(attr, {}).setdefault(scope, []).append((path, line))
+
+    for ms in scopes:
+        tree = ctx.parse(ms.path)
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                scope = ms.overrides.get(node.name, ms.default)
+            else:
+                scope = ms.default
+            for attr, line in _attr_loads(node):
+                record(attr, scope, ms.path, line)
+    return reads
+
+
+def field_coverage(ctx: Optional[AnalysisContext] = None,
+                   spec: ContractSpec = DEFAULT_SPEC,
+                   ) -> Dict[str, Dict[str, List[Tuple[str, int]]]]:
+    """Coverage map ``"Config.field" -> {scope: [(path, line), ...]}``
+    for every contract field — the tested surface behind the rule."""
+    ctx = ctx or AnalysisContext()
+    reads = collect_reads(ctx, spec.scopes)
+    out: Dict[str, Dict[str, List[Tuple[str, int]]]] = {}
+    for cls, mod in spec.config_classes.items():
+        for f in dataclass_fields(ctx.parse(mod), cls):
+            out[f"{cls}.{f}"] = reads.get(f, {})
+    return out
+
+
+def analyze_contracts(ctx: Optional[AnalysisContext] = None,
+                      spec: ContractSpec = DEFAULT_SPEC) -> List[Finding]:
+    """The parity-read-coverage rule body (spec-injectable for tests)."""
+    ctx = ctx or AnalysisContext()
+    cov = field_coverage(ctx, spec)
+    findings: List[Finding] = []
+    for qual, by_scope in cov.items():
+        cls, fname = qual.split(".", 1)
+        mod = spec.config_classes[cls]
+        serial_ok = bool(by_scope.get(SHARED) or by_scope.get(SERIAL))
+        compiled_ok = bool(by_scope.get(SHARED) or by_scope.get(COMPILED))
+        if serial_ok and compiled_ok:
+            continue
+        if not serial_ok and not compiled_ok:
+            findings.append(Finding(
+                "parity-read-coverage", ERROR, mod, qual,
+                f"config field {qual} is never read by either backend — "
+                "dead knob or the read lives outside the analyzed scopes"))
+        elif not compiled_ok:
+            if qual in spec.serial_only:
+                continue
+            findings.append(Finding(
+                "parity-read-coverage", ERROR, mod, qual,
+                f"config field {qual} is read by the serial path only; "
+                "lower it in core/simcore.py or declare it serial-only "
+                "(contracts.SERIAL_ONLY + a supports() rejection)"))
+        else:
+            findings.append(Finding(
+                "parity-read-coverage", ERROR, mod, qual,
+                f"config field {qual} is read by the compiled path only; "
+                "the serial stepper silently ignores it"))
+    # serial-only declarations must name real fields (typo guard)
+    for qual in spec.serial_only:
+        if qual not in cov:
+            findings.append(Finding(
+                "parity-read-coverage", ERROR, "", qual,
+                f"SERIAL_ONLY entry {qual} names no known config field"))
+    return findings
+
+
+def analyze_scenario_mapping(ctx: Optional[AnalysisContext] = None,
+                             spec: ContractSpec = DEFAULT_SPEC,
+                             ) -> List[Finding]:
+    """ScenarioSpec -> SimConfig mapping rule body.
+
+    ``ScenarioSpec.compile`` copies exactly the fields whose names
+    intersect ``fields(SimConfig)`` — a ScenarioSpec field that is not a
+    SimConfig field (and not in the declared extras) is a knob that
+    compiles to *nothing*, silently."""
+    ctx = ctx or AnalysisContext()
+    if spec.scenario_module is None:
+        return []
+    sim_mod = spec.config_classes[spec.scenario_target]
+    sim_fields = set(dataclass_fields(ctx.parse(sim_mod),
+                                      spec.scenario_target))
+    findings: List[Finding] = []
+    scen_fields = dataclass_fields(ctx.parse(spec.scenario_module),
+                                   spec.scenario_class)
+    for f in scen_fields:
+        if f in sim_fields or f in spec.scenario_extra:
+            continue
+        findings.append(Finding(
+            "scenario-field-mapping", ERROR, spec.scenario_module,
+            f"{spec.scenario_class}.{f}",
+            f"{spec.scenario_class}.{f} is not a "
+            f"{spec.scenario_target} field — "
+            "compile() drops it silently; rename it, add the SimConfig "
+            "field, or declare it in the spec's scenario_extra"))
+    return findings
+
+
+@rule("parity-read-coverage", "contracts",
+      "every SimConfig/CapacityConfig/ResilienceConfig field is read by "
+      "both backends or declared serial-only")
+def _parity_rule(ctx: AnalysisContext) -> List[Finding]:
+    return analyze_contracts(ctx)
+
+
+@rule("scenario-field-mapping", "contracts",
+      "every ScenarioSpec field maps onto a SimConfig field (compile() "
+      "drops unknown names silently)")
+def _scenario_rule(ctx: AnalysisContext) -> List[Finding]:
+    return analyze_scenario_mapping(ctx)

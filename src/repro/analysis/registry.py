@@ -1,0 +1,92 @@
+"""Rules registry + analysis context.
+
+Rules are plain functions ``fn(ctx) -> List[Finding]`` registered with
+the :func:`rule` decorator.  The CLI runs every registered rule (or a
+``--rules`` subset) against one :class:`AnalysisContext`, which pins the
+repo root and caches parsed ASTs so the three rule families share one
+pass over the source tree.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+from repro.analysis.findings import Finding
+
+#: Rule families (one per ISSUE tentpole bullet).
+FAMILIES = ("contracts", "rng", "jaxpr")
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    family: str
+    description: str
+    fn: Callable[["AnalysisContext"], List[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(name: str, family: str, description: str):
+    """Register an analysis rule.  Names are unique; re-registration is
+    an error (it would silently shadow a rule in the CLI)."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown rule family {family!r}")
+
+    def deco(fn):
+        if name in RULES:
+            raise ValueError(f"duplicate rule {name!r}")
+        RULES[name] = Rule(name, family, fn.__doc__ or description, fn)
+        return fn
+    return deco
+
+
+def _default_root() -> Path:
+    # src/repro/analysis/registry.py -> repo root is three levels up
+    return Path(__file__).resolve().parents[3]
+
+
+@dataclass
+class AnalysisContext:
+    """Repo root + per-run AST cache handed to every rule."""
+    root: Path = field(default_factory=_default_root)
+    _asts: Dict[str, ast.Module] = field(default_factory=dict)
+    #: scratch shared across rules in one run (e.g. the jaxpr audit
+    #: traces once and both kernel rules filter from it)
+    cache: Dict[str, object] = field(default_factory=dict)
+
+    def path(self, rel: str) -> Path:
+        return self.root / rel
+
+    def parse(self, rel: str) -> ast.Module:
+        if rel not in self._asts:
+            src = (self.root / rel).read_text()
+            self._asts[rel] = ast.parse(src, filename=rel)
+        return self._asts[rel]
+
+
+def load_rules() -> Dict[str, Rule]:
+    """Import the rule modules (registration is an import side effect)
+    and return the registry."""
+    from repro.analysis import contracts, jaxpr_audit, rng_audit  # noqa: F401
+    return RULES
+
+
+def run_rules(ctx: Optional[AnalysisContext] = None,
+              names: Optional[List[str]] = None) -> List[Finding]:
+    """Run the named rules (default: all) and return sorted findings."""
+    registry = load_rules()
+    ctx = ctx or AnalysisContext()
+    if names is None:
+        names = sorted(registry)
+    unknown = [n for n in names if n not in registry]
+    if unknown:
+        raise KeyError(f"unknown rules: {unknown}; "
+                       f"available: {sorted(registry)}")
+    out: List[Finding] = []
+    for n in names:
+        out.extend(registry[n].fn(ctx))
+    return sorted(out)

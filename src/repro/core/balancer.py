@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
+from repro.core.rng import rng_from_key
+
 # Idle replicas always beat busy ones for the reactive policies; the
 # penalty dominates any realistic wait (seconds) or synthetic score (<C).
 # Public: the compiled scan core (repro.core.simcore) must reproduce the
@@ -200,9 +202,12 @@ class RandomChoice(Policy):
     def __init__(self, seed: int = 0,
                  seed_blocks: Optional[Sequence[Tuple[int, int]]] = None):
         super().__init__(seed)
-        self.rng = np.random.default_rng(seed)
+        # rng_from_key, not a named stream: run_sim hands us the
+        # "policy" stream identity and each seed_block replays a serial
+        # run's stream bit-for-bit — the key is pinned by the caller
+        self.rng = rng_from_key(seed)
         self._blocks = None if seed_blocks is None else \
-            [(np.random.default_rng(s), int(n)) for s, n in seed_blocks]
+            [(rng_from_key(s), int(n)) for s, n in seed_blocks]
 
     def score(self, state):
         T, C = state.shape

@@ -12,6 +12,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.rng import rng_stream
+
 
 def freedman_diaconis_bins(values: np.ndarray):
     """Eq. 1–2: bin width h = 2*IQR/N^(1/3); returns (n_bins, edges)."""
@@ -42,7 +44,7 @@ class BalancedDataset:
     n_dropped: int = 0
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+        self._rng = rng_stream(self.seed, "binning-balance")
 
     def __len__(self):
         return len(self.rtts)

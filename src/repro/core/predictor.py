@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import correlate, selection, zoo
 from repro.core.binning import BalancedDataset
+from repro.core.rng import rng_stream
 from repro.core.features import (drop_redundant, extract_features,
                                  select_feature_per_metric)
 from repro.monitoring.metrics import MetricsStore, SimClock
@@ -43,7 +44,7 @@ def confirm_enough_samples(rtts: np.ndarray, r: float = CONFIRM_R,
     rtts = np.asarray(rtts, np.float64)
     if len(rtts) < 20:
         return False
-    rng = np.random.default_rng(seed)
+    rng = rng_stream(seed, "confirm-bootstrap")
     meds = np.median(
         rtts[rng.integers(0, len(rtts), size=(n_boot, len(rtts)))], axis=1)
     lo, hi = np.quantile(meds, [(1 - alpha) / 2, 1 - (1 - alpha) / 2])

@@ -52,3 +52,31 @@ def rng_seed(seed: int, name: str) -> Union[int, tuple]:
 def rng_stream(seed: int, name: str) -> np.random.Generator:
     """A fresh ``Generator`` on the named stream."""
     return np.random.default_rng(rng_seed(seed, name))
+
+
+def rng_from_key(key) -> np.random.Generator:
+    """A ``Generator`` from an externally pinned key — the sanctioned
+    escape hatch for callers that must replay a stream whose identity
+    is fixed elsewhere (the campaign's RandomChoice ``seed_blocks``:
+    block *i* must draw exactly what a serial run under ``seed_i``
+    would, DESIGN.md §10).  Centralised here so the rng-stream linter
+    (``repro.analysis.rng_audit``) can forbid raw ``default_rng``
+    construction everywhere else in ``core/``."""
+    return np.random.default_rng(key)
+
+
+def rng_key(seed: int, name: str):
+    """A jax PRNG key on the named stream (lazy jax import — numpy-only
+    consumers of this module never pay for it).
+
+    Hashed names fold their salt into the key so two named key streams
+    relate exactly like two named ``Generator`` streams: distinct names
+    -> statistically independent keys under every base seed.
+    """
+    import jax
+
+    ident = rng_seed(seed, name)
+    if isinstance(ident, tuple):
+        salt, base = ident
+        return jax.random.fold_in(jax.random.PRNGKey(base), salt)
+    return jax.random.PRNGKey(ident)

@@ -13,6 +13,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import zoo
+from repro.core.rng import rng_stream
 
 WINDOWS_S = (1.0, 5.0, 20.0, 60.0)    # paper's observation windows
 TAU_PREPARE = 0.09                     # ≤ 9% of mean RTT (Eq. 4)
@@ -93,7 +94,7 @@ def select_model(candidates: Sequence[str],
     X_feat: (n, F) features; X_seq: (n, k, w) raw windows (or None); y: (n,).
     """
     n = len(y)
-    rng = np.random.default_rng(seed)
+    rng = rng_stream(seed, "model-split")
     perm = rng.permutation(n)
     n_tr = int(splits[0] * n)
     n_va = int(splits[1] * n)

@@ -80,7 +80,7 @@ except ImportError:             # pragma: no cover - newer jax
 from repro.core.balancer import BUSY_PENALTY, POLICIES
 from repro.core.capacity import CapacityConfig, membership_timeline
 from repro.core.resilience import ResilienceConfig
-from repro.core.rng import rng_seed
+from repro.core.rng import rng_from_key, rng_key, rng_seed, rng_stream
 from repro.core.simulator import SimConfig, _build_cluster, _Cluster, _Metrics
 from repro.monitoring.metrics import PeriodicRefresh
 
@@ -275,8 +275,8 @@ def _policy_draws(J: int, T: int, K: int, seed: int,
     """(J, T, K) RandomChoice draws, bit-identical to J sequential
     ``rng.random((T, K))`` calls (PCG64 fills row-major)."""
     if seed_blocks is None:
-        return np.random.default_rng(seed).random((J, T, K))
-    parts = [np.random.default_rng(s).random((J, int(n), K))
+        return rng_from_key(seed).random((J, T, K))
+    parts = [rng_from_key(s).random((J, int(n), K))
              for s, n in seed_blocks]
     return np.concatenate(parts, axis=1)
 
@@ -1930,7 +1930,7 @@ def fleet_throughput(n_requests: int = 1_000_000, n_nodes: int = 250,
     from dataclasses import replace as _dc_replace
     st = _dc_replace(_static_for(cfg, policy), native_noise=True)
 
-    rng = np.random.default_rng(seed)
+    rng = rng_stream(seed, "fleet-demo")
     T, A, K, N = n_trials, n_apps, n_replicas_per_app, n_nodes
     R = A * K
     mean_rtt = np.array([APPS[a][0] for a in apps])
@@ -1957,7 +1957,7 @@ def fleet_throughput(n_requests: int = 1_000_000, n_nodes: int = 250,
               "imat_pre": irow,
               "speed_pre": speed, "cand_node": cand_node,
               "log_rbar_pre": log_rbar, "mean_rtt": mean_rtt,
-              "key": jax.random.PRNGKey(seed)}
+              "key": rng_key(seed, "fleet-demo-noise")}
     xs = {"j": np.arange(n_requests, dtype=np.int32), "app": req_app,
           "t": req_t}
     carry0 = {"busy": np.zeros((T, R))}

@@ -18,6 +18,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.rng import rng_stream
 from repro.monitoring.metrics import SCRAPE_INTERVAL, MetricsStore, SimClock
 
 
@@ -64,7 +65,7 @@ class NodeWorkload:
         self.node_factor = node_factor
         self.clock = clock or SimClock()
         self.store = store or MetricsStore(clock=self.clock)
-        self.rng = np.random.default_rng(seed)
+        self.rng = rng_stream(seed, "node-workload")
         self.n_noise = n_noise_metrics
         # per app-instance state
         self.instances: List[Tuple[AppSpec, dict]] = []

@@ -1,0 +1,9 @@
+"""Analysis-linter fixture: the compiled backend.
+
+Reads ``beta`` directly and ``alpha`` via the shared helper's coverage;
+``gamma`` is intentionally unread here — the parity rule must flag it.
+"""
+
+
+def compiled_run(cfg):
+    return cfg.alpha * cfg.beta

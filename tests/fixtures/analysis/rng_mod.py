@@ -1,0 +1,24 @@
+"""Analysis-linter fixture: seeded rng-audit violations.
+
+``raw_site`` is the one raw-constructor violation; ``colliding`` uses
+two stream names whose crc32 salts coincide (found by brute force —
+the uniqueness rule must prove the collision, not pattern-match the
+names); ``dynamic`` passes a non-literal name (warning only).
+"""
+import numpy as np
+
+from repro.core.rng import rng_stream
+
+
+def raw_site():
+    return np.random.default_rng(0)
+
+
+def colliding(seed):
+    a = rng_stream(seed, "gauge-probe-8")
+    b = rng_stream(seed, "wedge-wedge-96")   # same crc32 salt as above
+    return a, b
+
+
+def dynamic(seed, name):
+    return rng_stream(seed, name)

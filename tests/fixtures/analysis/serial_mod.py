@@ -1,0 +1,33 @@
+"""Analysis-linter fixture: config definitions + the serial backend.
+
+One seeded violation per contracts rule lives across this module and
+``compiled_mod.py``: ``MiniConfig.gamma`` is read by the serial path
+only (parity-read-coverage), and ``MiniSpec.extra_knob`` names no
+MiniConfig field (scenario-field-mapping).  Everything else is covered
+so each rule fires exactly once.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MiniConfig:
+    alpha: float = 1.0
+    beta: int = 2
+    gamma: bool = False       # serial-only read — the seeded violation
+
+
+@dataclass(frozen=True)
+class MiniSpec:
+    name: str = ""
+    description: str = ""
+    alpha: float = 1.0
+    extra_knob: float = 0.0   # not a MiniConfig field — compile() drops it
+
+
+def shared_prep(cfg):
+    """Shared helper — covers alpha for both backends at once."""
+    return cfg.alpha
+
+
+def serial_run(cfg):
+    return cfg.beta + cfg.gamma + shared_prep(cfg)

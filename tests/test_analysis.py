@@ -1,0 +1,299 @@
+"""Contract-linter suite (DESIGN.md §15).
+
+Three kinds of coverage, mirroring the acceptance bar:
+
+1. fixture tests — one seeded violation per rule family under
+   ``tests/fixtures/analysis/``, each rule fires exactly there;
+2. clean-tree tests — the real tree yields zero gating findings above
+   the committed baseline;
+3. consistency — the static field-coverage map cannot contradict the
+   dynamic ``supports()`` / ``compiled_coverage()`` gates, and deleting
+   a compiled read on a copy of the tree makes the parity rule fire
+   (the regression the rule exists for).
+"""
+import json
+import re
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (AnalysisContext, load_baseline, match,
+                            run_rules)
+from repro.analysis import baseline as bl
+from repro.analysis import contracts as C
+from repro.analysis import jaxpr_audit as J
+from repro.analysis import rng_audit as R
+from repro.analysis.findings import ERROR, WARNING, Finding
+
+REPO = Path(__file__).resolve().parents[1]
+FIX = "tests/fixtures/analysis"
+
+FIXTURE_SPEC = C.ContractSpec(
+    config_classes={"MiniConfig": f"{FIX}/serial_mod.py"},
+    scopes=(
+        C.ModuleScope(f"{FIX}/serial_mod.py", C.SERIAL,
+                      {"shared_prep": C.SHARED, "MiniConfig": C.SHARED,
+                       "MiniSpec": C.SHARED}),
+        C.ModuleScope(f"{FIX}/compiled_mod.py", C.COMPILED, {}),
+    ),
+    scenario_module=f"{FIX}/serial_mod.py",
+    scenario_class="MiniSpec",
+    scenario_target="MiniConfig",
+)
+
+
+def _ctx(root=REPO):
+    return AnalysisContext(root=Path(root))
+
+
+# ---------------------------------------------------------------- fixtures
+
+def test_parity_rule_fires_exactly_on_seeded_field():
+    found = C.analyze_contracts(_ctx(), FIXTURE_SPEC)
+    assert [f.key for f in found] == ["MiniConfig.gamma"]
+    assert found[0].severity == ERROR
+    assert "serial path only" in found[0].message
+
+
+def test_parity_rule_respects_serial_only_allowlist():
+    spec = C.ContractSpec(
+        config_classes=FIXTURE_SPEC.config_classes,
+        scopes=FIXTURE_SPEC.scopes,
+        serial_only={"MiniConfig.gamma": "fixture: declared serial-only"},
+        scenario_module=FIXTURE_SPEC.scenario_module,
+        scenario_class=FIXTURE_SPEC.scenario_class,
+        scenario_target="MiniConfig")
+    assert C.analyze_contracts(_ctx(), spec) == []
+    # ...and a typo'd declaration is itself an error
+    spec2 = C.ContractSpec(
+        config_classes=FIXTURE_SPEC.config_classes,
+        scopes=FIXTURE_SPEC.scopes,
+        serial_only={"MiniConfig.gamma": "ok",
+                     "MiniConfig.no_such_field": "typo"})
+    keys = [f.key for f in C.analyze_contracts(_ctx(), spec2)]
+    assert keys == ["MiniConfig.no_such_field"]
+
+
+def test_scenario_mapping_rule_fires_on_dropped_knob():
+    found = C.analyze_scenario_mapping(_ctx(), FIXTURE_SPEC)
+    assert [f.key for f in found] == ["MiniSpec.extra_knob"]
+    assert "drops it silently" in found[0].message
+
+
+def test_rng_raw_constructor_fires_once_on_fixture():
+    found = R.find_raw_constructors(_ctx(), modules=[f"{FIX}/rng_mod.py"])
+    assert len(found) == 1
+    f = found[0]
+    assert f.key == "raw_site:np.random.default_rng#0"
+    assert f.severity == ERROR
+
+
+def test_rng_uniqueness_proves_crc32_collision():
+    found = R.check_stream_uniqueness(_ctx(), root_rel=FIX)
+    errors = [f for f in found if f.severity == ERROR]
+    warnings = [f for f in found if f.severity == WARNING]
+    assert len(errors) == 1
+    assert "gauge-probe-8" in errors[0].message
+    assert "wedge-wedge-96" in errors[0].message
+    # the non-literal name in dynamic() warns but does not gate
+    assert [w.key for w in warnings] == ["dynamic-name:dynamic"]
+
+
+def test_jaxpr_audit_flags_weak_carry_and_scatter_chain():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from jax import lax
+
+    def weak(c):
+        return lax.scan(lambda c, x: (c + x, c), c, jnp.arange(3.0))
+
+    found = J.audit_jaxpr(jax.make_jaxpr(weak)(0.0), "fx-weak")
+    assert any(f.key == "fx-weak:weak-carry" for f in found)
+
+    def chain(v):
+        def body(c, x):
+            c = c.at[0].set(x).at[1].add(x).at[2].set(2 * x)
+            return c, x
+        return lax.scan(body, v, jnp.arange(4.0))
+
+    v0 = jnp.zeros(8)
+    found = J.audit_jaxpr(jax.make_jaxpr(chain)(v0), "fx-chain",
+                          scatter_budget=2)
+    assert any(f.key == "fx-chain:scatters" for f in found)
+    # and the same kernel passes under a budget that fits it
+    assert J.audit_jaxpr(jax.make_jaxpr(chain)(v0), "fx-chain",
+                         scatter_budget=3) == []
+
+
+def test_jaxpr_audit_flags_host_callback():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+
+    def cb(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct((), jnp.float32), x)
+
+    found = J.audit_jaxpr(jax.make_jaxpr(cb)(jnp.float32(1.0)), "fx-cb")
+    assert any("callback" in f.key for f in found)
+
+
+def test_static_hashability_audit():
+    class Bad:
+        __hash__ = None
+    assert J.audit_static(Bad(), "fx-bad") != []
+    assert J.audit_static((1, 2, "ok"), "fx-ok") == []
+
+
+# ------------------------------------------------------------- clean tree
+
+def test_clean_tree_static_rules_above_baseline():
+    """contracts + rng rules on the real tree: nothing gates."""
+    fast = ["parity-read-coverage", "scenario-field-mapping",
+            "rng-raw-constructor", "rng-stream-uniqueness"]
+    findings = run_rules(_ctx(), fast)
+    entries = [e for e in load_baseline() if e.rule in fast]
+    result = match(findings, entries)
+    gating = [f for f in result.new if f.gating]
+    assert gating == [], [f.render() for f in gating]
+    assert result.stale == [], result.stale
+
+
+@pytest.mark.slow
+def test_clean_tree_jaxpr_rules_above_baseline():
+    """Full kernel audit over every registered variant: nothing gates
+    (the retry-storm unrolls are baselined with measured counts)."""
+    findings = J.audit_kernels()
+    entries = load_baseline()
+    result = match(findings, entries)
+    gating = [f for f in result.new if f.gating]
+    assert gating == [], [f.render() for f in gating]
+
+
+def test_jaxpr_audit_subset_matches_baseline():
+    """Fast smoke: one capacity+resilience scenario exercises the
+    budget rule end-to-end against the committed baseline."""
+    pytest.importorskip("jax")
+    from repro.core.scenarios import scenario_names
+    names = [s for s in scenario_names() if "retry" in s or "storm" in s]
+    if not names:
+        names = list(scenario_names())[:2]
+    findings = J.audit_kernels(scenarios=names)
+    allowed = {e.fingerprint for e in load_baseline()}
+    gating = [f for f in findings
+              if f.gating and f.fingerprint not in allowed]
+    assert gating == [], [f.render() for f in gating]
+
+
+def test_baseline_entries_are_justified_and_loadable():
+    entries = load_baseline()
+    assert entries, "committed baseline should carry the pinned sites"
+    for e in entries:
+        assert len(e.justification.strip()) > 40, e
+
+
+def test_baseline_loader_rejects_empty_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"rule": "r", "path": "p", "key": "k", "justification": "  "}]}))
+    with pytest.raises(ValueError, match="justification"):
+        bl.load_baseline(p)
+
+
+def test_baseline_match_reports_stale_entries():
+    f = Finding("r", ERROR, "p", "k", "m")
+    live = bl.BaselineEntry("r", "p", "k", "pinned")
+    dead = bl.BaselineEntry("r", "p", "gone", "fix landed")
+    result = match([f], [live, dead])
+    assert result.new == [] and result.suppressed == [f]
+    assert result.stale == [dead]
+
+
+# ------------------------------------------------------------ consistency
+
+def test_field_coverage_consistent_with_compiled_coverage():
+    """If the dynamic gate says `backend="auto"` never falls back on the
+    registered grid, then every knob a registered scenario actually sets
+    must be read by the compiled path — otherwise the kernel *claims*
+    support for a config it partly ignores."""
+    from dataclasses import fields
+
+    from repro.core.campaign import compiled_coverage
+    from repro.core.scenarios import get_scenario, scenario_names
+    from repro.core.simulator import SimConfig
+
+    assert compiled_coverage() == []        # the PR 7 gate, restated
+    cov = C.field_coverage(_ctx())
+    default = SimConfig()
+    touched = set()
+    for name in scenario_names():
+        cfg = get_scenario(name).compile()
+        for f in fields(SimConfig):
+            if getattr(cfg, f.name) != getattr(default, f.name):
+                touched.add(f.name)
+    for fname in sorted(touched):
+        qual = f"SimConfig.{fname}"
+        by_scope = cov[qual]
+        assert by_scope.get(C.SHARED) or by_scope.get(C.COMPILED), \
+            f"{qual} is set by a registered scenario but never read by " \
+            "the compiled path, yet supports() accepts it"
+        assert qual not in C.SERIAL_ONLY, \
+            f"{qual} is declared serial-only but supports() accepts it"
+
+
+def test_deleting_a_compiled_read_trips_the_parity_rule(tmp_path):
+    """Regression for the rule's reason to exist: on a copy of the tree
+    with simcore's ``retrain_every_s`` reads renamed away, the parity
+    rule must fire for exactly that field (the real tree stays clean —
+    see test_clean_tree_static_rules_above_baseline).  The field is one
+    whose compiled reads live only in simcore (no shared-helper read
+    could mask the deletion)."""
+    for ms in C.DEFAULT_SPEC.scopes:
+        src = REPO / ms.path
+        dst = tmp_path / ms.path
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(src, dst)
+    simcore = tmp_path / "src/repro/core/simcore.py"
+    mutated = re.sub(r"\.retrain_every_s\b", ".retrain_every_s_DELETED",
+                     simcore.read_text())
+    assert mutated != simcore.read_text()
+    simcore.write_text(mutated)
+    found = C.analyze_contracts(_ctx(tmp_path))
+    assert [f.key for f in found] == ["SimConfig.retrain_every_s"]
+    assert "serial path only" in found[0].message
+
+
+# -------------------------------------------------------------------- cli
+
+def test_cli_json_report_on_clean_tree(tmp_path, capsys):
+    from repro.analysis.cli import main
+    out = tmp_path / "report.json"
+    rc = main(["--format", "json", "--output", str(out),
+               "--rules", "parity-read-coverage,scenario-field-mapping,"
+               "rng-raw-constructor,rng-stream-uniqueness"])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert report["counts"]["gating"] == 0
+    printed = json.loads(capsys.readouterr().out)
+    assert printed == report
+
+
+def test_cli_gates_without_baseline(capsys):
+    """--no-baseline must re-expose the pinned zoo sites (proves the
+    gate is real, not vacuous)."""
+    from repro.analysis.cli import main
+    rc = main(["--no-baseline", "--rules", "rng-raw-constructor"])
+    capsys.readouterr()
+    assert rc == 1
+
+
+def test_rule_catalog_lists_all_families(capsys):
+    from repro.analysis.cli import main
+    assert main(["--list-rules"]) == 0
+    text = capsys.readouterr().out
+    for name in ("parity-read-coverage", "scenario-field-mapping",
+                 "rng-raw-constructor", "rng-stream-uniqueness",
+                 "kernel-purity", "kernel-scatter-budget"):
+        assert name in text
