@@ -22,9 +22,13 @@ import time
 
 import numpy as np
 
-from repro.core.campaign import (DEFAULT_POLICIES, SUMMARY_STATS,
-                                 campaign_table, run_campaign,
-                                 run_campaign_serial)
+try:
+    from benchmarks.run import manifest
+except ImportError:          # script mode: benchmarks/ is sys.path[0]
+    from run import manifest
+from repro.core.campaign import (DEFAULT_POLICIES, LAST_PHASES,
+                                 SUMMARY_STATS, campaign_table,
+                                 run_campaign, run_campaign_serial)
 from repro.core.scenarios import scenario_names
 
 PARITY_TOL = 1e-5
@@ -89,14 +93,28 @@ def _best_of(fn, repeats: int):
     return best, result
 
 
+def _kernel_cache_stats():
+    """PR-7 kernel-cache counters, None under a serial-only run (the
+    compiled core was never imported, so there is nothing to report)."""
+    import sys
+    simcore = sys.modules.get("repro.core.simcore")
+    return None if simcore is None else simcore.cache_stats()
+
+
 def _write_artifact(results, t_s, t_b, drift, drift_cl, seeds,
                     backend="serial"):
     os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
     payload = {
+        "manifest": manifest(),
         "seeds": list(seeds), "backend": backend,
         "serial_s": t_s, "batched_s": t_b,
         "speedup_x": t_s / max(t_b, 1e-12), "parity_drift": drift,
         "parity_drift_closed_loop": drift_cl,
+        # per-phase wall breakdown of the LAST run_scenario pass (build
+        # + one run:<policy> entry each) — the campaign-runner
+        # observability hook (DESIGN.md §16)
+        "phases_last_scenario": dict(LAST_PHASES),
+        "kernel_cache": _kernel_cache_stats(),
         "table": {
             scen: {pol: {
                 "p50_rtt": r.stat("p50_rtt"),
@@ -109,6 +127,9 @@ def _write_artifact(results, t_s, t_b, drift, drift_cl, seeds,
                 "waste": r.stat("waste"),
                 "shed_rate": r.stat("shed_rate"),
                 "slo_violation_s": r.stat("slo_violation_s"),
+                # capacity-plane fleet telemetry (None off-plane) —
+                # surfaced instead of dropped at the campaign layer
+                "telemetry": r.telemetry,
             } for pol, r in cell.items() if pol != "oracle"}
             for scen, cell in results.items()},
     }
@@ -172,6 +193,15 @@ def main():
           f"(closed-loop cells {drift_cl:.2e})")
     print()
     print(campaign_table(results))
+    print()
+    print("phases (last scenario): "
+          + ", ".join(f"{k}={v:.2f}s" for k, v in LAST_PHASES.items()))
+    print(f"kernel cache: {_kernel_cache_stats()}")
+    tele_cells = [f"{scen}/{pol}" for scen, cell in results.items()
+                  for pol, r in cell.items() if r.telemetry is not None]
+    print(f"capacity telemetry: {len(tele_cells)} cells"
+          + (f" ({', '.join(tele_cells[:4])}{'...' if len(tele_cells) > 4 else ''})"
+             if tele_cells else ""))
 
     if not args.smoke and not args.no_artifact:
         _write_artifact(results, t_s, t_b, drift, drift_cl,

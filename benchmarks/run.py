@@ -1,12 +1,46 @@
 """Benchmark harness: one bench per paper table/figure + kernels + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows (per the repo contract).
+Every artifact a bench writes is stamped with :func:`manifest` so the
+perf trajectory (``BENCH_*.json``, ``campaign.json``,
+``telemetry.json``) stays reconstructible across PRs.
 """
 from __future__ import annotations
 
 import sys
 import time
 import traceback
+
+
+def manifest() -> dict:
+    """Provenance stamp for bench artifacts: commit, UTC timestamp, jax
+    version, and device topology.  Degrades field-by-field (no git, no
+    jax) rather than failing the bench."""
+    import datetime
+    import os
+    import subprocess
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except OSError:
+        commit = ""
+    out = {
+        "commit": commit or None,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        devs = jax.devices()
+        out.update(jax_version=jax.__version__,
+                   backend=devs[0].platform,
+                   device_count=len(devs),
+                   devices=[str(d) for d in devs])
+    except Exception:
+        out.update(jax_version=None, backend=None, device_count=0,
+                   devices=[])
+    return out
 
 
 def main() -> None:
@@ -17,7 +51,7 @@ def main() -> None:
                             bench_online, bench_overhead,
                             bench_prediction_plane, bench_resilience,
                             bench_selection, bench_simcore,
-                            bench_state_scaling)
+                            bench_state_scaling, bench_telemetry)
     from benchmarks import roofline
 
     benches = [
@@ -35,6 +69,7 @@ def main() -> None:
         ("online", bench_online.run),
         ("capacity", bench_capacity.run),
         ("resilience", bench_resilience.run),
+        ("telemetry", bench_telemetry.run),
         ("table5", bench_covariability.run),
         ("kernels", bench_kernels.run),
     ]

@@ -70,6 +70,13 @@ DEFAULT_SPEC = ContractSpec(
         "SimConfig": "src/repro/core/simulator.py",
         "CapacityConfig": "src/repro/core/capacity.py",
         "ResilienceConfig": "src/repro/core/resilience.py",
+        # flight recorder (PR 10): trace config fields are parity
+        # contract fields — both backends must read them, so a knob one
+        # kernel honors and the other ignores is a loud finding, not a
+        # silent trace divergence.  telemetry.py itself is NOT an
+        # analyzed scope: reads must come from the serial stepper
+        # (SimStepper.__init__) and the compiled _static_for.
+        "TraceConfig": "src/repro/core/telemetry.py",
     },
     scopes=(
         ModuleScope("src/repro/core/simulator.py", SERIAL, {

@@ -39,8 +39,16 @@ from repro.core.balancer import make_policy
 from repro.core.rng import rng_seed
 from repro.core.scenarios import ScenarioSpec, get_scenario, scenario_names
 from repro.core.simulator import SimStepper, _build_cluster, _Cluster, run_sim
+from repro.core.telemetry import PhaseTimer
 
 DEFAULT_POLICIES = ("perf_aware", "least_conn", "round_robin", "random")
+
+#: wall-time per phase of the most recent :func:`run_scenario` call
+#: ("build" + one "run:<policy>" entry per lockstep pass), refreshed per
+#: call.  The phases double as ``jax.profiler`` trace annotations (see
+#: :class:`~repro.core.telemetry.PhaseTimer`); ``bench_campaign`` folds
+#: this breakdown into the campaign artifact.
+LAST_PHASES: Dict[str, float] = {}
 
 #: summary stats aggregated per seed (means over that seed's trials);
 #: also the stat set the bench parity gate compares, so batched/serial
@@ -123,9 +131,28 @@ class PolicyResult:
     inefficiency_std: Optional[float] = None     # std over seeds
     p99_inefficiency_pct: Optional[float] = None
     resource_waste_pct: Optional[float] = None
+    #: capacity-plane fleet telemetry (decisions, scale events, wakeups,
+    #: mean utilization, ...) as plain jsonable values; None when the
+    #: scenario runs without a capacity plane
+    telemetry: Optional[Dict] = None
 
     def stat(self, name: str) -> float:
         return float(self.per_seed[name].mean())
+
+
+def _jsonable(obj):
+    """Numpy -> plain python, recursively (artifact-safe telemetry)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    return obj
 
 
 def _block_reduce(values: np.ndarray, trials: Sequence[int],
@@ -231,28 +258,35 @@ def run_scenario(scenario, policies: Sequence[str] = DEFAULT_POLICIES,
     (``tests/test_simcore.py``).
     """
     spec = _resolve(scenario)
-    seeds = tuple(int(s) for s in seeds)
-    cfgs = [spec.compile(seed=s, **overrides) for s in seeds]
-    stacked = stack_clusters([_build_cluster(c) for c in cfgs])
-    trials = [c.n_trials for c in cfgs]
-    blocks = [(rng_seed(c.seed, "policy"), c.n_trials) for c in cfgs]
+    timer = PhaseTimer()
+    with timer.phase("build"):
+        seeds = tuple(int(s) for s in seeds)
+        cfgs = [spec.compile(seed=s, **overrides) for s in seeds]
+        stacked = stack_clusters([_build_cluster(c) for c in cfgs])
+        trials = [c.n_trials for c in cfgs]
+        blocks = [(rng_seed(c.seed, "policy"), c.n_trials) for c in cfgs]
 
     wanted = list(policies)
     if include_oracle and "oracle" not in wanted:
         wanted.append("oracle")
     out: Dict[str, PolicyResult] = {}
     for pol_name in wanted:
-        summary = _run_stacked(stacked, pol_name,
-                               rng_seed(cfgs[0].seed, "policy"),
-                               blocks, backend)
+        with timer.phase(f"run:{pol_name}"):
+            summary = _run_stacked(stacked, pol_name,
+                                   rng_seed(cfgs[0].seed, "policy"),
+                                   blocks, backend)
         out[pol_name] = PolicyResult(
             scenario=spec.name, policy=pol_name, seeds=seeds,
             per_seed=_split_per_seed(summary, trials),
-            n_hedged=summary["n_hedged"])
+            n_hedged=summary["n_hedged"],
+            telemetry=(_jsonable(summary["capacity"])
+                       if "capacity" in summary else None))
     if include_oracle:
         for pol_name in wanted:
             if pol_name != "oracle":
                 _attach_inefficiency(out[pol_name], out["oracle"], trials)
+    LAST_PHASES.clear()
+    LAST_PHASES.update(timer.summary())
     return out
 
 

@@ -82,6 +82,8 @@ from repro.core.capacity import CapacityConfig, membership_timeline
 from repro.core.resilience import ResilienceConfig
 from repro.core.rng import rng_from_key, rng_key, rng_seed, rng_stream
 from repro.core.simulator import SimConfig, _build_cluster, _Cluster, _Metrics
+from repro.core.telemetry import (DISP_FAIL_FAST, DISP_SERVED, DISP_SHED,
+                                  DISP_TIMEOUT, TRACE_FIELDS, trace_block)
 from repro.monitoring.metrics import PeriodicRefresh
 
 __all__ = ["supports", "run_compiled", "run_sim_compiled",
@@ -135,6 +137,7 @@ class _Static:
     min_count: int = 8
     native_noise: bool = False
     resilience: Optional[ResilienceConfig] = None
+    trace_every: int = 0         # flight-recorder sampling stride; 0 off
 
     @property
     def hedging(self) -> bool:
@@ -200,7 +203,9 @@ def _static_for(cfg: SimConfig, policy: str) -> _Static:
         fallback_threshold=cfg.fallback_threshold if closed else 0.0,
         obs_window=max(1, min(cfg.online_window, cfg.n_requests)),
         acc_window=max(1, int(cfg.accuracy_window)),
-        resilience=cfg.resilience)
+        resilience=cfg.resilience,
+        trace_every=0 if cfg.trace is None
+        else int(cfg.trace.sample_every))
 
 
 def _count_flags(st: _Static) -> Tuple[bool, bool, bool]:
@@ -559,6 +564,16 @@ def _lower(cluster: _Cluster, policy: str, seed_blocks=None):
                 pd_done=np.zeros((J, T), bool),
                 n_fallback=np.int64(0))
         aux["retrain_steps"] = np.flatnonzero(xs["retrain"])
+    if st.trace_every:
+        # flight recorder (DESIGN.md §16): the trace rides the CARRY —
+        # a (J_s, T, F) slot buffer written by dynamic_update_slice at
+        # slot j // sample_every — so the ys contract (and the shard
+        # out_specs) stays untouched in both sampled and full modes
+        k = st.trace_every
+        carry0["trace"] = np.full(
+            (-(-J // k), T, len(TRACE_FIELDS)), np.nan)
+        xs["tr_slot"] = (np.arange(J) // k).astype(np.int32)
+        xs["tr_keep"] = (np.arange(J) % k) == 0
     return st, consts, xs, carry0, aux
 
 
@@ -775,6 +790,68 @@ def _build_kernel(st: _Static):
                                      axis=1).reshape(mi.shape)
             inter = jnp.where((bg > now) & ~mp, w, 0.0).sum(-1)
             return _lognormal(inter, lr, z[:, None]) * sp
+
+        # -------------------------------------------------------------
+        # flight recorder (DESIGN.md §16): decomposition helpers.  The
+        # trace rides the carry as a (J_s, T, F) slot buffer; a step
+        # whose tr_keep flag is off writes its slot's previous contents
+        # back (pure, shape-stable — sampled and full modes share one
+        # kernel structure).
+        if st.trace_every:
+            def trace_base(a, drift_on, z, picks):
+                """Zero-interference service draw on the chosen
+                replica's tier: serial ``_lognormal(log_rbar, 0, z) *
+                speed[trial, picks]`` with the same drift selection as
+                rtt_full/rtt_at."""
+                lr = per_app("log_rbar_pre", a)
+                sp = per_app("speed_pre", a)
+                if st.drift:
+                    lr = jnp.where(drift_on,
+                                   per_app("log_rbar_post", a), lr)
+                    sp = jnp.where(drift_on,
+                                   per_app("speed_post", a), sp)
+                sp_p = jnp.take_along_axis(sp, picks[:, None],
+                                           axis=1)[:, 0]
+                return _lognormal(0.0, lr, z) * sp_p
+
+            def trace_row(rep, pred_p, score, qwait, raw, base, cm, gm,
+                          retry_s, hedge_s, disp, resp):
+                """(T, F) row in TRACE_FIELDS order — the jnp mirror of
+                telemetry.compose_row."""
+                disp = disp.astype(jnp.float64)
+                dropped = disp != DISP_SERVED
+
+                def nanm(v):
+                    return jnp.where(dropped, jnp.nan, v)
+                cols = [
+                    jnp.where(dropped, -1.0, rep.astype(jnp.float64)),
+                    nanm(pred_p), nanm(score), nanm(qwait), nanm(base),
+                    nanm(raw - base), nanm(raw * (cm - 1.0)),
+                    nanm(raw * cm * (gm - 1.0)),
+                    nanm(retry_s), nanm(hedge_s), disp, nanm(resp),
+                ]
+                return jnp.stack(cols, axis=-1)
+
+            def trace_commit(buf, x, tr):
+                slot = x["tr_slot"]
+                zero = jnp.zeros((), slot.dtype)
+                return lax.dynamic_update_slice(buf, tr[None],
+                                                (slot, zero, zero))
+
+            def trace_emit(buf, x, row_fn):
+                """Commit ``row_fn()`` into the slot buffer.  Full mode
+                (k == 1) writes unconditionally; sampled mode branches
+                on the per-step keep flag with ``lax.cond`` so the
+                ~(k-1)/k skipped steps pay for NO row computation at
+                all — the flag is a replicated scalar (xs, trial axis
+                None), so the cond stays a genuine branch, not a
+                select."""
+                if st.trace_every == 1:
+                    return trace_commit(buf, x, row_fn())
+                return lax.cond(
+                    x["tr_keep"],
+                    lambda b: trace_commit(b, x, row_fn()),
+                    lambda b: b, buf)
 
         # -------------------------------------------------------------
         # capacity-event machinery (fires inside a while_loop per step)
@@ -1099,6 +1176,7 @@ def _build_kernel(st: _Static):
                     ncr["cursor"] = (picks + 1) % K
                 rtt_pick = rtt_at(a, drift_on, busy, now, z,
                                   picks[:, None])[:, 0]
+                raw_pick = rtt_pick         # pre cold/gray service draw
                 if cap is not None:
                     rtt_pick = rtt_pick * coldm[trial, picks]
                 if graym is not None:
@@ -1121,6 +1199,7 @@ def _build_kernel(st: _Static):
                         allk = jnp.broadcast_to(
                             jnp.arange(K)[None, :], (T, K))
                         actual = rtt_at(a, drift_on, busy, now, z, allk)
+                    actual_raw = actual     # pre cold/gray service draws
                     if cap is not None:
                         actual = actual * coldm
                 if st.closed_loop:
@@ -1257,6 +1336,11 @@ def _build_kernel(st: _Static):
                     fin_fin = jnp.zeros((T,))
                     disp_work = jnp.zeros((T,))
                     n_att = jnp.zeros((T,))
+                    if st.trace_every:
+                        # successful-attempt captures for the trace row
+                        sc_fin = jnp.zeros((T,))
+                        ta_fin = jnp.zeros((T,))
+                        qw_fin = jnp.zeros((T,))
                     busy_c_i = busy_c
                     for i in range(1 + res.max_retries):
                         alive = ~success & ~shed
@@ -1336,6 +1420,13 @@ def _build_kernel(st: _Static):
                         rtt_fin = jnp.where(ok_i, rtt_i, rtt_fin)
                         fin_fin = jnp.where(ok_i, t_att + resp_i,
                                             fin_fin)
+                        if st.trace_every:
+                            sc_fin = jnp.where(ok_i, sc[trial, picks],
+                                               sc_fin)
+                            ta_fin = jnp.where(ok_i, t_att, ta_fin)
+                            qw_fin = jnp.where(
+                                ok_i, jnp.maximum(b_pick - t_att, 0.0),
+                                qw_fin)
                         success = success | ok_i
                         if i < res.max_retries:
                             # a failed DISPATCH is learned only at the
@@ -1415,6 +1506,30 @@ def _build_kernel(st: _Static):
                                    wakeups=wakeups)
                         if st.pending:
                             ncr["folded"] = folded
+                    if st.trace_every:
+                        def res_row():
+                            disp = jnp.where(
+                                shed, DISP_SHED,
+                                jnp.where(timed_out & (n_att == 0),
+                                          DISP_FAIL_FAST,
+                                          jnp.where(timed_out,
+                                                    DISP_TIMEOUT,
+                                                    DISP_SERVED)))
+                            return trace_row(
+                                rep, (predicted[trial, picks_fin]
+                                      if predicted is not None
+                                      else jnp.full((T,), jnp.nan)),
+                                sc_fin, qw_fin,
+                                actual_raw[trial, picks_fin],
+                                trace_base(a, drift_on, z, picks_fin),
+                                (coldm[trial, picks_fin]
+                                 if cap is not None else 1.0),
+                                (graym[trial, picks_fin]
+                                 if graym is not None else 1.0),
+                                ta_fin - now, jnp.zeros((T,)), disp,
+                                resp)
+                        ncr["trace"] = trace_emit(cr["trace"], x,
+                                                  res_row)
                     ys = {"resp": resp, "rtt": rtt_fin,
                           "rep": rep.astype(jnp.int32), "shed": shed,
                           "hmask": hmask, "rtt2": rtt2,
@@ -1429,9 +1544,12 @@ def _build_kernel(st: _Static):
                 picks = jnp.argmin(sc_m, axis=1)
                 if full_actual:
                     rtt_pick = actual[trial, picks]
+                    if st.trace_every:
+                        raw_pick = actual_raw[trial, picks]
                 else:
                     rtt_pick = rtt_at(a, drift_on, busy, now, z,
                                       picks[:, None])[:, 0]
+                    raw_pick = rtt_pick     # pre cold/gray service draw
                     if cap is not None:
                         rtt_pick = rtt_pick * coldm[trial, picks]
                     if graym is not None:
@@ -1455,6 +1573,32 @@ def _build_kernel(st: _Static):
             # (XLA CPU scatter serializes over trials)
             rep = a0 + picks
             b_pick = busy_c[trial, picks]
+            if st.trace_every:
+                # the trace's score column, recomputed at the pick from
+                # b_pick rather than gathered out of ``sc``: a gather
+                # from the score matrix keeps it alive past the argmin,
+                # forcing XLA to materialize (T, K) scores every step
+                # (measured ~2x whole-kernel on the large bench cell).
+                # Each expression is the element-at-pick of its
+                # policy's score branch, bitwise.  Placement matters:
+                # hoisting this gather above the rtt draw re-triggers
+                # the same materialization, so it stays down here next
+                # to ``b_pick``.
+                wait_pick = jnp.maximum(b_pick - now, 0.0)
+                if not (st.reactive and not st.res_client):
+                    score_pick = wait_pick + sig[trial, picks]
+                elif st.policy == "round_robin":
+                    score_pick = jnp.where(
+                        b_pick <= now,
+                        jnp.mod(picks - cr["cursor"],
+                                K).astype(jnp.float64),
+                        PEN + wait_pick)
+                elif st.policy == "random":
+                    score_pick = jnp.where(b_pick <= now,
+                                           draw[trial, picks],
+                                           PEN + wait_pick)
+                else:                                    # least_conn
+                    score_pick = b_pick - now
             finish = jnp.maximum(now, b_pick) + rtt_pick
             colK = jnp.arange(K)[None, :]
             new_c = jnp.where((colK == picks[:, None]) & served[:, None],
@@ -1554,6 +1698,26 @@ def _build_kernel(st: _Static):
                 if st.pending:
                     ncr["folded"] = folded
 
+            if st.trace_every:
+                def tail_row():
+                    if st.hedging:
+                        hsave = jnp.where(
+                            hmask, finish - jnp.minimum(finish, finish2),
+                            0.0)
+                    else:
+                        hsave = jnp.zeros((T,))
+                    return trace_row(
+                        rep, (predicted[trial, picks]
+                              if predicted is not None
+                              else jnp.full((T,), jnp.nan)),
+                        score_pick, jnp.maximum(b_pick - now, 0.0),
+                        raw_pick, trace_base(a, drift_on, z, picks),
+                        coldm[trial, picks] if cap is not None else 1.0,
+                        graym[trial, picks]
+                        if graym is not None else 1.0,
+                        jnp.zeros((T,)), hsave,
+                        jnp.where(shed, DISP_SHED, DISP_SERVED), resp)
+                ncr["trace"] = trace_emit(cr["trace"], x, tail_row)
             ys = {"resp": resp, "rtt": rtt_pick,
                   "rep": rep.astype(jnp.int32), "shed": shed,
                   "hmask": hmask, "rtt2": rtt2}
@@ -1587,6 +1751,8 @@ _T_AXIS = {
     "br_fail": 0, "br_open": 0, "br_trip": 0,
     "resp": 1, "rtt": 1, "rep": 1, "shed": 1, "hmask": 1, "rtt2": 1,
     "tout": 1, "att": 1, "bwork": 1,
+    # flight recorder (DESIGN.md §16): (J_s, T, F) carry + slot xs
+    "trace": 1, "tr_slot": None, "tr_keep": None,
 }
 
 
@@ -1828,6 +1994,7 @@ def _summarize(cluster: _Cluster, st: _Static, final, ys, aux,
         bwork = ys["bwork"].T                          # (T, J)
         ok = served & ~tout
         m.timeout = tout
+        m.fail_fast = tout & (ys["att"].T == 0)
         m.chosen = np.where(shed | tout, -1, rep)
         m.busy_s = bwork.sum(axis=1)
         m.cpu_s = (cpu_a * bwork).sum(axis=1)
@@ -1846,6 +2013,9 @@ def _summarize(cluster: _Cluster, st: _Static, final, ys, aux,
                         capacity=ledger)
     if st.closed_loop:
         summary["online"] = _online_summary(cluster, st, final, aux)
+    if st.trace_every:
+        summary["trace"] = trace_block(final["trace"], cfg.n_requests,
+                                       st.trace_every)
     summary["simcore_backend"] = backend
     return summary
 

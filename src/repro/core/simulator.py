@@ -82,6 +82,9 @@ from repro.core.online import OnlineFleet
 from repro.core.resilience import (backoff_delay, BreakerBoard,
                                    ResilienceConfig)
 from repro.core.rng import rng_seed, rng_stream
+from repro.core.telemetry import (compose_row, DISP_FAIL_FAST, DISP_SERVED,
+                                  DISP_SHED, DISP_TIMEOUT, FlightRecorder,
+                                  TraceConfig)
 from repro.monitoring.metrics import PeriodicRefresh
 
 # SPA app profiles: (mean RTT s, cpu cores/req, mem GB/req) — scaled from
@@ -157,6 +160,11 @@ class SimConfig:
     #: storm) + client-side timeout / retry / circuit-breaker semantics;
     #: None keeps every earlier scenario bit-identical
     resilience: Optional[ResilienceConfig] = None
+    # -- flight recorder (core/telemetry.py, DESIGN.md §16) -------------
+    #: per-request decision traces + additive RTT decomposition, emitted
+    #: identically by the serial stepper and the compiled kernel; None
+    #: keeps untraced runs (and their goldens) byte-identical
+    trace: Optional[TraceConfig] = None
 
 
 def _interference_matrix(apps: Sequence[str], strength: float,
@@ -503,13 +511,15 @@ class _Metrics:
         self.n_fallback = 0                 # least_conn-fallback routings
         # resilience-plane accounting (DESIGN.md §14)
         self.timeout = np.zeros((T, J), bool)  # all attempts timed out
+        self.fail_fast = np.zeros((T, J), bool)  # timed out, 0 dispatches
         self.attempts = np.zeros(T)            # dispatched attempts
         self.wasted_s = np.zeros(T)            # timed-out attempts' work
 
     def add(self, j: int, response: np.ndarray, cpu: np.ndarray,
             mem: np.ndarray, rep: np.ndarray, rtt: np.ndarray,
             shed: Optional[np.ndarray] = None,
-            timeout: Optional[np.ndarray] = None):
+            timeout: Optional[np.ndarray] = None,
+            fail_fast: Optional[np.ndarray] = None):
         self.rtts[:, j] = response
         self.cpu_s += cpu
         self.mem_s += mem
@@ -525,6 +535,8 @@ class _Metrics:
             if timeout is not None:
                 self.timeout[:, j] = timeout
                 fail |= timeout
+            if fail_fast is not None:
+                self.fail_fast[:, j] = fail_fast
             served = ~fail
             self.chosen[:, j] = np.where(fail, -1, rep)
             self.busy_s += np.where(served, rtt, 0.0)
@@ -584,6 +596,16 @@ class _Metrics:
                "goodput": 1.0 - (self.shed | self.timeout).mean(axis=1),
                "timeout_rate": self.timeout.mean(axis=1),
                "n_timeouts": int(self.timeout.sum()),
+               # NaN-disposition split: admission shed vs client timeout
+               # vs breaker/drain fail-fast (timed out with 0 dispatched
+               # attempts).  fail_fast ⊂ timeout, so the three resolved
+               # buckets are shed / (timeout & ~fail_fast) / fail_fast.
+               "n_client_timeout": int((self.timeout
+                                        & ~self.fail_fast).sum()),
+               "n_fail_fast": int(self.fail_fast.sum()),
+               "client_timeout_rate": (self.timeout
+                                       & ~self.fail_fast).mean(axis=1),
+               "fail_fast_rate": self.fail_fast.mean(axis=1),
                "attempts_per_req": self.attempts / self.rtts.shape[1],
                "wasted_work_s": self.wasted_s,
                # raw per-request views (windowed analyses, e.g. the
@@ -624,6 +646,13 @@ class SimStepper:
         self.trial = np.arange(T)
         self.busy_until = np.zeros((T, len(cluster.app_of)))
         self.metrics = _Metrics(cfg)
+        # flight recorder (DESIGN.md §16): per-request decision traces +
+        # additive RTT decomposition, sampled every trace.sample_every
+        self.recorder: Optional[FlightRecorder] = None
+        tr = cfg.trace
+        if tr is not None:
+            self.recorder = FlightRecorder(cfg.n_requests, T,
+                                           tr.sample_every)
         # closed-loop mode: per-(trial, app) online predictors trained
         # on the RTTs this run observes (DESIGN.md §11)
         self.fleet = None
@@ -744,20 +773,34 @@ class SimStepper:
             cold = capacity.cold_mult(candidates, now)
 
         graym = self._gray_mult(now, candidates)
+        # tracing a sampled request replaces pick() with its exact
+        # decomposition (score -> masked argmin -> update) so the
+        # winning score can be recorded without disturbing any policy
+        # RNG stream — bitwise-identical picks either way
+        rec = self.recorder
+        tracing = rec is not None and rec.wants(j)
+        tr_scores = raw = None
         predicted = fleet_X = fleet_pred = None
         if self.reactive:
             state = ClusterState(now=now,
                                  busy_until=busy_until[:, candidates],
                                  active=active)
-            picks = self.pol.pick(state)
+            if tracing:
+                tr_scores = self.pol.score(state)
+                picks = np.argmin(state.mask_inactive(tr_scores), axis=1)
+                self.pol.update(state, picks)
+            else:
+                picks = self.pol.pick(state)
             rep = candidates[picks]
             rtt = cluster.rtt_draw_at(j, a, busy_until, now, picks)
+            raw = rtt                       # pre cold/gray service draw
             if cold is not None:
                 rtt = rtt * cold[trial, picks]
             if graym is not None:
                 rtt = rtt * graym[trial, picks]
         else:
             actual = cluster.rtt_draw(j, a, busy_until, now)
+            actual_raw = actual             # pre cold/gray service draws
             if cold is not None:
                 actual = actual * cold      # cold replicas serve degraded
             if self.fleet is not None:
@@ -816,10 +859,20 @@ class SimStepper:
                 scores = self.pol.score(state)  # reused by hedge_plan
                 picks = np.argmin(state.mask_inactive(scores), axis=1)
                 self.pol.update(state, picks)
+                tr_scores = scores
+            elif tracing:
+                tr_scores = self.pol.score(state)
+                picks = np.argmin(state.mask_inactive(tr_scores), axis=1)
+                self.pol.update(state, picks)
             else:
                 picks = self.pol.pick(state)
             rep = candidates[picks]
             rtt = actual[trial, picks]
+            raw = actual_raw[trial, picks]
+        if tracing:
+            # pre-commit queue wait on the chosen replica (busy_until is
+            # overwritten by _settle / the hedge-duplicate commit below)
+            tr_qwait = np.maximum(busy_until[trial, rep] - now, 0.0)
         finish = np.maximum(now, busy_until[trial, rep]) + rtt
         if self.fleet is not None:
             # the routed request is the training signal: picked
@@ -867,6 +920,32 @@ class SimStepper:
                                               finish, rep, cpu, mem)
 
         self.metrics.add(j, response, cpu, mem, rep, rtt, shed)
+        if tracing:
+            if self.hedging:
+                hedge_s = np.where(mask,
+                                   finish - np.minimum(finish, finish2),
+                                   0.0)
+            else:
+                hedge_s = 0.0
+            # zero-interference service draw on the chosen replica's
+            # (possibly post-drift) tier: same z, same speed, inter = 0
+            p = cluster.app_prep(a, cluster.in_drift(now))
+            base = _Cluster._lognormal(p.log_rbar, 0.0,
+                                       cluster.z_rtt[:, j]) \
+                * p.speed[trial, picks]
+            disp = np.zeros(len(rep)) if shed is None \
+                else np.where(shed, DISP_SHED, DISP_SERVED)
+            rec.record(j, compose_row(
+                rep=rep,
+                predicted=(predicted[trial, picks]
+                           if predicted is not None else np.nan),
+                score=tr_scores[trial, picks],
+                queue_wait=tr_qwait, raw=raw, base=base,
+                cold_mult=cold[trial, picks] if cold is not None else 1.0,
+                gray_mult=(graym[trial, picks]
+                           if graym is not None else 1.0),
+                retry_s=0.0, hedge_s=hedge_s, disposition=disp,
+                response=response))
 
     def _settle(self, served, response, finish, rep, cpu, mem):
         """Commit the routed request's occupancy and mask the shed
@@ -920,6 +999,7 @@ class SimStepper:
 
         # the once-per-request true-RTT matrix at ARRIVAL occupancy
         actual = cluster.rtt_draw(j, a, busy_until, now)
+        actual_raw = actual                 # pre cold/gray service draws
         if cold is not None:
             actual = actual * cold
         pol = self.pol
@@ -982,6 +1062,14 @@ class SimStepper:
         fin_fin = np.zeros(T)
         disp_work = np.zeros(T)        # ALL dispatched service time
         n_att = np.zeros(T)
+        rec = self.recorder
+        tracing = rec is not None and rec.wants(j)
+        if tracing:
+            # successful-attempt captures for the trace row: winning
+            # score, attempt start time, queue wait at dispatch
+            sc_fin = np.zeros(T)
+            t_att_fin = np.zeros(T)
+            qw_fin = np.zeros(T)
 
         for i in range(1 + res.max_retries):
             alive = ~success & ~shed_m
@@ -1032,6 +1120,10 @@ class SimStepper:
             picks_fin[ok] = picks[ok]
             rtt_fin[ok] = rtt_i[ok]
             fin_fin[ok] = t_att[ok] + resp_i[ok]
+            if tracing:
+                sc_fin[ok] = sc[ok, picks[ok]]
+                t_att_fin[ok] = t_att[ok]
+                qw_fin[ok] = np.maximum(b_pick[ok] - t_att[ok], 0.0)
             success |= ok_i
 
             if i < res.max_retries:
@@ -1066,8 +1158,31 @@ class SimStepper:
                 capacity.note_completion(a, rtt_fin, fin_fin, success)
         cpu = np.where(success, cluster.cpu_req[a] * rtt_fin, 0.0)
         mem = np.where(success, cluster.mem_req[a] * rtt_fin, 0.0)
+        fail_fast = timed_out & (n_att == 0)
         self.metrics.add(j, response, cpu, mem, rep_fin, rtt_fin,
-                         shed=shed, timeout=timed_out)
+                         shed=shed, timeout=timed_out,
+                         fail_fast=fail_fast)
+        if tracing:
+            p = cluster.app_prep(a, cluster.in_drift(now))
+            base = _Cluster._lognormal(p.log_rbar, 0.0,
+                                       cluster.z_rtt[:, j]) \
+                * p.speed[trial, picks_fin]
+            disp = np.where(
+                shed_m, DISP_SHED,
+                np.where(fail_fast, DISP_FAIL_FAST,
+                         np.where(timed_out, DISP_TIMEOUT, DISP_SERVED)))
+            rec.record(j, compose_row(
+                rep=rep_fin,
+                predicted=(predicted[trial, picks_fin]
+                           if predicted is not None else np.nan),
+                score=sc_fin, queue_wait=qw_fin,
+                raw=actual_raw[trial, picks_fin], base=base,
+                cold_mult=(cold[trial, picks_fin]
+                           if cold is not None else 1.0),
+                gray_mult=(graym[trial, picks_fin]
+                           if graym is not None else 1.0),
+                retry_s=t_att_fin - now, hedge_s=0.0,
+                disposition=disp, response=response))
         # all dispatched-but-timed-out attempts still burned server time
         # (add() booked only the successful attempt's work)
         extra = disp_work - np.where(success, rtt_fin, 0.0)
@@ -1087,6 +1202,8 @@ class SimStepper:
         if self.fleet is not None:
             self.fleet.fold_pending(np.inf)   # everything has completed
             summary["online"] = self.fleet.stats()
+        if self.recorder is not None:
+            summary["trace"] = self.recorder.block()
         return summary
 
 

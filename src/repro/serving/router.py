@@ -59,6 +59,9 @@ from repro.core.knowledge import KnowledgeBase
 from repro.core.online import RollingAccuracy
 from repro.core.prediction_plane import PredictionPlane
 from repro.core.resilience import BreakerBoard, ResilienceConfig
+from repro.core.telemetry import (DISP_SERVED, DISP_SHED, DISP_TIMEOUT,
+                                  MetricsRegistry, TRACE_FIELDS, compose_row,
+                                  trace_block)
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -71,7 +74,8 @@ class MorpheusRouter:
                  fallback_threshold: float = 0.0,
                  accuracy_window: int = 40,
                  capacity: Optional[CapacityConfig] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 metrics_store=None):
         if hedge_factor is not None and resilience is not None \
                 and resilience.client_side:
             raise ValueError("hedging and client-side resilience (timeout/"
@@ -112,6 +116,26 @@ class MorpheusRouter:
         self._attempt: Dict[int, int] = {}    # rid -> retries already issued
         self._res_pending: List[Tuple[Request, int]] = []
         self._timeout_ids: set = set()        # attempt objects that timed out
+        # flight recorder (core/telemetry.py, DESIGN.md §16): the T=1
+        # serving mirror is always on — one trace row per routed attempt
+        # (retries and hedge duplicates are attempts of their primary),
+        # opened at pick time with the score/prediction/queue-wait the
+        # decision actually saw and finalized at drain/settle time.  The
+        # Prometheus-style registry rides the columnar MetricsStore when
+        # one is supplied (same storage model as the prediction signals).
+        self._trace_open: Dict[int, dict] = {}     # id(req) -> open row
+        self._trace_done: List[Tuple[int, np.ndarray]] = []
+        self._trace_seq = 0
+        self._hedge_saved: Dict[int, float] = {}   # id(primary) -> saved s
+        self.registry = MetricsRegistry(store=metrics_store)
+        self.m_requests = self.registry.counter("router_requests_total")
+        self.m_shed = self.registry.counter("router_shed_total")
+        self.m_retries = self.registry.counter("router_retries_total")
+        self.m_timeouts = self.registry.counter("router_timeouts_total")
+        self.m_hedges = self.registry.counter("router_hedges_total")
+        self.m_fallbacks = self.registry.counter("router_fallbacks_total")
+        self.m_inflight = self.registry.gauge("router_inflight")
+        self.m_rtt = self.registry.histogram("router_rtt_seconds")
 
     # ------------------------------------------------------------------
     def _predicted_rtts(self) -> np.ndarray:
@@ -207,6 +231,16 @@ class MorpheusRouter:
             self.pool.on_request(now)
             if not self.pool.admit(now):
                 self.shed.append(req)
+                self.m_requests.inc()
+                self.m_shed.inc()
+                # closed immediately: no pick ever happened
+                self._trace_done.append((self._trace_seq, compose_row(
+                    rep=-1.0, predicted=np.nan, score=np.nan,
+                    queue_wait=np.nan, raw=np.nan, base=np.nan,
+                    cold_mult=1.0, gray_mult=1.0, retry_s=np.nan,
+                    hedge_s=np.nan, disposition=DISP_SHED,
+                    response=np.nan)))
+                self._trace_seq += 1
                 return -1
         use_pred = isinstance(self.policy, PerfAware)
         fell_back = use_pred and not self.predictions_viable()
@@ -227,17 +261,35 @@ class MorpheusRouter:
                                      busy_until=state.busy_until,
                                      queue_depth=state.queue_depth,
                                      predicted=state.predicted, active=act)
+        # pick == argmin(mask_inactive(score)) + update, spelled out so
+        # the flight recorder sees the scores the decision was made on
+        # (bit-identical to Policy.pick — same single score() call)
         if fell_back:
             self.fallbacks += 1
+            self.m_fallbacks.inc()
             reactive = ClusterState(
                 now=0.0, busy_until=np.zeros((1, len(self.replicas))),
                 queue_depth=self._queue_proxy()[None, :],
                 active=state.active)
-            i = int(self._fallback_policy.pick(reactive)[0])
+            tr_scores = self._fallback_policy.score(reactive)
+            i = int(np.argmin(reactive.mask_inactive(tr_scores), axis=1)[0])
+            self._fallback_policy.update(reactive, np.array([i]))
         else:
-            i = int(self.policy.pick(state)[0])
+            tr_scores = self.policy.score(state)
+            i = int(np.argmin(state.mask_inactive(tr_scores), axis=1)[0])
+            self.policy.update(state, np.array([i]))
         self.replicas[i].submit(req)
         self.routed.append(i)
+        self.m_requests.inc()
+        self.m_inflight.inc()
+        self._trace_open[id(req)] = {
+            "seq": self._trace_seq, "req": req, "rep": i,
+            "predicted": (float(state.predicted[0, i])
+                          if state.predicted is not None else np.nan),
+            "score": float(tr_scores[0, i]),
+            "queue_wait": float(state.busy_until[0, i]),
+        }
+        self._trace_seq += 1
         if self.resilience is not None and self.resilience.client_side:
             self._attempt.setdefault(req.rid, 0)
             self._res_pending.append((req, i))
@@ -262,6 +314,7 @@ class MorpheusRouter:
                 self.replicas[j].submit(dup)
                 self._hedge_pairs.append((req, dup))
                 self.hedged.append(j)
+                self.m_hedges.inc()
         return i
 
     # ------------------------------------------------------------------
@@ -299,11 +352,36 @@ class MorpheusRouter:
         for primary, dup in self._hedge_pairs:
             if dup.t_done is not None and (
                     primary.t_done is None or dup.t_done < primary.t_done):
+                if primary.t_done is not None:
+                    # time the winning duplicate saved, captured before
+                    # the overwrite — this is the trace row's hedge_s
+                    self._hedge_saved[id(primary)] = \
+                        primary.t_done - dup.t_done
                 primary.t_done = dup.t_done
                 primary.output = dup.output
         finished = [r for r in finished if id(r) not in dup_ids
                     and id(r) not in self._timeout_ids]
         self._hedge_pairs.clear()
+        # finalize served trace rows (post hedge reconciliation, so the
+        # response is the winning completion).  The router can't observe
+        # the engine's internal queue/service split, so the pick-time
+        # wait estimate (clamped to the response) stands in for
+        # queue_wait and service_base absorbs the rest — the sum rule
+        # holds by construction: qw + base - hedge_s == response.
+        for rid in [k for k, v in self._trace_open.items()
+                    if v["req"].t_done is not None]:
+            row = self._trace_open.pop(rid)
+            resp = float(row["req"].rtt)
+            hs = float(self._hedge_saved.pop(rid, 0.0))
+            qw = min(row["queue_wait"], resp)
+            self.m_inflight.dec()
+            self.m_rtt.observe(resp)
+            self._trace_done.append((row["seq"], compose_row(
+                rep=float(row["rep"]), predicted=row["predicted"],
+                score=row["score"], queue_wait=qw,
+                raw=resp - qw + hs, base=resp - qw + hs,
+                cold_mult=1.0, gray_mult=1.0, retry_s=0.0, hedge_s=hs,
+                disposition=DISP_SERVED, response=resp)))
         still_inflight = []
         for req, i, pred in self._inflight:
             rtt = req.rtt
@@ -353,15 +431,41 @@ class MorpheusRouter:
             if not timed_out:
                 continue
             self._timeout_ids.add(id(req))
+            row = self._trace_open.pop(id(req), None)
+            if row is not None:
+                # the attempt's row closes as a client timeout (NaN
+                # response — the client never saw one); a retry opens
+                # its own row through route()
+                self.m_inflight.dec()
+                self._trace_done.append((row["seq"], compose_row(
+                    rep=-1.0, predicted=np.nan, score=np.nan,
+                    queue_wait=np.nan, raw=np.nan, base=np.nan,
+                    cold_mult=1.0, gray_mult=1.0, retry_s=np.nan,
+                    hedge_s=np.nan, disposition=DISP_TIMEOUT,
+                    response=np.nan)))
             attempt = self._attempt.get(req.rid, 0)
             if attempt < res.max_retries:
                 self._attempt[req.rid] = attempt + 1
                 self.retries += 1
+                self.m_retries.inc()
                 retry = Request(rid=req.rid, tokens=req.tokens,
                                 max_new_tokens=req.max_new_tokens)
                 if self.route(retry) >= 0:
                     retried = True
             else:
                 self.timeouts.append(req)
+                self.m_timeouts.inc()
         self._res_pending = still
         return retried
+
+    # ------------------------------------------------------------------
+    def trace(self) -> Dict:
+        """Finalized trace rows in route order, packaged as the same
+        ``"trace"`` block the serial and compiled simulators emit
+        (T=1, ``sample_every=1``); attempts still in flight are not
+        included until a ``drain`` settles them."""
+        rows = [r for _, r in sorted(self._trace_done,
+                                     key=lambda kv: kv[0])]
+        data = (np.stack(rows)[:, None, :] if rows
+                else np.empty((0, 1, len(TRACE_FIELDS))))
+        return trace_block(data, len(rows), 1)

@@ -249,9 +249,14 @@ def test_deleting_a_compiled_read_trips_the_parity_rule(tmp_path):
     see test_clean_tree_static_rules_above_baseline).  The field is one
     whose compiled reads live only in simcore (no shared-helper read
     could mask the deletion)."""
-    for ms in C.DEFAULT_SPEC.scopes:
-        src = REPO / ms.path
-        dst = tmp_path / ms.path
+    needed = [ms.path for ms in C.DEFAULT_SPEC.scopes]
+    # config-class modules are parsed for field lists even when they
+    # are not analyzed scopes (e.g. telemetry.py for TraceConfig)
+    needed += [p for p in C.DEFAULT_SPEC.config_classes.values()
+               if p not in needed]
+    for rel in needed:
+        src = REPO / rel
+        dst = tmp_path / rel
         dst.parent.mkdir(parents=True, exist_ok=True)
         shutil.copy(src, dst)
     simcore = tmp_path / "src/repro/core/simcore.py"

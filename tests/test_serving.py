@@ -318,3 +318,189 @@ def test_router_round_robin_spreads(tiny_setup):
     assert router.routed == [0, 1, 2, 0, 1, 2]
     done = router.drain()
     assert len(done) == 6
+
+
+# ----------------------------------------------------------------------
+# flight recorder: the serving T=1 mirror (DESIGN.md §16)
+
+def _trace_sum_err(data):
+    """Max |signed component sum - response| over served rows."""
+    from repro.core.telemetry import COMPONENTS, DISP_SERVED, TRACE_IDX
+    served = data[..., TRACE_IDX["disposition"]] == DISP_SERVED
+    comp = sum(data[..., TRACE_IDX[c]] for c in COMPONENTS
+               if c != "hedge_s") - data[..., TRACE_IDX["hedge_s"]]
+    err = np.abs(comp - data[..., TRACE_IDX["response"]])[served]
+    return float(err.max()) if err.size else 0.0
+
+
+def test_router_trace_schema_and_sum_rule(tiny_setup):
+    """One row per routed request, simulator-identical schema, and the
+    decomposition sums to the measured response on every served row."""
+    from repro.core.telemetry import (DISP_SERVED, TRACE_FIELDS,
+                                     TRACE_IDX)
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock, slowdown=0.01)
+            for i in range(3)]
+    router = MorpheusRouter(reps, policy="round_robin")
+    rng = np.random.default_rng(20)
+    for r in _reqs(6, rng):
+        router.route(r)
+    router.drain()
+    blk = router.trace()
+    assert blk["fields"] == list(TRACE_FIELDS)
+    assert blk["sample_every"] == 1
+    d = blk["data"]
+    assert d.shape == (1, 6, len(TRACE_FIELDS))
+    assert (d[0, :, TRACE_IDX["disposition"]] == DISP_SERVED).all()
+    np.testing.assert_array_equal(d[0, :, TRACE_IDX["rep"]],
+                                  [0, 1, 2, 0, 1, 2])
+    assert np.isfinite(d[0, :, TRACE_IDX["response"]]).all()
+    assert _trace_sum_err(d) < 1e-6
+    # reactive policy: no prediction at the pick
+    assert np.isnan(d[0, :, TRACE_IDX["predicted"]]).all()
+    assert np.isfinite(d[0, :, TRACE_IDX["score"]]).all()
+
+
+def test_router_trace_perf_aware_captures_decision(tiny_setup):
+    """perf_aware rows carry the prediction and score the pick saw, and
+    the spelled-out pick matches Policy.pick bit-for-bit (routed)."""
+    from repro.core.telemetry import TRACE_IDX
+    cfg, params = tiny_setup
+    clock = SimClock()
+    fast = ServingEngine(cfg, params, node="fast", max_batch=2,
+                         max_seq=32, clock=clock, slowdown=0.0)
+    slow = ServingEngine(cfg, params, node="slow", max_batch=2,
+                         max_seq=32, clock=clock, slowdown=0.5)
+    router = MorpheusRouter([fast, slow], policy="perf_aware")
+    router.kb.put("serve", "fast", 0.0, 0.1)
+    router.kb.put("serve", "slow", 0.0, 5.0)
+    rng = np.random.default_rng(21)
+    for r in _reqs(4, rng):
+        router.route(r)
+    router.drain()
+    d = router.trace()["data"]
+    assert np.isfinite(d[0, :, TRACE_IDX["predicted"]]).all()
+    np.testing.assert_array_equal(d[0, :, TRACE_IDX["rep"]],
+                                  router.routed)
+    # the recorded score is the chosen replica's (the row minimum
+    # among routable candidates)
+    assert (d[0, :, TRACE_IDX["score"]] <= 5.0 + 1e-9).all()
+    assert _trace_sum_err(d) < 1e-6
+
+
+def test_router_trace_shed_rows(tiny_setup):
+    """Admission sheds close immediately: disposition SHED, rep -1,
+    NaN response — and the registry counters agree."""
+    from repro.core.telemetry import DISP_SERVED, DISP_SHED, TRACE_IDX
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=1,
+                          max_seq=32, clock=clock) for i in range(2)]
+    cap = CapacityConfig(autoscaler="fixed", initial_replicas=2,
+                         admission_limit_s=0.5)
+    router = MorpheusRouter(reps, policy="least_conn", capacity=cap)
+    router.pool.note_prediction(10.0)
+    rng = np.random.default_rng(22)
+    results = [router.route(r) for r in _reqs(6, rng)]
+    router.drain()
+    d = router.trace()["data"]
+    assert d.shape[1] == 6                      # shed rows are rows too
+    disp = d[0, :, TRACE_IDX["disposition"]]
+    assert (disp == DISP_SHED).sum() == results.count(-1) > 0
+    shed_rows = d[0, disp == DISP_SHED]
+    assert (shed_rows[:, TRACE_IDX["rep"]] == -1).all()
+    assert np.isnan(shed_rows[:, TRACE_IDX["response"]]).all()
+    served_rows = d[0, disp == DISP_SERVED]
+    assert np.isfinite(served_rows[:, TRACE_IDX["response"]]).all()
+    exp = router.registry.collect()
+    assert exp["router_requests_total"] == 6.0
+    assert exp["router_shed_total"] == float(results.count(-1))
+    assert exp["router_rtt_seconds_count"] == float(
+        6 - results.count(-1))
+    assert exp["router_inflight"] == 0.0        # all settled at drain
+
+
+def test_router_trace_timeout_and_retry_rows(tiny_setup):
+    """Every ATTEMPT is a row: a client timeout closes its row with
+    disposition TIMEOUT (NaN response, the client never saw one) and
+    the retry re-entering route() opens a fresh row."""
+    from repro.core.telemetry import (DISP_SERVED, DISP_TIMEOUT,
+                                     TRACE_IDX)
+    from repro.core.resilience import ResilienceConfig
+    cfg, params = tiny_setup
+    clock = SimClock()
+    reps = [ServingEngine(cfg, params, node="n0", max_batch=2,
+                          max_seq=32, clock=clock, slowdown=5.0)]
+    res = ResilienceConfig(timeout_s=0.5, max_retries=1)
+    router = MorpheusRouter(reps, policy="round_robin", resilience=res)
+    rng = np.random.default_rng(23)
+    n = 2
+    for r in _reqs(n, rng):
+        router.route(r)
+    router.drain()
+    assert len(router.timeouts) == n            # every attempt blew 0.5s
+    d = router.trace()["data"]
+    disp = d[0, :, TRACE_IDX["disposition"]]
+    # n primaries + n retries, all timed out
+    assert d.shape[1] == 2 * n
+    assert (disp == DISP_TIMEOUT).all()
+    assert np.isnan(d[0, :, TRACE_IDX["response"]]).all()
+    assert (d[0, :, TRACE_IDX["rep"]] == -1).all()
+    exp = router.registry.collect()
+    assert exp["router_retries_total"] == float(n)
+    assert exp["router_timeouts_total"] == float(n)
+    assert exp["router_inflight"] == 0.0
+    assert (disp == DISP_SERVED).sum() == 0
+
+
+def test_router_trace_hedge_effect(tiny_setup):
+    """A winning hedge shows up as hedge_s > 0 on its primary's row and
+    the sum rule still closes: qw + base - hedge_s == response."""
+    from repro.core.telemetry import DISP_SERVED, TRACE_IDX
+    cfg, params = tiny_setup
+    clock = SimClock()
+    # the hedged duplicate lands on an idle twin and wins the race
+    slow = ServingEngine(cfg, params, node="slow", max_batch=1,
+                         max_seq=32, clock=clock, slowdown=0.3)
+    twin = ServingEngine(cfg, params, node="twin", max_batch=1,
+                         max_seq=32, clock=clock, slowdown=0.0)
+    router = MorpheusRouter([slow, twin], policy="perf_aware",
+                            hedge_factor=1.0)
+    router.kb.put("serve", "slow", 0.0, 1.0)
+    router.kb.put("serve", "twin", 0.0, 1.0)
+    rng = np.random.default_rng(24)
+    for r in _reqs(3, rng):
+        router.route(r)
+    router.drain()
+    d = router.trace()["data"]
+    hs = d[0, :, TRACE_IDX["hedge_s"]]
+    if router.hedged:                           # a duplicate was issued
+        assert float(router.registry.collect()["router_hedges_total"]) \
+            == len(router.hedged)
+    assert (hs[np.isfinite(hs)] >= 0).all()
+    assert (d[0, :, TRACE_IDX["disposition"]] == DISP_SERVED).all()
+    assert _trace_sum_err(d) < 1e-6
+
+
+def test_router_registry_rides_metrics_store(tiny_setup):
+    """With a MetricsStore attached the registry scrapes into the same
+    columnar plane the predictors read (Prometheus-style export)."""
+    cfg, params = tiny_setup
+    store = make_store()
+    clock = store.clock
+    reps = [ServingEngine(cfg, params, node=f"n{i}", max_batch=2,
+                          max_seq=32, clock=clock) for i in range(2)]
+    router = MorpheusRouter(reps, policy="round_robin",
+                            metrics_store=store)
+    rng = np.random.default_rng(25)
+    for r in _reqs(4, rng):
+        router.route(r)
+    router.drain()
+    clock.advance(0.05)
+    router.registry.scrape()
+    arr, _ = store.query_window(
+        ["router_requests_total", "router_rtt_seconds_count"], 0.2,
+        fast=True)
+    np.testing.assert_array_equal(arr[:, -1], [4.0, 4.0])

@@ -1,0 +1,286 @@
+"""Flight recorder (DESIGN.md §16): trace schema, RTT decomposition,
+serial-vs-compiled trace parity, tail attribution, metrics registry."""
+import numpy as np
+import pytest
+
+from repro.core.scenarios import get_scenario, scenario_names
+from repro.core.simulator import SimConfig, _build_cluster, run_sim
+from repro.core.telemetry import (COMPONENTS, Counter, DISP_SERVED,
+                                  DISP_SHED, DISP_TIMEOUT, FlightRecorder,
+                                  Gauge, Histogram, MetricsRegistry,
+                                  PhaseTimer, TRACE_FIELDS, TRACE_IDX,
+                                  TraceConfig, compose_row,
+                                  tail_attribution, trace_block)
+
+SMALL = dict(n_trials=4, n_requests=50)
+PARITY_RTOL = 1e-5
+
+
+def _signed_sum(data):
+    """The decomposition identity's left-hand side."""
+    return sum(data[..., TRACE_IDX[c]] for c in COMPONENTS
+               if c != "hedge_s") - data[..., TRACE_IDX["hedge_s"]]
+
+
+def _sum_rule_err(data):
+    served = data[..., TRACE_IDX["disposition"]] == DISP_SERVED
+    err = np.abs(_signed_sum(data)
+                 - data[..., TRACE_IDX["response"]])[served]
+    return float(err.max()) if err.size else 0.0
+
+
+def _traced(name, k, **kw):
+    return get_scenario(name).compile(
+        seed=0, trace=TraceConfig(sample_every=k), **{**SMALL, **kw})
+
+
+# ----------------------------------------------------------------------
+# schema + recorder units
+def test_compose_row_masks_dropped_rows():
+    row = compose_row(
+        rep=np.array([2.0, 3.0]), predicted=1.0, score=0.5,
+        queue_wait=0.1, raw=1.0, base=0.8, cold_mult=2.0, gray_mult=1.5,
+        retry_s=0.0, hedge_s=0.0,
+        disposition=np.array([DISP_SERVED, DISP_SHED]),
+        response=np.array([3.1, 3.1]))
+    assert row.shape == (2, len(TRACE_FIELDS))
+    served, dropped = row[0], row[1]
+    # multiplicative-in, additive-out attribution: base + inter + cold
+    # + gray == raw * cm * gm exactly
+    assert served[TRACE_IDX["interference_s"]] == pytest.approx(0.2)
+    assert served[TRACE_IDX["cold_s"]] == pytest.approx(1.0)
+    assert served[TRACE_IDX["gray_s"]] == pytest.approx(1.0)
+    assert dropped[TRACE_IDX["rep"]] == -1.0
+    assert dropped[TRACE_IDX["disposition"]] == DISP_SHED
+    assert np.isnan(dropped[TRACE_IDX["response"]])
+    assert np.isnan(dropped[TRACE_IDX["score"]])
+
+
+def test_flight_recorder_sampling_bounds_buffer():
+    rec = FlightRecorder(n_requests=50, n_trials=3, sample_every=16)
+    assert rec.buf.shape == (4, 3, len(TRACE_FIELDS))   # ceil(50/16)
+    assert [rec.wants(j) for j in (0, 1, 16, 31, 32, 48)] == \
+        [True, False, True, False, True, True]
+    row = compose_row(rep=np.zeros(3), predicted=0.0, score=0.0,
+                      queue_wait=0.0, raw=1.0, base=1.0, cold_mult=1.0,
+                      gray_mult=1.0, retry_s=0.0, hedge_s=0.0,
+                      disposition=0.0, response=1.0)
+    rec.record(16, row)
+    rec.record(17, row * 2)                             # off-sample: no-op
+    blk = rec.block()
+    np.testing.assert_array_equal(blk["requests"], [0, 16, 32, 48])
+    assert blk["data"].shape == (3, 4, len(TRACE_FIELDS))
+    assert blk["fields"] == list(TRACE_FIELDS)
+    np.testing.assert_array_equal(blk["data"][:, 1], row)
+    assert np.isnan(blk["data"][:, 0]).all()            # never recorded
+
+
+def test_trace_block_matches_recorder_layout():
+    data = np.arange(2 * 3 * len(TRACE_FIELDS), dtype=float).reshape(
+        2, 3, len(TRACE_FIELDS))
+    blk = trace_block(data, n_requests=20, sample_every=16)
+    assert blk["data"].shape == (3, 2, len(TRACE_FIELDS))
+    np.testing.assert_array_equal(blk["data"][1, 0], data[0, 1])
+
+
+# ----------------------------------------------------------------------
+# serial semantics
+def test_untraced_run_has_no_trace_block():
+    assert "trace" not in run_sim(SimConfig(**SMALL), "least_conn")
+
+
+def test_serial_trace_full_mode_covers_every_request():
+    out = run_sim(SimConfig(trace=TraceConfig(1), **SMALL), "perf_aware")
+    blk = out["trace"]
+    assert blk["data"].shape == (4, 50, len(TRACE_FIELDS))
+    d = blk["data"]
+    assert (d[..., TRACE_IDX["disposition"]] == DISP_SERVED).all()
+    assert np.isfinite(d[..., TRACE_IDX["predicted"]]).all()
+    assert _sum_rule_err(d) < 1e-6
+
+
+def test_serial_trace_reactive_policy_predicted_is_nan():
+    out = run_sim(SimConfig(trace=TraceConfig(1), **SMALL), "least_conn")
+    d = out["trace"]["data"]
+    assert np.isnan(d[..., TRACE_IDX["predicted"]]).all()
+    assert np.isfinite(d[..., TRACE_IDX["score"]]).all()
+
+
+def test_hedged_trace_decomposition():
+    cfg = SimConfig(hedge_factor=0.7, trace=TraceConfig(1), **SMALL)
+    d = run_sim(cfg, "perf_aware")["trace"]["data"]
+    hs = d[..., TRACE_IDX["hedge_s"]]
+    assert (hs >= 0).all() and hs.max() > 0      # some hedge won
+    assert _sum_rule_err(d) < 1e-6
+
+
+def test_retry_storm_dispositions_match_metrics_split():
+    """Full tracing covers every request, so the per-row disposition
+    codes must reconcile exactly with the NaN-disposition split the
+    summary now reports (shed / client-timeout / breaker-fail-fast)."""
+    cfg = _traced("retry-storm", 1, n_requests=80)
+    out = run_sim(cfg, "perf_aware")
+    disp = out["trace"]["data"][..., TRACE_IDX["disposition"]]
+    assert int((disp == DISP_TIMEOUT).sum()) == out["n_client_timeout"]
+    assert int((disp == 3).sum()) == out["n_fail_fast"]
+    assert out["n_client_timeout"] + out["n_fail_fast"] \
+        == out["n_timeouts"]
+    assert out["n_timeouts"] > 0                 # the storm actually bites
+
+
+def test_metrics_summary_disposition_split_consistent():
+    """fail_fast is a subset of timeout; the split rates must re-sum to
+    the legacy timeout_rate on every scenario that sheds or times out."""
+    for name in ("retry-storm", "breaker-saves-retry-storm",
+                 "overload-ramp"):
+        out = run_sim(get_scenario(name).compile(seed=0, **SMALL),
+                      "least_conn")
+        np.testing.assert_allclose(
+            out["client_timeout_rate"] + out["fail_fast_rate"],
+            out["timeout_rate"], atol=1e-12, err_msg=name)
+
+
+# ----------------------------------------------------------------------
+# the acceptance gate: serial == compiled trace, every scenario, both
+# sampling modes
+@pytest.mark.parametrize("name", scenario_names())
+def test_trace_parity_per_scenario(name):
+    from repro.core import simcore
+    for k in (1, 16):
+        cfg = _traced(name, k)
+        a = run_sim(cfg, "perf_aware")["trace"]
+        b = simcore.run_compiled(_build_cluster(cfg),
+                                 "perf_aware")["trace"]
+        assert a["fields"] == b["fields"] == list(TRACE_FIELDS)
+        np.testing.assert_array_equal(a["requests"], b["requests"])
+        da, db = a["data"], b["data"]
+        assert da.shape == db.shape
+        both_nan = np.isnan(da) & np.isnan(db)
+        np.testing.assert_allclose(
+            np.where(both_nan, 0.0, da), np.where(both_nan, 0.0, db),
+            rtol=PARITY_RTOL, atol=1e-7, err_msg=f"{name}/k={k}")
+        assert _sum_rule_err(da) < 1e-6, f"{name}/k={k}/serial"
+        assert _sum_rule_err(db) < 1e-6, f"{name}/k={k}/compiled"
+
+
+@pytest.mark.parametrize("policy", ["least_conn", "round_robin",
+                                    "random", "oracle"])
+def test_trace_parity_other_policies(policy):
+    """The kernel's score column is recomputed at the pick per policy
+    (never gathered from the score matrix — see trace_commit's
+    neighbour comment in simcore); every policy branch needs its own
+    parity check, not just the perf_aware sweep above."""
+    for k in (1, 16):
+        cfg = _traced("baseline", k)
+        a = run_sim(cfg, policy)["trace"]["data"]
+        b = simcore_mod().run_compiled(_build_cluster(cfg),
+                                       policy)["trace"]["data"]
+        both_nan = np.isnan(a) & np.isnan(b)
+        np.testing.assert_allclose(
+            np.where(both_nan, 0.0, a), np.where(both_nan, 0.0, b),
+            rtol=PARITY_RTOL, atol=1e-7, err_msg=f"{policy}/k={k}")
+
+
+def simcore_mod():
+    from repro.core import simcore
+    return simcore
+
+
+def test_trace_leaves_untraced_summary_identical():
+    """The recorder must be observability, not physics: every summary
+    stat of a traced run equals the untraced run bit-for-bit."""
+    base = SimConfig(**SMALL)
+    plain = run_sim(base, "perf_aware")
+    traced = run_sim(SimConfig(trace=TraceConfig(4), **SMALL),
+                     "perf_aware")
+    for k, v in plain.items():
+        if isinstance(v, dict):                  # e.g. per_app breakdown
+            assert set(v) == set(traced[k]), k
+            for sub, arr in v.items():
+                np.testing.assert_array_equal(
+                    arr, traced[k][sub], err_msg=f"{k}[{sub}]")
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(traced[k]), err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# tail attribution
+def test_tail_attribution_shares_sum_to_one():
+    cfg = _traced("colocation-surge", 1)
+    att = tail_attribution(run_sim(cfg, "perf_aware")["trace"])
+    assert att["n_served"] > 0
+    assert set(att["dispositions"]) == {"served", "shed",
+                                        "client_timeout", "fail_fast"}
+    for key in ("p99", "p99_9"):
+        tail = att[key]
+        assert tail["n_tail"] >= 1
+        shares = sum(c["share"] for c in tail["components"].values())
+        assert shares == pytest.approx(1.0, abs=1e-6)
+        assert tail["cut_s"] <= tail["mean_response_s"]
+
+
+def test_tail_attribution_empty_trace():
+    blk = trace_block(np.full((2, 3, len(TRACE_FIELDS)), np.nan), 32, 16)
+    att = tail_attribution(blk)
+    assert att["n_served"] == 0 and att["p99"] is None
+
+
+# ----------------------------------------------------------------------
+# metrics registry
+def test_counter_monotone_and_gauge():
+    c = Counter("reqs")
+    c.inc(); c.inc(2.0)
+    assert c.export() == {"reqs": 3.0}
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge("inflight")
+    g.inc(); g.inc(); g.dec()
+    assert g.export() == {"inflight": 1.0}
+
+
+def test_histogram_buckets_and_quantile():
+    h = Histogram("rtt", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    exp = h.export()
+    assert exp["rtt_bucket_le_0.1"] == 1.0
+    assert exp["rtt_bucket_le_1"] == 3.0
+    assert exp["rtt_bucket_le_10"] == 4.0
+    assert exp["rtt_bucket_le_inf"] == 4.0
+    assert exp["rtt_count"] == 4.0
+    assert exp["rtt_sum"] == pytest.approx(6.05)
+    assert 0.1 <= h.quantile(0.5) <= 1.0
+    assert np.isnan(Histogram("empty").quantile(0.5))
+
+
+def test_registry_rides_metrics_store():
+    from repro.monitoring.metrics import MetricsStore
+    store = MetricsStore()
+    reg = MetricsRegistry(store=store)
+    c = reg.counter("requests_total")
+    h = reg.histogram("rtt_seconds", buckets=(1.0,))
+    # metric names are registered in the columnar store up front, so
+    # scrapes are pure column writes (staleness carry-forward included)
+    assert set(c.export()) | set(h.export()) <= set(store.names)
+    c.inc(5)
+    h.observe(0.5)
+    reg.scrape()
+    arr, _ = store.query_window(["requests_total", "rtt_seconds_count",
+                                 "rtt_seconds_bucket_le_1"], 0.2,
+                                fast=True)
+    np.testing.assert_array_equal(arr[:, -1], [5.0, 1.0, 1.0])
+    with pytest.raises(ValueError):
+        reg.counter("requests_total")            # duplicate name
+
+
+def test_phase_timer_accumulates():
+    pt = PhaseTimer()
+    with pt.phase("a"):
+        pass
+    with pt.phase("a"):
+        pass
+    with pt.phase("b"):
+        pass
+    s = pt.summary()
+    assert set(s) == {"a", "b"} and all(v >= 0 for v in s.values())
